@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: a scaled MS MARCO-like corpus + timing.
+
+This container is 1 CPU core — absolute times are NOT paper times; the
+benchmarks reproduce the paper's *structure* (same tables, same columns, same
+ratios under comparison) at a scaled corpus, plus derived columns where the
+paper's constants apply (bytes/embedding uses the exact formula).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_index
+from repro.data.synthetic import make_corpus, make_ood_corpus
+
+_CACHE = {}
+
+# Threshold calibration: the paper's th=0.4 / th_r=0.5 are tuned to the
+# ColBERTv2-on-MS-MARCO centroid-score distribution (2^18 centroids). The
+# synthetic corpus at 1024 centroids has a colder score distribution; our own
+# Fig.-2-left sweep (fig2_threshold.py) locates its no-recall-loss point at
+# th=0.2 — the same operating point the paper picks on its curve.
+TH, TH_R = 0.2, 0.3
+
+
+def bench_corpus(kind: str = "msmarco"):
+    """Scaled corpora: 4k docs, 48-token cap (in-domain) / longer docs (OOD,
+    the paper's LoTTE observation)."""
+    if kind in _CACHE:
+        return _CACHE[kind]
+    if kind == "msmarco":
+        c = make_corpus(7, n_docs=4096, cap=48, min_len=16, n_queries=32,
+                        n_topics=128)
+    else:
+        c = make_ood_corpus(8, n_docs=2048, n_queries=32, n_topics=128)
+    _CACHE[kind] = c
+    return c
+
+
+def bench_index(kind: str = "msmarco", m: int = 16, use_opq: bool = False):
+    key = (kind, m, use_opq)
+    if key in _CACHE:
+        return _CACHE[key]
+    c = bench_corpus(kind)
+    idx, meta = build_index(
+        jax.random.PRNGKey(0), c.doc_embs, c.doc_lens, n_centroids=1024,
+        m=m, nbits=8, plaid_b=2, kmeans_iters=4, use_opq=use_opq)
+    _CACHE[key] = (idx, meta)
+    return idx, meta
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (seconds) of a jit'd callable; blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,56 @@
+"""Paper Fig. 1 — breakdown of PLAID query latency across its four phases
+(retrieval, filtering, decompression, late interaction), for k = 10/100/1000,
+plus the same breakdown for EMVB's four phases for contrast.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineConfig, PlaidConfig
+from repro.core import engine as emvb
+from repro.core import plaid
+
+from .common import TH, TH_R, bench_corpus, bench_index, row, time_fn
+
+
+def run() -> list[str]:
+    corpus = bench_corpus("msmarco")
+    q = np.asarray(corpus.queries[0])            # single query (paper: per-q)
+    idx, _ = bench_index("msmarco", m=16)
+    rows = []
+    for k in (10, 100, 1000):
+        pcfg = PlaidConfig(k=k, n_docs=max(64, k))
+        cs, bitmap = plaid.phase_retrieval(idx, q, pcfg)
+        sel2 = plaid.phase_filtering(idx, cs, bitmap, pcfg)
+        emb = plaid.phase_decompression(idx, sel2)
+        t1 = time_fn(lambda: plaid.phase_retrieval(idx, q, pcfg))
+        t2 = time_fn(lambda: plaid.phase_filtering(idx, cs, bitmap, pcfg))
+        t3 = time_fn(lambda: plaid.phase_decompression(idx, sel2))
+        t4 = time_fn(lambda: plaid.phase_late_interaction(idx, q, emb, sel2, k))
+        for name, t in (("retrieval", t1), ("filtering", t2),
+                        ("decompression", t3), ("late_interaction", t4)):
+            rows.append(row(f"fig1,plaid,k={k},{name}", t * 1e6))
+
+        ecfg = EngineConfig(k=k, n_filter=max(512, 2 * k), n_docs=max(64, k),
+                            th=TH, th_r=TH_R)
+        cs, bits, bmap = emvb.phase1_candidates(idx, q, ecfg)
+        sel1 = emvb.phase2_prefilter(idx, bits, bmap, ecfg)
+        sel2e = emvb.phase3_centroid_interaction(idx, cs, sel1, ecfg)
+        e1 = time_fn(lambda: emvb.phase1_candidates(idx, q, ecfg))
+        e2 = time_fn(lambda: emvb.phase2_prefilter(idx, bits, bmap, ecfg))
+        e3 = time_fn(lambda: emvb.phase3_centroid_interaction(
+            idx, cs, sel1, ecfg))
+        e4 = time_fn(lambda: emvb.phase4_late_interaction(
+            idx, q, cs, sel2e, ecfg))
+        for name, t in (("candidates", e1), ("bitvector_prefilter", e2),
+                        ("centroid_interaction", e3), ("pq_maxsim", e4)):
+            rows.append(row(f"fig1,emvb,k={k},{name}", t * 1e6))
+    return rows
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Fig. 4 — (up) vectorized vs naive fast-set-membership; (down) our
+bit-vector pre-filter vs PLAID's centroid interaction, for growing candidate
+set sizes.
+
+"Naive" set membership probes each token's centroid id against n_q separate
+boolean sets (one per query term, numpy loop). "Vectorized" is the stacked
+uint32 bitvector: one gather + OR-reduce + popcount for all 32 terms at once
+(core/bitvector.py), the TPU analogue of the paper's single-word trick.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitvector import build_bitvectors, filter_score
+from repro.core.interaction import centroid_interaction
+
+from .common import TH, bench_corpus, bench_index, row, time_fn
+
+
+def run() -> list[str]:
+    rows: list[str] = []
+    corpus = bench_corpus("msmarco")
+    idx, _ = bench_index("msmarco", m=16)
+    q = jnp.asarray(corpus.queries[0])
+    cs = q @ idx.centroids.T
+    bits = build_bitvectors(cs, TH)
+    mask_np = np.asarray(idx.token_mask())
+    codes_np = np.asarray(idx.codes)
+    close_np = np.asarray(cs) > TH                        # (n_q, n_c) bool
+
+    jit_filter = jax.jit(filter_score)
+    jit_cinter = jax.jit(centroid_interaction)
+
+    for n_docs in (256, 1024, 4096):
+        codes = idx.codes[:n_docs]
+        mask = idx.token_mask()[:n_docs]
+
+        # -- up: naive (per-term set probes, numpy) vs vectorized bitvector --
+        def naive():
+            f = np.zeros(n_docs, np.int32)
+            for p in range(n_docs):
+                valid = codes_np[p][mask_np[p]]
+                for i in range(close_np.shape[0]):
+                    if close_np[i][valid].any():
+                        f[p] += 1
+            return f
+        t0 = time.perf_counter(); f_naive = naive()
+        t_naive = time.perf_counter() - t0
+        t_vec = time_fn(lambda: jit_filter(bits, codes, mask))
+        f_vec = np.asarray(jit_filter(bits, codes, mask))
+        assert (f_naive == f_vec).all(), "naive and vectorized disagree"
+        rows.append(row(f"fig4up,naive,nd={n_docs}", t_naive * 1e6))
+        rows.append(row(f"fig4up,vectorized,nd={n_docs}", t_vec * 1e6,
+                        f"x{t_naive / t_vec:.1f}"))
+
+        # -- down: our pre-filter vs PLAID centroid interaction --------------
+        t_plaid = time_fn(lambda: jit_cinter(cs.T, codes, mask))
+        rows.append(row(f"fig4dn,plaid_cinter,nd={n_docs}", t_plaid * 1e6))
+        rows.append(row(f"fig4dn,emvb_bitfilter,nd={n_docs}", t_vec * 1e6,
+                        f"x{t_plaid / t_vec:.1f}"))
+    return rows
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Roofline report — renders results/dryrun.json (written by
+``repro.launch.dryrun``) as the per-(arch x shape x mesh) three-term table
+used in EXPERIMENTS.md §Roofline.
+
+  compute    = HLO_FLOPs/chip / 197 TF/s      (TPU v5e bf16)
+  memory     = HLO_bytes/chip / 819 GB/s
+  collective = link_bytes/chip / 50 GB/s
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+
+def load(path: str = DRYRUN) -> list[dict]:
+    with open(path) as f:
+        recs = [r for r in json.load(f) if "error" not in r]
+    _refresh_model_flops(recs)
+    return recs
+
+
+def _refresh_model_flops(recs: list[dict]) -> None:
+    """Recompute the MODEL_FLOPS-derived fields from the current formulas
+    (repro.launch.modelflops) — the raw compiled terms in dryrun.json never
+    go stale, but the useful-flops accounting has been refined since some
+    cells were recorded."""
+    from repro.configs import registry
+    from repro.launch.analysis import PEAK_FLOPS
+    from repro.launch.modelflops import model_flops
+    for r in recs:
+        try:
+            mf = model_flops(registry.get(r["arch"]), r["shape"])
+        except KeyError:
+            continue
+        if mf is None or not r.get("flops_per_chip"):
+            continue
+        r["model_flops_total"] = mf
+        r["useful_flops_ratio"] = mf / (r["flops_per_chip"] * r["chips"])
+        r["roofline_fraction"] = (mf / r["chips"] / PEAK_FLOPS) / \
+            max(r["bound_s"], 1e-30)
+
+
+def table(records: list[dict]) -> list[str]:
+    hdr = ("cell", "mesh", "t_comp_ms", "t_mem_ms", "t_coll_ms", "dominant",
+           "useful_flops", "roofline_frac")
+    rows = [",".join(hdr)]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rows.append(",".join([
+            f"{r['arch']}/{r['shape']}", r["mesh"],
+            f"{r['t_compute_s'] * 1e3:.1f}", f"{r['t_memory_s'] * 1e3:.1f}",
+            f"{r['t_collective_s'] * 1e3:.1f}", r["dominant"],
+            f"{(r.get('useful_flops_ratio') or 0) * 100:.0f}%",
+            f"{(r.get('roofline_fraction') or 0) * 100:.1f}%",
+        ]))
+    return rows
+
+
+def run() -> list[str]:
+    recs = load()
+    out = table(recs)
+    n_dom = {"compute": 0, "memory": 0, "collective": 0}
+    for r in recs:
+        n_dom[r["dominant"]] += 1
+    out.append(f"summary,cells={len(recs)},compute-bound={n_dom['compute']},"
+               f"memory-bound={n_dom['memory']},"
+               f"collective-bound={n_dom['collective']}")
+    return out
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

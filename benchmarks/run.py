@@ -1,0 +1,38 @@
+"""Benchmark driver — one module per paper table/figure, plus the roofline
+report. ``PYTHONPATH=src python -m benchmarks.run [name ...]``.
+
+Emits ``name,us_per_call,derived`` CSV rows (absolute times are single-core
+CPU; the EMVB/PLAID *ratios* are the reproduction target).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig1_breakdown, fig2_threshold, fig4_membership,
+               fig5_termfilter, roofline, table1_msmarco, table2_ood)
+
+SUITES = {
+    "table1": table1_msmarco,
+    "table2": table2_ood,
+    "fig1": fig1_breakdown,
+    "fig2": fig2_threshold,
+    "fig4": fig4_membership,
+    "fig5": fig5_termfilter,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    for name in names:
+        mod = SUITES[name]
+        t0 = time.time()
+        print(f"# === {name} ({mod.__name__}) ===", flush=True)
+        for line in mod.run():
+            print(line, flush=True)
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

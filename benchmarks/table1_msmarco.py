@@ -1,0 +1,89 @@
+"""Paper Table 1 — EMVB vs PLAID on the (scaled) MS MARCO-like corpus.
+
+Columns: k, method, latency (us/query), bytes/embedding (scaled index +
+paper-constant formula), MRR@10, R@100, R@1000. Latencies are single-core CPU
+wall times of the jit'd engines — the *ratios* EMVB/PLAID reproduce the
+paper's comparison; absolute numbers are not paper numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import EngineConfig, PlaidConfig, bytes_per_embedding
+from repro.core import engine as emvb_engine
+from repro.core import plaid as plaid_engine
+from repro.core.index import IndexMeta
+from repro.data.synthetic import mrr_at_k, recall_at_k
+
+from .common import TH, TH_R, bench_corpus, bench_index, row, time_fn
+
+# paper-constant bytes/embedding (|C|=2^18 -> 4-byte centroid id, d=128)
+_PAPER_BYTES = {("emvb", 16): 20, ("emvb", 32): 36, ("plaid", 2): 36}
+
+
+def _engine_cfg(k: int) -> EngineConfig:
+    return EngineConfig(k=k, n_filter=max(512, 2 * k), n_docs=max(64, k),
+                        nprobe=4, th=TH, th_r=TH_R)
+
+
+def _plaid_cfg(k: int) -> PlaidConfig:
+    return PlaidConfig(k=k, n_docs=max(64, k), nprobe=4)
+
+
+def run() -> list[str]:
+    corpus = bench_corpus("msmarco")
+    queries = np.asarray(corpus.queries)
+    rows = []
+    for k in (10, 100, 1000):
+        ecfg, pcfg = _engine_cfg(k), _plaid_cfg(k)
+
+        # --- PLAID baseline ---------------------------------------------
+        idx16, meta = bench_index("msmarco", m=16)
+        t_p = time_fn(lambda: plaid_engine.retrieve(idx16, queries, pcfg))
+        res_p = plaid_engine.retrieve(idx16, queries, pcfg)
+        ids_p = np.asarray(res_p.doc_ids)
+        rows.append(_row(k, "plaid", t_p, meta, "plaid", 2, ids_p, corpus))
+
+        # --- EMVB m = 16 / 32 --------------------------------------------
+        for m in (16, 32):
+            idx, meta = bench_index("msmarco", m=m)
+            t_e = time_fn(lambda: emvb_engine.retrieve(idx, queries, ecfg))
+            res_e = emvb_engine.retrieve(idx, queries, ecfg)
+            ids_e = np.asarray(res_e.doc_ids)
+            rows.append(_row(k, f"emvb_m{m}", t_e, meta, "emvb", m, ids_e,
+                             corpus, speedup=t_p / t_e))
+
+        # --- beyond-paper: per-token compaction (TPU-adapted C4) ----------
+        ccfg = dataclasses.replace(ecfg, compact_cap=16)
+        idx, meta = bench_index("msmarco", m=16)
+        t_c = time_fn(lambda: emvb_engine.retrieve(idx, queries, ccfg))
+        ids_c = np.asarray(emvb_engine.retrieve(idx, queries, ccfg).doc_ids)
+        rows.append(_row(k, "emvb_m16_compact", t_c, meta, "emvb", 16, ids_c,
+                         corpus, speedup=t_p / t_c))
+    return rows
+
+
+def _row(k: int, name: str, t: float, meta: IndexMeta, method: str, m: int,
+         ids: np.ndarray, corpus, speedup: float | None = None) -> str:
+    nq = len(corpus.gt_doc)
+    mrr = mrr_at_k(ids, corpus.gt_doc, 10)
+    r100 = recall_at_k(ids, corpus.gt_doc, 100) if k >= 100 else float("nan")
+    r1000 = recall_at_k(ids, corpus.gt_doc, 1000) if k >= 1000 else float("nan")
+    scaled_bytes = bytes_per_embedding(meta, method)
+    paper_bytes = _PAPER_BYTES[(method, m)] if method == "emvb" \
+        else _PAPER_BYTES[("plaid", 2)]
+    per_q_us = t / nq * 1e6
+    extra = f"x{speedup:.2f}" if speedup else "baseline"
+    return row(f"table1,k={k},{name}", per_q_us,
+               f"bytes={scaled_bytes:.0f}(paper:{paper_bytes}),"
+               f"mrr10={mrr:.3f},r100={r100:.3f},r1000={r1000:.3f},{extra}")
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

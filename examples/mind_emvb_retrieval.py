@@ -1,0 +1,100 @@
+"""MIND x EMVB — the paper's technique on the assigned recsys architecture
+where it directly applies (DESIGN.md §5: a MIND user IS a multi-vector query
+with n_q = 4 interest capsules; candidate scoring IS late interaction).
+
+    PYTHONPATH=src python examples/mind_emvb_retrieval.py
+
+Trains a smoke MIND model in-batch, then serves retrieval over a 20k-item
+corpus two ways: exact brute-force MaxSim vs the EMVB engine (bit-vector
+prefilter with 4-bit stacked words + PQ late interaction), and reports
+recall overlap + speedup.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, build_index, engine
+from repro.models.recsys import mind
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+N_ITEMS = 20_000
+
+
+def main() -> None:
+    cfg = mind.MINDConfig(name="mind-demo", vocab_items=N_ITEMS,
+                          embed_dim=64, n_interests=4, capsule_iters=3,
+                          seq_len=32)
+    key = jax.random.PRNGKey(0)
+    params = mind.init_params(key, cfg)
+
+    def make_batch(step: int):
+        k = jax.random.PRNGKey(step)
+        k1, k2 = jax.random.split(k)
+        # popularity-skewed histories: users cluster around item neighborhoods
+        anchor = jax.random.randint(k1, (64, 1), 0, N_ITEMS - 64)
+        hist = anchor + jax.random.randint(k2, (64, cfg.seq_len), 0, 64)
+        return {"hist_items": hist,
+                "hist_valid": jnp.ones((64, cfg.seq_len), bool),
+                "target_item": (anchor[:, 0] + 32) % N_ITEMS}
+
+    print("training MIND (in-batch sampled softmax) ...")
+    tr = Trainer(lambda p, b: mind.loss_fn(p, b, cfg),
+                 opt_lib.make("adamw", lr=1e-2), make_batch,
+                 TrainerConfig(log_every=20), params)
+    out = tr.run(60)
+    print(f"  final loss {out['log'][-1]['loss']:.4f}")
+    params = tr.state.params
+
+    # ---- the item corpus as a multi-vector index (1 token per item) -------
+    items = np.asarray(params["item_emb"], np.float32)
+    items = items / np.maximum(np.linalg.norm(items, axis=-1, keepdims=True),
+                               1e-9)
+    print("indexing 20k items (EMVB: centroids + PQ m=16) ...")
+    index, _ = build_index(jax.random.PRNGKey(1), items[:, None, :],
+                           np.ones(N_ITEMS, np.int32), n_centroids=512,
+                           m=16, nbits=8, kmeans_iters=4)
+
+    # ---- user interests = the multi-vector queries -------------------------
+    batch = make_batch(999)
+    interests = mind.user_interests(params, batch["hist_items"],
+                                    batch["hist_valid"], cfg)   # (B, 4, D)
+    q = np.asarray(interests)
+
+    # exact brute force MaxSim (the baseline every ANN system is judged by)
+    score_fn = jax.jit(mind.score_candidates)
+    _ = score_fn(interests, jnp.asarray(items))
+    t0 = time.perf_counter()
+    exact = jax.block_until_ready(score_fn(interests, jnp.asarray(items)))
+    t_exact = time.perf_counter() - t0
+    exact_top = np.asarray(jax.lax.top_k(exact, 10)[1])
+
+    # EMVB engine with n_q = 4 (the interest capsules)
+    ecfg = EngineConfig(n_q=4, k=10, nprobe=32, th=0.3, th_r=None,
+                        n_filter=4096, n_docs=1024)
+    _ = engine.retrieve(index, q, ecfg)
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(engine.retrieve(index, q, ecfg))
+    t_emvb = time.perf_counter() - t0
+    emvb_top = np.asarray(res.doc_ids)
+
+    overlap = np.mean([len(set(a) & set(b)) / 10.0
+                       for a, b in zip(exact_top, emvb_top)])
+    # near-duplicate items (co-trained neighborhoods) make strict top-10
+    # overlap tie-dominated; score regret is the tie-robust quality metric
+    best10 = -np.sort(-exact, axis=1)[:, :10]
+    exact_np = np.asarray(exact)
+    regret = np.mean([exact_np[b][emvb_top[b]].mean() / best10[b].mean()
+                      for b in range(len(q))])
+    print(f"\nexact MaxSim : {t_exact / 64 * 1e3:6.2f} ms/user "
+          "(20k items fit one matmul — EMVB pays off at corpus scale;"
+          " see the emvb-msmarco dry-run cells)")
+    print(f"EMVB engine  : {t_emvb / 64 * 1e3:6.2f} ms/user")
+    print(f"top-10 overlap vs exact : {overlap * 100:.0f}%")
+    print(f"score quality (EMVB top-10 / exact top-10): {regret * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""End-to-end driver — train a ColBERT-style multi-vector encoder with the
+JMPQ option (STE product quantization *during* training, Fang et al. 2022),
+then index its embeddings with EMVB and evaluate retrieval.
+
+    PYTHONPATH=src python examples/train_colbert.py --steps 200 [--jmpq]
+
+This is the paper's whole system in one script: encoder fine-tuning ->
+PQ codebooks co-adapted with the model (--jmpq) -> index build -> EMVB
+query processing, with checkpoint/resume via --ckpt-dir.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, build_index, engine
+from repro.core.pq import train_pq
+from repro.data.synthetic import mrr_at_k
+from repro.models import colbert
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+VOCAB = 1000
+N_TOPICS = 32
+
+
+def make_batch_fn(batch: int = 16, seq: int = 24):
+    """Paired (query, positive-doc) token batches: a query is a corrupted
+    prefix of its positive document, so in-batch contrastive MaxSim learns
+    topical token embeddings."""
+    def make(step: int):
+        k = jax.random.PRNGKey(1000 + step)
+        k1, k2, k3 = jax.random.split(k, 3)
+        topic = jax.random.randint(k1, (batch, 1), 0, N_TOPICS)
+        # doc tokens concentrated in a per-topic 24-word slice of the vocab
+        d_tokens = topic * 24 + jax.random.randint(k2, (batch, seq), 0, 24)
+        corrupt = jax.random.bernoulli(k3, 0.15, (batch, seq))
+        q_tokens = jnp.where(corrupt,
+                             jax.random.randint(k3, (batch, seq), 0, VOCAB),
+                             d_tokens)[:, :12]
+        valid_d = jnp.ones((batch, seq), bool)
+        return {"q_tokens": q_tokens, "q_valid": jnp.ones((batch, 12), bool),
+                "d_tokens": d_tokens, "d_valid": valid_d}
+    return make
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--jmpq", action="store_true",
+                    help="STE-PQ during training (JMPQ reproduction)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = colbert.make_config(n_layers=2, d_model=128, n_heads=4, d_head=32,
+                              d_ff=256, vocab=VOCAB, out_dim=64)
+    key = jax.random.PRNGKey(0)
+    params = colbert.init_params(key, cfg)
+
+    pq_cb = None
+    if args.jmpq:
+        # seed codebooks from the *untrained* encoder's embeddings; the STE
+        # loss then co-adapts encoder + quantizer (the JMPQ idea)
+        probe = make_batch_fn()(0)
+        de = colbert.encode(params, probe["d_tokens"], probe["d_valid"], cfg)
+        pq_cb = train_pq(key, de.reshape(-1, de.shape[-1]), m=8, nbits=4)
+        pq_cb = pq_cb.codebooks
+
+    def loss(p, b):
+        return colbert.contrastive_loss(p, b, cfg, pq_codebooks=pq_cb)
+
+    trainer = Trainer(loss, opt_lib.make("adamw", lr=3e-3), make_batch_fn(),
+                      TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                                    log_every=25), params)
+    print(f"training {args.steps} steps (jmpq={args.jmpq}) ...")
+    t0 = time.time()
+    out = trainer.run(args.steps)
+    for m in out["log"]:
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}")
+    print(f"trained in {time.time() - t0:.0f}s")
+
+    # ---- index the corpus with the trained encoder and retrieve ----------
+    print("encoding + indexing a 512-doc corpus ...")
+    rng = np.random.default_rng(7)
+    n_docs, seq = 512, 24
+    topic = rng.integers(0, N_TOPICS, (n_docs, 1))
+    d_tokens = jnp.asarray(topic * 24 + rng.integers(0, 24, (n_docs, seq)))
+    d_valid = jnp.ones((n_docs, seq), bool)
+    de = colbert.encode(trainer.state.params, d_tokens, d_valid, cfg)
+
+    gt = rng.integers(0, n_docs, 32)
+    q_tokens = np.asarray(d_tokens)[gt][:, :12].copy()
+    corrupt = rng.random((32, 12)) < 0.15
+    q_tokens[corrupt] = rng.integers(0, VOCAB, corrupt.sum())
+    qe = colbert.encode(trainer.state.params, jnp.asarray(q_tokens),
+                        jnp.ones((32, 12), bool), cfg)
+    qe = np.asarray(qe)
+
+    index, _ = build_index(
+        jax.random.PRNGKey(1), np.asarray(de),
+        np.full(n_docs, seq, np.int32), n_centroids=256, m=8, nbits=4,
+        kmeans_iters=4)
+    ecfg = EngineConfig(n_q=12, k=10, n_filter=128, n_docs=32, th=0.2,
+                        th_r=0.3)
+    ids = np.asarray(engine.retrieve(index, qe, ecfg).doc_ids)
+    # exact MaxSim reference: isolates encoder quality from engine recall
+    sim = np.einsum("qtd,nsd->qnts", qe, np.asarray(de))
+    exact = sim.max(-1).sum(-1)
+    ids_exact = np.argsort(-exact, axis=1)[:, :10]
+    print(f"retrieval over trained embeddings: "
+          f"mrr@10={mrr_at_k(ids, gt):.3f} (EMVB) vs "
+          f"{mrr_at_k(ids_exact, gt):.3f} (exact MaxSim) — planted gt")
+
+
+if __name__ == "__main__":
+    main()

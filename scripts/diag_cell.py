@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Diagnose one dry-run cell: top collectives (trip-count weighted), top HBM
+contributors, and the raw HLO saved for inspection.
+
+  PYTHONPATH=src python scripts/diag_cell.py <arch> <shape> [multi]
+"""
+import sys                                              # noqa: E402
+from collections import defaultdict                     # noqa: E402
+
+import jax                                              # noqa: E402
+
+from repro.launch import hlo_stats                      # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.steps import build_cell, donate_argnums  # noqa: E402
+
+arch, shape = sys.argv[1], sys.argv[2]
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+mesh = make_production_mesh(multi_pod=multi)
+fn, args = build_cell(arch, shape, mesh)
+with mesh:
+    lowered = jax.jit(fn, donate_argnums=donate_argnums(arch, shape)
+                      ).lower(*args)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    print(f"peak={mem.peak_memory_in_bytes/2**30:.2f}GiB "
+          f"args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB")
+
+path = f"/tmp/hlo_{arch}_{shape}.txt"
+open(path, "w").write(hlo)
+print(f"HLO -> {path} ({len(hlo.splitlines())} lines)")
+
+stats = hlo_stats.analyze(hlo)
+print(f"flops/chip={stats['flops']:.3e} bytes/chip={stats['bytes']:.3e} "
+      f"coll/chip={stats['collective_bytes']:.3e}")
+print("\ntop collectives (link-bytes x trip count):")
+for o in stats["top_collectives"]:
+    print(f"  {o['kind']:20s} bytes={o['bytes']/2**20:10.1f}MiB "
+          f"g={o['group']:4d} weight={o['weight']:6.0f} "
+          f"link={o['link_bytes']/2**30:10.2f}GiB")
+
+# top HBM ops: reuse the parser, accumulate per (kind, type)
+comps, entry = hlo_stats.parse_module(hlo)
+w = hlo_stats._weights(comps, entry)
+fusion_bodies = set()
+for ops in comps.values():
+    for op in ops:
+        if op.kind in ("fusion", "reduce", "scatter", "sort", "map",
+                       "custom-call"):
+            for cm in hlo_stats._CALLS_RE.finditer(op.rest):
+                fusion_bodies.add(cm.group(1))
+acc = defaultdict(float)
+for name, ops in comps.items():
+    weight = w.get(name, 0.0)
+    if weight == 0.0 or name in fusion_bodies:
+        continue
+    for op in ops:
+        if op.kind in ("tuple", "get-tuple-element", "constant", "while",
+                       "bitcast"):
+            continue
+        acc[(op.kind, op.type_str[:64])] += weight * op.bytes
+print("\ntop HBM contributors (result bytes x trips):")
+for (kind, t), b in sorted(acc.items(), key=lambda kv: -kv[1])[:14]:
+    print(f"  {b/2**40:8.2f}TiB  {kind:16s} {t}")

@@ -1,0 +1,3 @@
+"""Assigned-architecture configs. ``registry.get(name)`` returns the ArchSpec."""
+from . import registry  # noqa: F401
+from .registry import get, names  # noqa: F401

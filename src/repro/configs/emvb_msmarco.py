@@ -1,0 +1,51 @@
+"""EMVB's own production retrieval config (MS MARCO scale, paper §5):
+8.8M passages, ~600M token embeddings (d=128), |C| = 2^18 centroids,
+PQ m=16/32 nbits=8, n_q=32. This is the paper's system as a dry-run arch
+("--arch emvb-msmarco"), sharded per DESIGN.md §4 (docs over all mesh axes,
+centroids/PQ replicated, two-level top-k merge)."""
+import dataclasses
+
+from repro.core.engine import EngineConfig
+from .registry import ArchSpec, ShapeCell, register
+
+
+@dataclasses.dataclass(frozen=True)
+class EMVBProdConfig:
+    name: str = "emvb-msmarco"
+    n_docs: int = 8_841_823          # MS MARCO passage count
+    doc_cap: int = 80                # padded tokens/passage (avg ~67)
+    d: int = 128
+    n_centroids: int = 1 << 18
+    m: int = 16
+    nbits: int = 8
+    list_cap: int = 4096
+    engine: EngineConfig = EngineConfig(
+        n_q=32, nprobe=4, th=0.4, th_r=0.5, n_filter=1024, n_docs=256,
+        k=100)
+    # cs_dtype="bfloat16" (paper §6 reduced precision) halves CS traffic on
+    # real TPUs; on the CPU dry-run backend bf16 is promoted to f32 and the
+    # convert copies ADD 42% bytes — measured+refuted in §Perf, left off.
+
+
+def make_config() -> EMVBProdConfig:
+    return EMVBProdConfig()
+
+
+def make_smoke_config() -> EMVBProdConfig:
+    return EMVBProdConfig(
+        name="emvb-smoke", n_docs=512, doc_cap=24, n_centroids=128, m=8,
+        nbits=4, list_cap=64,
+        engine=EngineConfig(n_q=32, nprobe=4, th=0.3, th_r=0.4, n_filter=64,
+                            n_docs=16, k=10))
+
+
+SHAPES = {
+    "serve_b32": ShapeCell("retrieve", {"query_batch": 32}),
+    "serve_b1": ShapeCell("retrieve", {"query_batch": 1}),
+}
+
+SPEC = register(ArchSpec(
+    name="emvb-msmarco", family="retrieval", make_config=make_config,
+    make_smoke_config=make_smoke_config, shapes=SHAPES, optimizer="adamw",
+    model_flops_params={"n_params": 0, "moe": False},
+    notes="the paper's own system; latency benchmarks in benchmarks/"))

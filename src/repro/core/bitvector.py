@@ -1,0 +1,78 @@
+"""EMVB contribution C1 — stacked bit-vector pre-filter (paper §4.2).
+
+The paper stores, for each query term i, the set ``close_i^th`` of centroids
+whose score exceeds ``th``, as *vertically stacked* bit vectors: one 32-bit
+word per centroid whose bit i says "centroid is close to query term i"
+(paper Fig. 3). A passage's filter score is then
+
+    F(P, q) = popcount( OR_{j in P} word[code_j] )            (paper Eq. 4)
+
+i.e. how many query terms have at least one close passage token.
+
+TPU adaptation (see DESIGN.md §2): instead of compressstore'd index lists we
+build the packed words directly as a dense (n_c,) uint32 tensor — a pure
+VPU threshold+shift+or, branchless by construction. Membership testing is a
+uint32 gather + OR-reduction + ``lax.population_count``. These functions are
+the jnp reference; ``repro.kernels.bitpack`` / ``repro.kernels.bitfilter``
+are the Pallas versions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def build_bitvectors(cs: jax.Array, th: float) -> jax.Array:
+    """Pack per-term threshold masks into stacked bit vectors.
+
+    cs : (..., n_q, n_c) centroid score matrix (n_q <= 32)
+    -> (..., n_c) uint32 ; bit i of word c == (cs[..., i, c] > th)
+    """
+    n_q = cs.shape[-2]
+    assert n_q <= 32, "stacked bitvector packs one query term per bit of uint32"
+    mask = (cs > th).astype(jnp.uint32)
+    shifts = jnp.arange(n_q, dtype=jnp.uint32)
+    # Disjoint bit fields: sum == bitwise OR.
+    return jnp.sum(mask << shifts[..., :, None], axis=-2).astype(jnp.uint32)
+
+
+def or_reduce(words: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-OR reduction along ``axis``."""
+    return jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or,
+                          (axis % words.ndim,))
+
+
+def filter_score(bits: jax.Array, codes: jax.Array,
+                 token_mask: jax.Array) -> jax.Array:
+    """Evaluate Eq. 4 for a batch of passages.
+
+    bits       : (n_c,) uint32 stacked bit vectors for ONE query
+    codes      : (n_docs, cap) int32 centroid id per token (padded)
+    token_mask : (n_docs, cap) bool — True for real tokens
+    -> (n_docs,) int32 = F(P, q)
+    """
+    words = jnp.take(bits, jnp.clip(codes, 0, bits.shape[0] - 1), axis=0)
+    words = jnp.where(token_mask, words, jnp.uint32(0))
+    ored = or_reduce(words, axis=-1)              # (n_docs,)
+    return jax.lax.population_count(ored).astype(jnp.int32)
+
+
+def filter_score_batch(bits: jax.Array, codes: jax.Array,
+                       token_mask: jax.Array) -> jax.Array:
+    """Batched over queries: bits (B, n_c) -> (B, n_docs)."""
+    return jax.vmap(filter_score, in_axes=(0, None, None))(bits, codes, token_mask)
+
+
+def masked_topk_centroids(cs: jax.Array, th: float, nprobe: int) -> jax.Array:
+    """Top-nprobe centroid ids per query term, restricted to the survivors of
+    the threshold (paper §4.1: the pre-filter 'tears down' the number of
+    evaluated elements; the TPU-native equivalent masks non-survivors to -inf
+    so top_k never ranks them above any survivor).
+
+    cs -> (..., n_q, nprobe) int32. If a term has fewer than nprobe survivors
+    the remaining slots fall back to the best non-survivors (harmless: their
+    inverted lists are unioned with higher-scoring ones).
+    """
+    masked = jnp.where(cs > th, cs, cs - 1e6)
+    _, idx = jax.lax.top_k(masked, nprobe)
+    return idx.astype(jnp.int32)

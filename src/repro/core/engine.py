@@ -1,0 +1,221 @@
+"""EMVB retrieval engine — the paper's full four-phase pipeline, jit-able.
+
+Phases (single query; batched via vmap):
+  1. centroid scoring + candidate generation  (CS matmul, masked top-nprobe,
+     IVF gather -> candidate bitmap)                              [paper §4.1]
+  2. bit-vector pre-filter F(P,q), select top-n_filter docs       [paper §4.2]
+  3. centroid interaction S̄ on survivors, select top-n_docs      [paper §4.3]
+  4. PQ late interaction w/ dynamic term filter, final top-k      [paper §4.4]
+
+Every phase has fixed shapes. ``EngineConfig`` is hashable and passed as a
+static jit argument. The same functions run single-device (benchmarks/tests)
+and under shard_map with per-shard local indices (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import bitvector, interaction
+from .index import PackedIndex
+from .pq import PQCodebooks, build_lut
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_q: int = 32            # query terms (<= 32: one uint32 bit per term)
+    nprobe: int = 4          # centroid lists unioned per query term
+    th: float = 0.4          # bit-vector threshold (paper Fig. 2: 0.4)
+    th_r: Optional[float] = 0.5   # Eq. 6 term filter; None -> Eq. 5
+    n_filter: int = 512      # docs surviving the bit-vector pre-filter
+    n_docs: int = 64         # docs entering PQ late interaction
+    k: int = 10              # final results
+    use_kernels: bool = False  # Pallas kernels (interpret on CPU) vs jnp ref
+    # 'score_all' evaluates F on every (local) doc masked by the candidate
+    # bitmap (TPU-friendly); 'compact' gathers candidates into a fixed buffer
+    # of size cand_cap first (closer to the paper's CPU loop).
+    candidate_mode: str = "score_all"
+    cand_cap: int = 4096
+    # Per-token compaction for phase 4 (DESIGN.md §2 mode (b)): tokens whose
+    # centroid is close to NO query term are compacted away before the
+    # centroid/LUT gathers, shrinking them cap -> compact_cap. Requires th_r.
+    compact_cap: Optional[int] = None
+    # Reduced-precision centroid scores (paper §6: "the centroid interaction
+    # is carried out with reduced precision"): "bfloat16" halves the CS
+    # matrix HBM traffic — the memory bound of the sharded serving plan.
+    cs_dtype: str = "float32"
+
+
+class RetrievalResult(NamedTuple):
+    scores: jax.Array   # (B, k)
+    doc_ids: jax.Array  # (B, k) int32
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 — centroid scores, bitvector, probes, candidate bitmap
+# ---------------------------------------------------------------------------
+
+def centroid_scores(q: jax.Array, centroids: jax.Array,
+                    dtype: str = "float32") -> jax.Array:
+    """q (n_q, d), centroids (n_c, d) -> CS (n_q, n_c)."""
+    if dtype == "bfloat16":
+        return (q.astype(jnp.bfloat16) @ centroids.T.astype(jnp.bfloat16))
+    return q @ centroids.T
+
+
+def candidate_bitmap(ivf: jax.Array, ivf_lens: jax.Array, probe_ids: jax.Array,
+                     n_docs: int) -> jax.Array:
+    """Union of the IVF lists of the probed centroids -> (n_docs,) bool."""
+    lists = jnp.take(ivf, probe_ids.reshape(-1), axis=0)        # (P, list_cap)
+    lens = jnp.take(ivf_lens, probe_ids.reshape(-1), axis=0)    # (P,)
+    valid = jnp.arange(ivf.shape[1])[None, :] < lens[:, None]
+    ids = jnp.where(valid, lists, n_docs)                        # sentinel
+    bitmap = jnp.zeros((n_docs,), jnp.bool_)
+    return bitmap.at[ids.reshape(-1)].set(True, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline (single query)
+# ---------------------------------------------------------------------------
+
+def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
+                  cfg: EngineConfig) -> RetrievalResult:
+    n_docs_corpus = index.codes.shape[0]
+    n_c = index.centroids.shape[0]
+
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+    else:
+        kops = None
+
+    # ---- phase 1 ----
+    cs = centroid_scores(q, index.centroids, cfg.cs_dtype)       # (n_q, n_c)
+    if kops is not None:
+        bits = kops.bitpack(cs, cfg.th)
+    else:
+        bits = bitvector.build_bitvectors(cs, cfg.th)            # (n_c,) u32
+    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
+    bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
+                              n_docs_corpus)
+
+    # ---- phase 2: bit-vector pre-filter ----
+    if cfg.candidate_mode == "compact":
+        # Fixed-size candidate buffer (ids of bitmap==True, arbitrary order).
+        _, cand_ids = jax.lax.top_k(bitmap.astype(jnp.int32), cfg.cand_cap)
+        cand_ids = cand_ids.astype(jnp.int32)
+        cand_valid = jnp.take(bitmap, cand_ids)
+        c_codes = jnp.take(index.codes, cand_ids, axis=0)
+        c_mask = jnp.take(token_mask, cand_ids, axis=0) & cand_valid[:, None]
+        if kops is not None:
+            f = kops.bitfilter(bits, c_codes, c_mask)
+        else:
+            f = bitvector.filter_score(bits, c_codes, c_mask)
+        f = jnp.where(cand_valid, f, -1)
+        _, sel1_local = jax.lax.top_k(f, cfg.n_filter)
+        sel1 = jnp.take(cand_ids, sel1_local)
+    else:
+        if kops is not None:
+            f = kops.bitfilter(bits, index.codes, token_mask)
+        else:
+            f = bitvector.filter_score(bits, index.codes, token_mask)
+        f = jnp.where(bitmap, f, -1)                             # (n_docs,)
+        _, sel1 = jax.lax.top_k(f, cfg.n_filter)
+    sel1 = sel1.astype(jnp.int32)
+
+    # ---- phase 3: centroid interaction on survivors ----
+    cs_t = cs.T                                                  # (n_c, n_q)
+    s1_codes = jnp.take(index.codes, sel1, axis=0)               # (nf, cap)
+    s1_mask = jnp.take(token_mask, sel1, axis=0)
+    if kops is not None:
+        sbar = kops.cinter(cs_t, s1_codes, s1_mask)
+    else:
+        sbar = interaction.centroid_interaction(cs_t, s1_codes, s1_mask)
+    _, sel2_local = jax.lax.top_k(sbar, cfg.n_docs)
+    sel2 = jnp.take(sel1, sel2_local)                            # (nd,)
+
+    # ---- phase 4: PQ late interaction (+ Eq. 6 term filter) ----
+    pq = index.pq
+    q_rot = q @ index.opq_rotation
+    lut = build_lut(q_rot, pq)                                   # (n_q, m, K)
+    s2_codes = jnp.take(index.codes, sel2, axis=0)
+    s2_res = jnp.take(index.res_codes, sel2, axis=0)
+    s2_mask = jnp.take(token_mask, sel2, axis=0)
+    if kops is not None:
+        scores = kops.pqscore(cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r)
+    elif cfg.compact_cap is not None and cfg.th_r is not None:
+        scores = interaction.late_interaction_pq_compact(
+            cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, cfg.compact_cap)
+    else:
+        centroid = None
+        if cfg.cs_dtype != "float32":
+            # exact f32 centroid term for the FINAL scores: gather the few
+            # selected docs' centroid vectors (small) instead of trusting
+            # the reduced-precision CS used by phases 1-3
+            cent_vecs = jnp.take(index.centroids,
+                                 jnp.clip(s2_codes, 0, n_c - 1), axis=0)
+            centroid = jnp.einsum("ntd,qd->ntq", cent_vecs, q)
+        scores = interaction.late_interaction_pq(
+            cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, centroid=centroid)
+    top_scores, top_local = jax.lax.top_k(scores, cfg.k)
+    return RetrievalResult(top_scores, jnp.take(sel2, top_local))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def retrieve(index: PackedIndex, queries: jax.Array,
+             cfg: EngineConfig) -> RetrievalResult:
+    """queries (B, n_q, d) -> top-k (scores, ids) per query."""
+    token_mask = index.token_mask()
+    return jax.vmap(lambda q: _retrieve_one(q, index, token_mask, cfg))(queries)
+
+
+# ---------------------------------------------------------------------------
+# Phase-split entry points (benchmarks: paper Fig. 1-style breakdown)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def phase1_candidates(index: PackedIndex, q: jax.Array, cfg: EngineConfig):
+    cs = centroid_scores(q, index.centroids)
+    bits = bitvector.build_bitvectors(cs, cfg.th)
+    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
+    bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
+                              index.codes.shape[0])
+    return cs, bits, bitmap
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def phase2_prefilter(index: PackedIndex, bits: jax.Array, bitmap: jax.Array,
+                     cfg: EngineConfig):
+    token_mask = index.token_mask()
+    f = bitvector.filter_score(bits, index.codes, token_mask)
+    f = jnp.where(bitmap, f, -1)
+    _, sel1 = jax.lax.top_k(f, cfg.n_filter)
+    return sel1.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
+                                sel1: jax.Array, cfg: EngineConfig):
+    token_mask = index.token_mask()
+    sbar = interaction.centroid_interaction(
+        cs.T, jnp.take(index.codes, sel1, axis=0),
+        jnp.take(token_mask, sel1, axis=0))
+    _, sel2_local = jax.lax.top_k(sbar, cfg.n_docs)
+    return jnp.take(sel1, sel2_local)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def phase4_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
+                            sel2: jax.Array, cfg: EngineConfig):
+    token_mask = index.token_mask()
+    lut = build_lut(q @ index.opq_rotation, index.pq)
+    scores = interaction.late_interaction_pq(
+        cs.T, lut,
+        jnp.take(index.codes, sel2, axis=0),
+        jnp.take(index.res_codes, sel2, axis=0),
+        jnp.take(token_mask, sel2, axis=0), cfg.th_r)
+    top_scores, top_local = jax.lax.top_k(scores, cfg.k)
+    return top_scores, jnp.take(sel2, top_local)

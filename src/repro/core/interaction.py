@@ -1,0 +1,170 @@
+"""EMVB contributions C2 (column-wise centroid interaction) and C3+C4
+(PQ late interaction with dynamic per-term filtering) — paper §4.3–4.4.
+
+All functions are fixed-shape, jit/vmap/pjit-compatible jnp references; the
+Pallas kernels in ``repro.kernels.cinter`` / ``repro.kernels.pqscore``
+implement the same math with explicit VMEM tiling.
+
+Shape conventions
+-----------------
+  n_q      query terms (32 for ColBERT, 4 for MIND)
+  n_c      number of centroids
+  cap      padded tokens per document
+  nf / nd  number of docs surviving phase-2 / phase-3 selection
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def gather_centroid_scores(cs_t: jax.Array, codes: jax.Array) -> jax.Array:
+    """Build P̃^T for a batch of docs by gathering rows of CS^T (paper §4.3).
+
+    cs_t  : (n_c, n_q)   transposed centroid-score matrix (one query)
+    codes : (docs, cap)  int32 token centroid ids
+    ->    (docs, cap, n_q)
+    """
+    return jnp.take(cs_t, jnp.clip(codes, 0, cs_t.shape[0] - 1), axis=0)
+
+
+def centroid_interaction(cs_t: jax.Array, codes: jax.Array,
+                         token_mask: jax.Array) -> jax.Array:
+    """Approximate passage score S̄ (paper Eq. 2) via column-wise max-reduce.
+
+    cs_t (n_c, n_q); codes/token_mask (docs, cap) -> (docs,)
+    """
+    pt = gather_centroid_scores(cs_t, codes)             # (docs, cap, n_q)
+    pt = jnp.where(token_mask[..., None], pt, NEG)
+    colmax = jnp.max(pt, axis=-2)                        # (docs, n_q)
+    return jnp.sum(colmax, axis=-1)
+
+
+def centroid_interaction_batch(cs_t: jax.Array, codes: jax.Array,
+                               token_mask: jax.Array) -> jax.Array:
+    """cs_t (B, n_c, n_q); codes/mask (B, docs, cap) -> (B, docs)."""
+    return jax.vmap(centroid_interaction)(cs_t, codes, token_mask)
+
+
+def maxsim(q: jax.Array, doc_emb: jax.Array, token_mask: jax.Array) -> jax.Array:
+    """Exact late interaction (paper Eq. 3) on full-precision embeddings.
+
+    q (n_q, d); doc_emb (docs, cap, d); token_mask (docs, cap) -> (docs,)
+    """
+    sim = jnp.einsum("qd,ntd->nqt", q, doc_emb)
+    sim = jnp.where(token_mask[:, None, :], sim, NEG)
+    return jnp.max(sim, axis=-1).sum(axis=-1)
+
+
+def late_interaction_pq(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+                        res_codes: jax.Array, token_mask: jax.Array,
+                        th_r: float | None,
+                        centroid: jax.Array | None = None) -> jax.Array:
+    """PQ late interaction with optional dynamic term filter (Eq. 5 / Eq. 6).
+
+    cs_t       : (n_c, n_q)       centroid scores, transposed (one query)
+    lut        : (n_q, m, K)      PQ inner-product LUT for this query
+    codes      : (docs, cap)      token centroid ids
+    res_codes  : (docs, cap, m)   PQ codes of token residuals
+    token_mask : (docs, cap)
+    th_r       : None -> Eq. 5 (score every term);
+                 float -> Eq. 6: per query term i, max over
+                 J̄_i = {j : centroid_score_ij > th_r}; fall back to Eq. 5
+                 for terms with empty J̄_i.
+    centroid   : optional precomputed exact centroid term (docs, cap, n_q) —
+                 used when cs_t is reduced-precision (cs_dtype=bf16) so the
+                 FINAL scores stay exact while phases 1-3 ride the cheap CS.
+    -> (docs,) final scores
+    """
+    if centroid is None:
+        centroid = gather_centroid_scores(cs_t, codes)            # (docs, cap, n_q)
+    # residual[d, t, i] = sum_s lut[i, s, res_codes[d, t, s]]
+    idx = res_codes.astype(jnp.int32)                              # (docs, cap, m)
+    # lut (n_q, m, K) -> gather along K with idx (docs, cap, m)
+    gathered = _lut_gather(lut, idx)                               # (docs, cap, n_q)
+    full = centroid + gathered
+    full = jnp.where(token_mask[..., None], full, NEG)
+
+    if th_r is None:
+        return jnp.max(full, axis=-2).sum(axis=-1)
+
+    keep = (centroid > th_r) & token_mask[..., None]               # (docs, cap, n_q)
+    masked = jnp.where(keep, full, NEG)
+    masked_max = jnp.max(masked, axis=-2)                          # (docs, n_q)
+    full_max = jnp.max(full, axis=-2)
+    any_keep = jnp.any(keep, axis=-2)
+    return jnp.where(any_keep, masked_max, full_max).sum(axis=-1)
+
+
+def _lut_gather(lut: jax.Array, idx: jax.Array) -> jax.Array:
+    """lut (n_q, m, K), idx (docs, cap, m) int32 -> (docs, cap, n_q).
+
+    Single gather over a transposed flat (m*K, n_q) table: each token's m
+    lookups read contiguous n_q-wide rows (1.8x over the broadcasting 5-D
+    take_along_axis form at k=1000 shapes; measured in §Perf notes)."""
+    n_q, m, k = lut.shape
+    flat = lut.reshape(n_q, m * k).T                       # (m*K, n_q)
+    # int32 before the offset add: uint8 codes would wrap at m*K > 255
+    fidx = idx.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32) * k
+    return jnp.take(flat, fidx, axis=0).sum(-2)            # (docs, cap, n_q)
+
+
+def late_interaction_pq_compact(cs_t: jax.Array, lut: jax.Array,
+                                codes: jax.Array, res_codes: jax.Array,
+                                token_mask: jax.Array, th_r: float,
+                                cap_c: int) -> jax.Array:
+    """TPU-adapted Eq. 6 (DESIGN.md §2 mode (b)): per-token compaction.
+
+    A token is *kept* when ANY query term finds its centroid close
+    (max_i CS[i, code] > th_r) — a superset of every J̄_i, computed with ONE
+    scalar gather per token from the precomputed per-centroid row max. The
+    cap_c buffer holds kept tokens first, then the best remaining tokens by
+    keymax; the expensive centroid and LUT gathers run on cap_c << cap
+    tokens. Terms whose J̄_i is empty fall back to the max over buffered
+    tokens — keymax upper-bounds every term's centroid score, so the token
+    achieving a term's true max ranks high under keymax and is (almost
+    always) buffered; the paper's own observation that q·C̄ leads the max
+    makes the residual tail of the fallback benign.
+    """
+    n_c = cs_t.shape[0]
+    row_max = jnp.max(cs_t, axis=1)                        # (n_c,)
+    keymax = jnp.take(row_max, jnp.clip(codes, 0, n_c - 1))
+    keep = (keymax > th_r) & token_mask                    # (docs, cap)
+    # rank: kept tokens first, best-centroid ordering inside each class
+    rank = jnp.where(token_mask, keep.astype(jnp.float32) * 2.0 +
+                     jax.nn.sigmoid(keymax), -1.0)
+    _, sel = jax.lax.top_k(rank, cap_c)                    # (docs, cap_c)
+    codes_c = jnp.take_along_axis(codes, sel, axis=1)
+    mask_c = jnp.take_along_axis(token_mask, sel, axis=1)  # all valid tokens
+    res_c = jnp.take_along_axis(res_codes, sel[..., None], axis=1)
+
+    centroid = gather_centroid_scores(cs_t, codes_c)       # (docs, cap_c, n_q)
+    full = centroid + _lut_gather(lut, res_c)
+    full = jnp.where(mask_c[..., None], full, NEG)
+    keep_t = (centroid > th_r) & mask_c[..., None]
+    masked_max = jnp.max(jnp.where(keep_t, full, NEG), axis=-2)
+    comp_max = jnp.max(full, axis=-2)
+    any_keep = jnp.any(keep_t, axis=-2)
+    return jnp.where(any_keep, masked_max, comp_max).sum(axis=-1)
+
+
+def scored_term_fraction(cs_t: jax.Array, codes: jax.Array,
+                         token_mask: jax.Array, th_r: float) -> jax.Array:
+    """Fraction of (term, token) residual evaluations kept by the Eq. 6 filter
+    (paper Fig. 5, right). Returns a scalar in [0, 1]."""
+    centroid = gather_centroid_scores(cs_t, codes)
+    valid = token_mask[..., None]
+    keep = (centroid > th_r) & valid
+    return jnp.sum(keep) / jnp.maximum(jnp.sum(valid * jnp.ones_like(keep)), 1)
+
+
+def token_compaction_mask(cs_t: jax.Array, codes: jax.Array,
+                          token_mask: jax.Array, th_r: float) -> jax.Array:
+    """TPU-adapted per-token filter (DESIGN.md §2): a token is skipped when NO
+    query term finds its centroid close, i.e. max_i centroid_ij <= th_r.
+    Conservative superset of the paper's per-(i,j) criterion along i.
+    -> (docs, cap) bool mask of tokens whose residuals must be scored."""
+    centroid = gather_centroid_scores(cs_t, codes)
+    return (jnp.max(centroid, axis=-1) > th_r) & token_mask

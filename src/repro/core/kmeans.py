@@ -1,0 +1,75 @@
+"""Lloyd's k-means in JAX — used for both the centroid vocabulary (|C| up to 2^18)
+and the per-subspace PQ codebooks.
+
+Distance computations are chunked over the data axis with ``lax.map`` so the
+(n, k) score matrix never fully materializes; this is the same blocking a TPU
+implementation would use to keep the working set in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(n, d) x (k, d) -> (n, k) squared L2 distances (up to a per-row const)."""
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; the ||x||^2 term is constant per
+    # row and irrelevant for the argmin, so we drop it.
+    return jnp.sum(c * c, axis=-1)[None, :] - 2.0 * (x @ c.T)
+
+
+def assign(x: jax.Array, centroids: jax.Array, *, chunk: int = 16384) -> jax.Array:
+    """Nearest-centroid assignment, chunked. Returns int32 (n,)."""
+    n = x.shape[0]
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xb = xp.reshape(-1, chunk, x.shape[1])
+
+    def one(block):
+        return jnp.argmin(_pairwise_sq_dists(block, centroids), axis=-1).astype(jnp.int32)
+
+    out = jax.lax.map(one, xb).reshape(-1)
+    return out[:n]
+
+
+def _update(x: jax.Array, assignment: jax.Array, k: int, old: jax.Array,
+            key: jax.Array) -> jax.Array:
+    sums = jax.ops.segment_sum(x, assignment, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), assignment,
+                                 num_segments=k)
+    new = sums / jnp.maximum(counts, 1.0)[:, None]
+    # Empty clusters: re-seed from random data points (keeps k live clusters,
+    # matching faiss behaviour closely enough for index building).
+    reseed = x[jax.random.randint(key, (k,), 0, x.shape[0])]
+    return jnp.where((counts > 0)[:, None], new, reseed)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "chunk"))
+def kmeans(key: jax.Array, x: jax.Array, k: int, *, iters: int = 8,
+           chunk: int = 16384) -> Tuple[jax.Array, jax.Array]:
+    """Run Lloyd's algorithm. Returns (centroids (k, d), assignment (n,))."""
+    init_key, loop_key = jax.random.split(key)
+    perm = jax.random.permutation(init_key, x.shape[0])[:k]
+    centroids0 = x[perm]
+
+    def body(carry, subkey):
+        centroids = carry
+        a = assign(x, centroids, chunk=chunk)
+        centroids = _update(x, a, k, centroids, subkey)
+        return centroids, None
+
+    centroids, _ = jax.lax.scan(body, centroids0, jax.random.split(loop_key, iters))
+    return centroids, assign(x, centroids, chunk=chunk)
+
+
+def kmeans_spherical(key: jax.Array, x: jax.Array, k: int, *, iters: int = 8,
+                     chunk: int = 16384) -> Tuple[jax.Array, jax.Array]:
+    """Spherical k-means (centroids re-normalized each step) — the variant used
+    for the centroid vocabulary, since ColBERT embeddings are L2-normalized and
+    scored by dot product."""
+    c, a = kmeans(key, x, k, iters=iters, chunk=chunk)
+    c = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-12)
+    return c, assign(x, c, chunk=chunk)

@@ -1,0 +1,152 @@
+"""Product Quantization (PQ) for residual compression — paper §4.4 (C3).
+
+The paper replaces PLAID's b-bit residual codec with PQ so that ``q_i . r`` is
+computed *without decompression* through a per-query lookup table (LUT).
+On TPU the LUT for m=16..32 subspaces × 256 codes × fp32 is 128–256 KB per
+query term set — it lives entirely in VMEM inside the fused kernel
+(``repro.kernels.pqscore``); the functions here are the reference math and the
+index-building path.
+
+Also implements:
+  * OPQ (Ge et al., 2013): alternating procrustes rotation — used for the
+    out-of-domain setting (paper Table 2, where JMPQ is unavailable).
+  * STE ("JMPQ-style") quantization for joint training inside the ColBERT
+    encoder trainer (Fang et al., 2022 optimize PQ codes during fine-tuning;
+    with the encoder in-framework, a straight-through estimator is the
+    JAX-native equivalent).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kmeans import kmeans
+
+
+class PQCodebooks(NamedTuple):
+    codebooks: jax.Array  # (m, K, dsub) fp32
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def ksub(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+
+def _split(x: jax.Array, m: int) -> jax.Array:
+    """(n, d) -> (m, n, dsub)."""
+    n, d = x.shape
+    assert d % m == 0, f"d={d} not divisible by m={m}"
+    return x.reshape(n, m, d // m).swapaxes(0, 1)
+
+
+def train_pq(key: jax.Array, x: jax.Array, m: int, *, nbits: int = 8,
+             iters: int = 8) -> PQCodebooks:
+    """Train per-subspace codebooks on residual vectors x (n, d)."""
+    ksub = 1 << nbits
+    subs = _split(x, m)  # (m, n, dsub)
+    keys = jax.random.split(key, m)
+
+    def one(args):
+        k_i, sub = args
+        c, _ = kmeans(k_i, sub, ksub, iters=iters)
+        return c
+
+    cbs = jax.lax.map(one, (keys, subs))  # (m, K, dsub)
+    return PQCodebooks(cbs)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def encode_pq(x: jax.Array, cb: PQCodebooks) -> jax.Array:
+    """(n, d) -> (n, m) uint8 codes (nearest codeword per subspace)."""
+    subs = _split(x, cb.m)  # (m, n, dsub)
+
+    def one(args):
+        sub, c = args
+        d2 = jnp.sum(c * c, -1)[None, :] - 2.0 * (sub @ c.T)
+        return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+    codes = jax.lax.map(one, (subs, cb.codebooks))  # (m, n)
+    return codes.T
+
+
+def decode_pq(codes: jax.Array, cb: PQCodebooks) -> jax.Array:
+    """(n, m) uint8 -> (n, d) reconstruction."""
+    # gather codewords: out[n, s] = codebooks[s, codes[n, s]]
+    recon = jnp.take_along_axis(
+        cb.codebooks[None],                               # (1, m, K, dsub)
+        codes.astype(jnp.int32)[:, :, None, None],        # (n, m, 1, 1)
+        axis=2,
+    )[:, :, 0, :]                                         # (n, m, dsub)
+    return recon.reshape(codes.shape[0], -1)
+
+
+def build_lut(q: jax.Array, cb: PQCodebooks) -> jax.Array:
+    """Inner-product LUT. q (..., d) -> (..., m, K) where
+    lut[..., s, c] = q[..., s*dsub:(s+1)*dsub] . codebooks[s, c]."""
+    *lead, d = q.shape
+    qs = q.reshape(*lead, cb.m, cb.dsub)
+    return jnp.einsum("...sd,skd->...sk", qs, cb.codebooks)
+
+
+def lut_score(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """Score tokens against a LUT without decompression.
+
+    lut   (..., m, K)
+    codes (n, m) uint8
+    ->    (..., n)  : sum_s lut[..., s, codes[n, s]]
+    """
+    idx = codes.astype(jnp.int32)[..., None]               # (n, m, 1)
+    # lut (..., 1, m, K) gathered at idx -> (..., n, m, 1)
+    gathered = jnp.take_along_axis(lut[..., None, :, :], idx, axis=-1)
+    return gathered[..., 0].sum(axis=-1)
+
+
+def pq_ste(x: jax.Array, cb: PQCodebooks) -> jax.Array:
+    """Straight-through PQ quantization: forward = decode(encode(x)),
+    backward = identity. The JMPQ analogue used while fine-tuning the encoder."""
+    xq = decode_pq(encode_pq(x, cb), cb)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# OPQ — optimized product quantization (parametric procrustes variant).
+# ---------------------------------------------------------------------------
+
+class OPQ(NamedTuple):
+    rotation: jax.Array  # (d, d) orthonormal
+    cb: PQCodebooks
+
+
+def train_opq(key: jax.Array, x: jax.Array, m: int, *, nbits: int = 8,
+              kmeans_iters: int = 6, opq_iters: int = 4) -> OPQ:
+    """Alternate: PQ-train on rotated data <-> procrustes update of R.
+
+    R step: min_R ||xR - x_hat||_F s.t. R orthonormal  =>  R = U V^T where
+    U S V^T = svd(x^T x_hat).
+    """
+    d = x.shape[1]
+    R = jnp.eye(d, dtype=x.dtype)
+    cb = None
+    for it in range(opq_iters):
+        key, sub = jax.random.split(key)
+        xr = x @ R
+        cb = train_pq(sub, xr, m, nbits=nbits, iters=kmeans_iters)
+        xhat = decode_pq(encode_pq(xr, cb), cb)
+        u, _, vt = jnp.linalg.svd(x.T @ xhat, full_matrices=False)
+        R = u @ vt
+    return OPQ(R, cb)
+
+
+def pq_reconstruction_mse(x: jax.Array, cb: PQCodebooks) -> jax.Array:
+    xhat = decode_pq(encode_pq(x, cb), cb)
+    return jnp.mean(jnp.sum((x - xhat) ** 2, axis=-1))

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for EMVB's four hot spots (+ jnp oracles in ref.py)."""
+from . import ops, ref  # noqa: F401

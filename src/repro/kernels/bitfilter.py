@@ -1,0 +1,60 @@
+"""Pallas kernel: bit-vector document pre-filter F(P,q) (EMVB C1b, Eq. 4).
+
+bits (n_c,) uint32, codes (n_docs, cap) int32 -> F (n_docs,) int32
+    F[p] = popcount( OR_t bits[codes[p, t]] )
+
+TPU schedule: the packed word table is tiny (n_c=2^18 -> 1 MiB) and stays
+resident in VMEM for the whole sweep; documents are tiled (BD, cap) per grid
+step. Per tile: one uint32 gather per token, a bitwise-OR reduction along the
+token axis in VREGs, then ``lax.population_count`` — this is the 30x-cheaper
+filter of paper Fig. 4, with the CPU word-at-a-time loop replaced by an
+8x128-lane sweep.
+
+Sharding contract: under the production mesh the centroid axis may be sharded
+(model axis); each shard then holds its local ``bits`` slice and local codes
+are pre-translated — the kernel itself is shard-oblivious.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BD = 256
+
+
+def _bitfilter_kernel(bits_ref, codes_ref, mask_ref, out_ref):
+    bits = bits_ref[...]                                  # (n_c,)
+    codes = codes_ref[...]                                # (BD, cap)
+    valid = mask_ref[...]                                 # (BD, cap) int8
+    idx = jnp.clip(codes, 0, bits.shape[0] - 1)
+    words = jnp.take(bits, idx, axis=0)                   # (BD, cap) u32
+    words = jnp.where(valid != 0, words, jnp.uint32(0))
+    ored = jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    out_ref[...] = jax.lax.population_count(ored).astype(jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
+              block_d: int = DEFAULT_BD, interpret: bool = True) -> jax.Array:
+    """bits (n_c,) u32; codes/token_mask (n_docs, cap) -> (n_docs,) int32."""
+    n_docs, cap = codes.shape
+    pad = (-n_docs) % block_d
+    codesp = jnp.pad(codes, ((0, pad), (0, 0)))
+    maskp = jnp.pad(token_mask.astype(jnp.int8), ((0, pad), (0, 0)))
+    ndp = n_docs + pad
+    out = pl.pallas_call(
+        _bitfilter_kernel,
+        grid=(ndp // block_d,),
+        in_specs=[
+            pl.BlockSpec((bits.shape[0],), lambda i: (0,)),      # resident
+            pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, ndp), jnp.int32),
+        interpret=interpret,
+    )(bits, codesp, maskp)
+    return out[0, :n_docs]

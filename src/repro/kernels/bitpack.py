@@ -1,0 +1,52 @@
+"""Pallas kernel: threshold + bit-pack the centroid score matrix (EMVB C1a).
+
+CS (n_q<=32, n_c) fp32  ->  bits (n_c,) uint32 with bit i = CS[i, c] > th.
+
+TPU schedule: tile the centroid axis into (n_q, BC) VMEM blocks (BC a
+multiple of 128 lanes); the pack is a VPU compare + shift + sum over the
+sublane axis — branchless by construction, the TPU analogue of the paper's
+"VecBranchless" AVX512 routine (no compressstore needed because we keep the
+*dense* word array; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BC = 512
+
+
+def _bitpack_kernel(th_ref, cs_ref, out_ref):
+    cs = cs_ref[...]                                   # (n_q, BC)
+    n_q = cs.shape[0]
+    mask = (cs > th_ref[0]).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (n_q, 1), 0)
+    # Disjoint bit positions: sum == OR. Keep the reduce in uint32.
+    out_ref[...] = jnp.sum(mask << shifts, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def bitpack(cs: jax.Array, th, *, block_c: int = DEFAULT_BC,
+            interpret: bool = True) -> jax.Array:
+    """cs (n_q, n_c) fp32, th scalar -> (n_c,) uint32."""
+    n_q, n_c = cs.shape
+    assert n_q <= 32
+    pad = (-n_c) % block_c
+    csp = jnp.pad(cs, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    ncp = n_c + pad
+    th_arr = jnp.asarray([th], jnp.float32)
+    out = pl.pallas_call(
+        _bitpack_kernel,
+        grid=(ncp // block_c,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                  # th (smem-ish)
+            pl.BlockSpec((n_q, block_c), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, ncp), jnp.uint32),
+        interpret=interpret,
+    )(th_arr, csp)
+    return out[0, :n_c]

@@ -1,0 +1,62 @@
+"""Pallas kernel: column-wise centroid interaction (EMVB C2, Eq. 2).
+
+cs_t (n_c, n_q) fp32, codes (docs, cap) int32 -> S̄ (docs,) fp32
+    S̄[p] = sum_i max_t cs_t[codes[p, t], i]
+
+TPU schedule (mirrors paper §4.3, adapted): the paper transposes CS so the
+reduction walks contiguous memory and max-reduces with AVX512 compare+blend;
+here rows of CS^T are gathered into a (BD*cap, n_q) VMEM block and the
+token-axis max is a VPU ``maximum`` accumulation (compare+select), with the
+final n_q-sum an 8x128 cross-lane reduce.
+
+VMEM contract: cs_t must fit in VMEM. At |C|=2^18, n_q=32 this is 32 MiB fp32
+— larger than a v5e core's VMEM, which is exactly why the production config
+shards the centroid axis 16-way over the model axis (local table 2 MiB); see
+DESIGN.md §4. The kernel is written against the local shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BD = 128
+NEG = -1e9
+
+
+def _cinter_kernel(cs_t_ref, codes_ref, mask_ref, out_ref):
+    cs_t = cs_t_ref[...]                                   # (n_c, n_q)
+    codes = codes_ref[...]                                 # (BD, cap)
+    valid = mask_ref[...]                                  # (BD, cap) int8
+    idx = jnp.clip(codes, 0, cs_t.shape[0] - 1)
+    pt = jnp.take(cs_t, idx, axis=0)                       # (BD, cap, n_q)
+    pt = jnp.where((valid != 0)[..., None], pt, NEG)
+    colmax = jnp.max(pt, axis=1)                           # (BD, n_q)
+    out_ref[...] = jnp.sum(colmax, axis=-1)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
+           block_d: int = DEFAULT_BD, interpret: bool = True) -> jax.Array:
+    """cs_t (n_c, n_q); codes/token_mask (docs, cap) -> (docs,) fp32."""
+    n_docs, cap = codes.shape
+    n_c, n_q = cs_t.shape
+    pad = (-n_docs) % block_d
+    codesp = jnp.pad(codes, ((0, pad), (0, 0)))
+    maskp = jnp.pad(token_mask.astype(jnp.int8), ((0, pad), (0, 0)))
+    ndp = n_docs + pad
+    out = pl.pallas_call(
+        _cinter_kernel,
+        grid=(ndp // block_d,),
+        in_specs=[
+            pl.BlockSpec((n_c, n_q), lambda i: (0, 0)),          # resident
+            pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, ndp), jnp.float32),
+        interpret=interpret,
+    )(cs_t, codesp, maskp)
+    return out[0, :n_docs]

@@ -1,0 +1,35 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware set ``repro.kernels.ops.INTERPRET = False`` (or pass through the
+engine config) to compile the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import bitpack as _bitpack
+from . import bitfilter as _bitfilter
+from . import cinter as _cinter
+from . import pqscore as _pqscore
+
+INTERPRET = True
+
+
+def bitpack(cs: jax.Array, th: float) -> jax.Array:
+    return _bitpack.bitpack(cs, th, interpret=INTERPRET)
+
+
+def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array) -> jax.Array:
+    return _bitfilter.bitfilter(bits, codes, token_mask, interpret=INTERPRET)
+
+
+def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array) -> jax.Array:
+    return _cinter.cinter(cs_t, codes, token_mask, interpret=INTERPRET)
+
+
+def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+            res_codes: jax.Array, token_mask: jax.Array,
+            th_r: float | None) -> jax.Array:
+    return _pqscore.pqscore(cs_t, lut, codes, res_codes, token_mask, th_r,
+                            interpret=INTERPRET)

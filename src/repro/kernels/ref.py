@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These delegate to the reference math in ``repro.core`` (which is itself pure
+jnp and tested end-to-end), so kernels and engine are checked against one
+single source of truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitvector as _bv
+from repro.core import interaction as _ia
+from repro.core.pq import PQCodebooks, build_lut  # noqa: F401  (test helper)
+
+
+def bitpack(cs: jax.Array, th: float) -> jax.Array:
+    """cs (n_q, n_c), th -> (n_c,) uint32."""
+    return _bv.build_bitvectors(cs, th)
+
+
+def bitfilter(bits: jax.Array, codes: jax.Array,
+              token_mask: jax.Array) -> jax.Array:
+    """bits (n_c,) u32; codes/mask (docs, cap) -> (docs,) int32."""
+    return _bv.filter_score(bits, codes, token_mask)
+
+
+def cinter(cs_t: jax.Array, codes: jax.Array,
+           token_mask: jax.Array) -> jax.Array:
+    """cs_t (n_c, n_q); codes/mask (docs, cap) -> (docs,) fp32."""
+    return _ia.centroid_interaction(cs_t, codes, token_mask)
+
+
+def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+            res_codes: jax.Array, token_mask: jax.Array,
+            th_r: float | None) -> jax.Array:
+    """Fused PQ late interaction oracle -> (docs,) fp32."""
+    return _ia.late_interaction_pq(cs_t, lut, codes, res_codes, token_mask,
+                                   th_r)

@@ -1,0 +1,131 @@
+"""Roofline analysis from compiled SPMD artifacts (no hardware needed).
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / ICI_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (computed on the
+*partitioned* per-device module). Collective bytes are parsed from the
+optimized HLO text: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we take the result shape and apply the
+standard ring-transfer factors (bytes that cross a link per device):
+
+  all-gather       ~ result * (g-1)/g          (device receives the rest)
+  all-reduce       ~ 2 * result * (g-1)/g      (reduce-scatter + all-gather)
+  reduce-scatter   ~ operand * (g-1)/g = result * (g-1)
+  all-to-all       ~ result * (g-1)/g
+  collective-permute ~ result
+
+Group size g is parsed from replica_groups (list or iota form).
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_RG_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_RG_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_RG_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_RG_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 16
+                      ) -> Tuple[float, List[Dict]]:
+    """Returns (total link bytes per device, per-op breakdown)."""
+    ops = []
+    total = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(%?)([\w-]+)", stripped)
+        if not m:
+            continue
+        opname = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or \
+                    opname == c + "-done":
+                kind = c
+                break
+        if kind is None or opname.endswith("-done"):
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        g = _group_size(stripped, default_group)
+        if kind == "all-gather":
+            link = result_bytes * (g - 1) / max(g, 1)
+        elif kind == "all-reduce":
+            link = 2.0 * result_bytes * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            link = result_bytes * (g - 1)
+        elif kind == "all-to-all":
+            link = result_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            link = float(result_bytes)
+        ops.append({"kind": kind, "bytes": result_bytes, "group": g,
+                    "link_bytes": link})
+        total += link
+    return total, ops
+
+
+def roofline(cost: dict, collective_bytes: float,
+             model_flops: float | None = None, n_chips: int = 256) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = collective_bytes / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    out = {
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": collective_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if model_flops is not None and flops > 0:
+        out["model_flops_total"] = model_flops
+        out["useful_flops_ratio"] = model_flops / (flops * n_chips)
+        # fraction of peak the step would hit if it ran at the roofline bound
+        out["roofline_fraction"] = (model_flops / n_chips / PEAK_FLOPS) / \
+            max(out["bound_s"], 1e-30)
+    return out

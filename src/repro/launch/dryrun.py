@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input-shape) cell
+on the production meshes, print memory/cost analysis, and append roofline
+terms to a JSON log.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh multi
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.json
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init) — hence the unusual module layout. Runs are
+resumable: cells already present in --out are skipped unless --force.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import registry                      # noqa: E402
+from repro.launch import analysis, hlo_stats            # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_devices  # noqa: E402
+from repro.launch.modelflops import model_flops         # noqa: E402
+from repro.launch.steps import build_cell, donate_argnums  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True
+             ) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = n_devices(mesh)
+    spec = registry.get(arch)
+    fn, args = build_cell(arch, shape, mesh)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, donate_argnums=donate_argnums(arch, shape)
+                          ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    # trip-count-aware static profile (cost_analysis counts loop bodies once)
+    stats = hlo_stats.analyze(hlo)
+    roof = analysis.roofline(
+        {"flops": stats["flops"], "bytes accessed": stats["bytes"]},
+        stats["collective_bytes"], model_flops(spec, shape), chips)
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "argument_bytes_per_chip": mem.argument_size_in_bytes,
+        "output_bytes_per_chip": mem.output_size_in_bytes,
+        "temp_bytes_per_chip": mem.temp_size_in_bytes,
+        "peak_bytes_per_chip": mem.peak_memory_in_bytes,
+        "xla_cost_flops_unscaled": float(cost.get("flops", 0.0)),
+        "n_collective_sites": stats["n_collective_sites"],
+        "collective_by_kind_gib": {
+            k: round(v / 2**30, 3)
+            for k, v in stats["collective_by_kind"].items()},
+        **roof,
+    }
+    if verbose:
+        hbm = 16 * 2**30
+        # XLA's peak_memory_in_bytes already covers live argument buffers
+        # (observed peak == args on arg-dominated cells); don't double-count
+        fit = "FITS" if rec["peak_bytes_per_chip"] < hbm else "OVER-BUDGET"
+        print(f"[{arch} x {shape} @ {rec['mesh']}] compile={t_compile:.0f}s "
+              f"peak={rec['peak_bytes_per_chip']/2**30:.2f}GiB "
+              f"args={rec['argument_bytes_per_chip']/2**30:.2f}GiB ({fit}) "
+              f"flops/chip={rec['flops_per_chip']:.3e} "
+              f"coll={stats['collective_bytes']/2**30:.2f}GiB "
+              f"dom={rec['dominant']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = registry.names() if (args.all or args.arch is None) \
+        else [args.arch]
+    for a in archs:
+        spec = registry.get(a)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        for s in shapes:
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            cells += [(a, s, mp) for mp in meshes]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for rec in json.load(f):
+                done[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+
+    results = list(done.values())
+    for arch, shape, mp in cells:
+        key = (arch, shape, "2x16x16" if mp else "16x16")
+        if key in done:
+            print(f"skip (cached): {key}")
+            continue
+        try:
+            rec = run_cell(arch, shape, mp)
+        except Exception as e:  # noqa: BLE001 — record failures, keep going
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"[{arch} x {shape}] FAILED: {rec['error']}")
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_err = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results)} cells recorded, {n_err} failures -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Trip-count-aware static analysis of optimized HLO.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which undercounts
+scan-over-layers models by ~n_layers x. This module parses the optimized HLO
+text instead and weights every op by the product of enclosing
+``known_trip_count``s (propagated through the call graph from ENTRY):
+
+  * FLOPs     : dot ops — 2 * |result| * (contraction size from the lhs
+                def-site shape); convolutions likewise if present.
+  * HBM bytes : sum of materialized result bytes + parameter reads (fusion
+                internals excluded — fusion boundaries are the
+                materialization points). An estimate, documented as such.
+  * collective link-bytes : per-op ring-transfer factors (see
+                launch/analysis.py) weighted by trip counts.
+
+This is the profile source for EXPERIMENTS.md §Roofline (no hardware here).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_IOTA_RG_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_RG_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_info(type_str: str) -> Tuple[int, List[List[int]]]:
+    """bytes and list of dim-lists for a (possibly tuple) type string."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        n = int(math.prod(dl)) if dl else 1
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(dl)
+    return total, shapes
+
+
+class Op:
+    __slots__ = ("name", "type_str", "kind", "rest", "bytes", "shapes")
+
+    def __init__(self, name, type_str, kind, rest):
+        self.name, self.type_str, self.kind, self.rest = (name, type_str,
+                                                          kind, rest)
+        self.bytes, self.shapes = _type_info(type_str)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, List[Op]], str]:
+    comps: Dict[str, List[Op]] = defaultdict(list)
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            if line.startswith("ENTRY"):
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    entry = cur
+                continue
+            m = _COMP_RE.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+            continue
+        if cur is None:
+            continue
+        m = _NAME_RE.match(line)
+        if not m:
+            continue
+        rest = line[m.end():]
+        # type: either a parenthesized tuple (may contain /*index=N*/
+        # comments) or a single token up to the first space
+        if rest.startswith("("):
+            depth, i = 0, 0
+            for i, ch in enumerate(rest):
+                depth += (ch == "(") - (ch == ")")
+                if depth == 0:
+                    break
+            type_str, tail = rest[:i + 1], rest[i + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            type_str, tail = rest[:sp], rest[sp + 1:]
+        par = tail.find("(")
+        if par < 0:
+            continue
+        kind = tail[:par].strip().lstrip("%")
+        comps[cur].append(Op(m.group(1), type_str, kind, tail[par + 1:]))
+    return comps, entry
+
+
+def _weights(comps: Dict[str, List[Op]], entry: str) -> Dict[str, float]:
+    """Execution count of each computation, propagating trip counts."""
+    w: Dict[str, float] = defaultdict(float)
+    w[entry] = 1.0
+    # topological propagation: repeatedly relax (HLO call graphs are DAGs)
+    changed = True
+    seen_edges = {}
+    for name, ops in comps.items():
+        edges = []
+        for op in ops:
+            if op.kind == "while":
+                trips = 1
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _BODY_RE.search(op.rest)
+                if bm:
+                    edges.append((bm.group(1), float(trips)))
+            elif op.kind in ("fusion", "call", "custom-call", "map",
+                             "reduce", "sort", "scatter", "conditional"):
+                for cm in _CALLS_RE.finditer(op.rest):
+                    edges.append((cm.group(1), 1.0))
+        seen_edges[name] = edges
+    for _ in range(64):
+        changed = False
+        for name, edges in seen_edges.items():
+            if w.get(name, 0) == 0:
+                continue
+            for child, mult in edges:
+                nv = w[name] * mult
+                if w.get(child, 0) < nv:
+                    w[child] = nv
+                    changed = True
+        if not changed:
+            break
+    return w
+
+
+def _dot_flops(op: Op, symtab: Dict[str, Op]) -> float:
+    _, rshapes = _type_info(op.type_str)
+    if not rshapes:
+        return 0.0
+    out_elems = math.prod(rshapes[0]) if rshapes[0] else 1
+    cm = _CDIMS_RE.search(op.rest)
+    operands = _OPERANDS_RE.findall(op.rest.split(", lhs_")[0])
+    csize = 1
+    if cm and operands:
+        lhs = symtab.get(operands[0])
+        if lhs and lhs.shapes:
+            dims = lhs.shapes[0]
+            for ci in (int(x) for x in cm.group(1).split(",") if x):
+                if ci < len(dims):
+                    csize *= dims[ci]
+    return 2.0 * out_elems * csize
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _IOTA_RG_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _LIST_RG_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _collective_link_bytes(kind: str, nbytes: int, g: int) -> float:
+    if kind.startswith("all-gather"):
+        return nbytes * (g - 1) / max(g, 1)
+    if kind.startswith("all-reduce"):
+        return 2.0 * nbytes * (g - 1) / max(g, 1)
+    if kind.startswith("reduce-scatter"):
+        return float(nbytes) * (g - 1)
+    if kind.startswith("all-to-all"):
+        return nbytes * (g - 1) / max(g, 1)
+    return float(nbytes)  # collective-permute
+
+
+def analyze(hlo: str, default_group: int = 16) -> dict:
+    comps, entry = parse_module(hlo)
+    w = _weights(comps, entry)
+
+    # computations that are fusion/reducer bodies never touch HBM themselves
+    fusion_bodies = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.kind in ("fusion", "reduce", "scatter", "sort", "map",
+                           "custom-call"):
+                for cm in _CALLS_RE.finditer(op.rest):
+                    fusion_bodies.add(cm.group(1))
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll_bytes = 0.0
+    coll_ops: List[dict] = []
+    per_kind = defaultdict(float)
+
+    for name, ops in comps.items():
+        weight = w.get(name, 0.0)
+        if weight == 0.0:
+            continue
+        in_fusion = name in fusion_bodies
+        symtab = {op.name: op for op in ops}
+        for op in ops:
+            if op.kind == "dot":
+                flops += weight * _dot_flops(op, symtab)
+            elif op.kind in ("convolution",):
+                flops += weight * 2 * op.bytes  # rough; none in our models
+            kind = op.kind
+            if any(kind == c or kind.startswith(c + "-") for c in
+                   _COLLECTIVES):
+                if kind.endswith("-done"):
+                    continue
+                g = _group_size(op.rest, default_group)
+                nbytes = op.bytes
+                if kind.endswith("-start"):
+                    nbytes = nbytes // 2  # (operand, result) tuple
+                base = kind.split("-start")[0]
+                link = _collective_link_bytes(base, nbytes, g)
+                coll_bytes += weight * link
+                per_kind[base] += weight * link
+                coll_ops.append({"kind": base, "bytes": nbytes, "group": g,
+                                 "weight": weight,
+                                 "link_bytes": weight * link})
+            # HBM traffic estimate: materialized results of non-fusion-internal
+            # computations + ENTRY parameter reads (fusion internals stay in
+            # VREGs). Parameters of while bodies are NOT re-read wholesale
+            # every iteration — the loop reads dynamic slices, whose result
+            # bytes are already counted — so only the entry's count.
+            if in_fusion:
+                continue
+            if op.kind == "parameter":
+                if name == entry:
+                    bytes_hbm += weight * op.bytes
+            elif op.kind not in ("tuple", "get-tuple-element", "constant",
+                                 "while", "bitcast"):
+                bytes_hbm += weight * op.bytes
+
+    return {
+        "flops": flops,
+        "bytes": bytes_hbm,
+        "collective_bytes": coll_bytes,
+        "collective_by_kind": dict(per_kind),
+        "n_collective_sites": len(coll_ops),
+        "top_collectives": sorted(coll_ops, key=lambda o: -o["link_bytes"])[:8],
+    }

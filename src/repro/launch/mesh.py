@@ -1,0 +1,36 @@
+"""Production mesh definition.
+
+Functions, not module-level constants, so importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Mesh geometry (TPU v5e pods of 256 chips):
+  single pod : (16, 16)        axes ("data", "model")
+  multi-pod  : (2, 16, 16)     axes ("pod", "data", "model")
+"pod" is an outer data axis (gradients cross the DCI/optical links between
+pods — this is where gradient compression pays; EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def fsdp_axes(mesh):
+    """Axis (tuple) used for FSDP sharding of params/optimizer state."""
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+def n_devices(mesh) -> int:
+    import math
+    return math.prod(mesh.devices.shape)

@@ -1,0 +1,435 @@
+"""Cell builders: (arch x shape x mesh) -> a jit-lowerable step.
+
+``build_cell`` returns (fn, args) where every leaf of ``args`` is a
+ShapeDtypeStruct carrying its NamedSharding — ``jax.jit(fn).lower(*args)``
+then produces the SPMD program for the production mesh without allocating a
+single real buffer. Used by launch/dryrun.py and benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.launch.mesh import data_axes, fsdp_axes, n_devices
+from repro.sharding.recsys_rules import recsys_state_shardings
+from repro.sharding.rules import lm_state_shardings, replicated
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import TrainState, TrainerConfig, make_train_step
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(avals: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        avals, shardings)
+
+
+def _optimizer_for(spec: registry.ArchSpec, mesh: Mesh = None):
+    if spec.optimizer == "muon":
+        # tensor-parallel Newton-Schulz: momentum keeps its param sharding
+        # (no reshard — see optimizer.muon docstring for the two refuted
+        # resharding designs), lax.map over layers bounds live grams.
+        return opt_lib.make("muon", state_dtype=jnp.bfloat16,
+                            ns_dtype=jnp.bfloat16)
+    return opt_lib.make(spec.optimizer)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_cell(spec, shape_name: str, mesh: Mesh) -> Tuple[Callable, tuple]:
+    import dataclasses
+
+    from repro.models import transformer as T
+
+    cell = spec.shapes[shape_name]
+    cfg = spec.make_config()
+    dax = data_axes(mesh)
+    fax = fsdp_axes(mesh) if spec.fsdp else None
+    # Context parallelism when head counts don't divide the model axis:
+    # left alone GSPMD shards d_head and pays a partial-sum all-reduce of
+    # every attention logits block (measured 43 TB/chip on qwen32b prefill;
+    # EXPERIMENTS.md §Perf). Seq-shard the q positions instead.
+    n_model = mesh.shape["model"]
+    if (cell.kind in ("train", "prefill") and
+            (cfg.n_heads % n_model or cfg.n_kv_heads % n_model)):
+        qg_spec = P(dax, None, "model", None, None, None)
+        kv_spec = P(dax, None, None, None, None)
+        cfg = dataclasses.replace(
+            cfg, attn_act_specs=(qg_spec, kv_spec),
+            # Megatron-SP residuals pair with context parallelism: the TP
+            # partial-sum all-reduces become reduce-scatters (§Perf iter 3)
+            residual_spec=P(dax, "model", None))
+    # MoE dispatch: the GShard grouped-einsum mode (moe_block_grouped) was
+    # hypothesized to lower to clean all-to-alls, but GSPMD's auto-backward
+    # replicates the (g,E,C,d) dispatch tensor and the collective term
+    # QUADRUPLED (§Perf cell 2, refuted iteration). The capacity-gather
+    # path with a token-sharded output constraint measures best here; the
+    # grouped mode stays available via cfg.moe_groups for real-TPU tuning.
+    if cfg.is_moe and cell.kind in ("train", "prefill"):
+        cfg = dataclasses.replace(
+            cfg, residual_spec=cfg.residual_spec or P(dax, "model", None))
+    params_avals = T.abstract_params(cfg)
+
+    if cell.kind == "train":
+        opt = _optimizer_for(spec, mesh)
+        opt_avals = jax.eval_shape(opt.init, params_avals)
+        p_sh, o_sh = lm_state_shardings(mesh, params_avals, opt_avals, fax)
+        state = TrainState(
+            _sds((), jnp.int32, mesh, P()),
+            _with_shardings(params_avals, p_sh),
+            _with_shardings(opt_avals, o_sh))
+        b, s, ga = cell.dims["batch"], cell.dims["seq"], cell.grad_accum
+        tok_spec = (P(None, dax, None) if ga > 1 else P(dax, None))
+        tok_shape = (ga, b // ga, s) if ga > 1 else (b, s)
+        batch = {"tokens": _sds(tok_shape, jnp.int32, mesh, tok_spec),
+                 "labels": _sds(tok_shape, jnp.int32, mesh, tok_spec)}
+        loss = functools.partial(T.loss_fn, cfg=cfg)
+        # FSDP gather hoisting via micro_param_layout was measured and
+        # REFUTED here: remat re-gathers weights in the backward regardless,
+        # so collective moved only -1.7% while the pinned unsharded params
+        # added 10 GiB temp (EXPERIMENTS.md §5.1). Hook left available.
+        step = make_train_step(lambda p, bt: loss(p, bt), opt,
+                               TrainerConfig(grad_accum=ga))
+        return step, (state, batch)
+
+    p_sh = lm_state_shardings(mesh, params_avals,
+                              jax.eval_shape(lambda: {}), fax)[0]
+    params = _with_shardings(params_avals, p_sh)
+
+    if cell.kind == "prefill":
+        b, s = cell.dims["batch"], cell.dims["seq"]
+        tokens = _sds((b, s), jnp.int32, mesh, P(dax, None))
+        # cache out-sharding matches the decode cells (dh over "model") so
+        # prefill -> decode handoff needs no resharding; also keeps the
+        # context-parallel k/v (replicated inside attention) from
+        # materializing a replicated 137 GB cache.
+        cache_spec = NamedSharding(mesh, P(None, dax, None, None, "model"))
+
+        def prefill_fn(p, t):
+            logits, cache = T.prefill(p, t, cfg)
+            cache = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(x, cache_spec),
+                cache)
+            return logits, cache
+        return prefill_fn, (params, tokens)
+
+    if cell.kind == "decode":
+        b, s = cell.dims["batch"], cell.dims["seq"]
+        kvh, dh, L = cfg.n_kv_heads, cfg.d_head, cfg.n_layers
+        # KV-head counts (2/8) don't divide the 16-way model axis, so the
+        # cache shards its head_dim over "model" (contraction-dim sharding ->
+        # partial sums + all-reduce; flash-decoding-style).
+        if b >= np.prod([mesh.shape[a] for a in dax]):
+            cache_spec = P(None, dax, None, None, "model")
+            tok_spec = P(dax)
+        else:  # long-context single sequence: shard the KV sequence axis
+            cache_spec = P(None, None, dax, None, "model")
+            tok_spec = P(None)
+        cache = T.KVCache(
+            _sds((L, b, s, kvh, dh), cfg.dtype, mesh, cache_spec),
+            _sds((L, b, s, kvh, dh), cfg.dtype, mesh, cache_spec))
+        token = _sds((b,), jnp.int32, mesh, tok_spec)
+        pos = _sds((), jnp.int32, mesh, P())
+        return (lambda p, c, t, ps: T.decode_step(p, c, t, ps, cfg)), \
+            (params, cache, token, pos)
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(spec, shape_name: str, mesh: Mesh) -> Tuple[Callable, tuple]:
+    from repro.models import gcn
+
+    cell = spec.shapes[shape_name]
+    cfg = spec.make_config(shape_name)
+    dax = data_axes(mesh)
+    all_ax = tuple(mesh.axis_names)
+    params_avals = jax.eval_shape(
+        lambda: gcn.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = replicated(mesh, params_avals)
+    opt = _optimizer_for(spec, mesh)
+    opt_avals = jax.eval_shape(opt.init, params_avals)
+    state = TrainState(_sds((), jnp.int32, mesh, P()),
+                       _with_shardings(params_avals, p_sh),
+                       _with_shardings(opt_avals, replicated(mesh, opt_avals)))
+
+    if cell.kind == "train":
+        n, e, f = (cell.dims["n_nodes"], cell.dims["n_edges"],
+                   cell.dims["d_feat"])
+        # pad the edge list to a mesh multiple (masked edges are inert)
+        e = _round_up(e, n_devices(mesh))
+        batch = {
+            "feats": _sds((n, f), jnp.float32, mesh, P(None, None)),
+            "edges": _sds((2, e), jnp.int32, mesh, P(None, all_ax)),
+            "edge_mask": _sds((e,), jnp.bool_, mesh, P(all_ax)),
+            "labels": _sds((n,), jnp.int32, mesh, P(None)),
+        }
+        loss = functools.partial(gcn.loss_fn, cfg=cfg)
+        step = make_train_step(lambda p, b: loss(p, b), opt, TrainerConfig())
+        return step, (state, batch)
+
+    if cell.kind == "train_sampled":
+        bn = cell.dims["batch_nodes"]
+        f0, f1 = cell.dims["fanout0"], cell.dims["fanout1"]
+        f = cell.dims["d_feat"]
+        n1, n2 = bn * f0, bn * f0 * f1
+        batch = {
+            "feats0": _sds((bn, f), jnp.float32, mesh, P(dax, None)),
+            "feats1": _sds((n1, f), jnp.float32, mesh, P(dax, None)),
+            "feats2": _sds((n2, f), jnp.float32, mesh, P(dax, None)),
+            "edges0": _sds((2, n1), jnp.int32, mesh, P(None, dax)),
+            "edge_mask0": _sds((n1,), jnp.bool_, mesh, P(dax)),
+            "edges1": _sds((2, n2), jnp.int32, mesh, P(None, dax)),
+            "edge_mask1": _sds((n2,), jnp.bool_, mesh, P(dax)),
+            "labels": _sds((bn,), jnp.int32, mesh, P(dax)),
+        }
+        loss = functools.partial(gcn.loss_fn_sampled, cfg=cfg)
+        step = make_train_step(lambda p, b: loss(p, b), opt, TrainerConfig())
+        return step, (state, batch)
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(arch: str, b: int, mesh: Mesh, dims: dict, cfg) -> dict:
+    # batch shards over ALL axes: recsys dense towers have no model-parallel
+    # dim, so leaving "model" out replicates their compute 16x (the 6%
+    # useful-flops finding in §Roofline; fixed here — §Perf beyond-3-cells)
+    dax = tuple(mesh.axis_names)
+    ndata = int(np.prod([mesh.shape[a] for a in dax]))
+    if b % ndata != 0:
+        dax = data_axes(mesh)   # fall back to data-only sharding
+        ndata = int(np.prod([mesh.shape[a] for a in dax]))
+    if b % ndata != 0:          # e.g. batch=1 retrieval: replicate the batch
+        dax = None
+    if arch in ("dlrm-mlperf", "dcn-v2"):
+        return {
+            "dense": _sds((b, cfg.n_dense), jnp.float32, mesh, P(dax, None)),
+            "sparse_idx": _sds((b, cfg.n_sparse, cfg.nnz), jnp.int32, mesh,
+                               P(dax, None, None)),
+            "sparse_valid": _sds((b, cfg.n_sparse, cfg.nnz), jnp.bool_, mesh,
+                                 P(dax, None, None)),
+            "labels": _sds((b,), jnp.int32, mesh, P(dax)),
+        }
+    if arch == "dien":
+        L = cfg.seq_len
+        return {
+            "hist_items": _sds((b, L), jnp.int32, mesh, P(dax, None)),
+            "hist_cats": _sds((b, L), jnp.int32, mesh, P(dax, None)),
+            "hist_valid": _sds((b, L), jnp.bool_, mesh, P(dax, None)),
+            "target_item": _sds((b,), jnp.int32, mesh, P(dax)),
+            "target_cat": _sds((b,), jnp.int32, mesh, P(dax)),
+            "labels": _sds((b,), jnp.int32, mesh, P(dax)),
+        }
+    if arch == "mind":
+        L = cfg.seq_len
+        return {
+            "hist_items": _sds((b, L), jnp.int32, mesh, P(dax, None)),
+            "hist_valid": _sds((b, L), jnp.bool_, mesh, P(dax, None)),
+            "target_item": _sds((b,), jnp.int32, mesh, P(dax)),
+        }
+    raise ValueError(arch)
+
+
+def _recsys_model(arch: str):
+    if arch == "dlrm-mlperf":
+        from repro.models.recsys import dlrm as M
+    elif arch == "dcn-v2":
+        from repro.models.recsys import dcn as M
+    elif arch == "dien":
+        from repro.models.recsys import dien as M
+    elif arch == "mind":
+        from repro.models.recsys import mind as M
+    else:
+        raise ValueError(arch)
+    return M
+
+
+def _pad_recsys_cfg(cfg, mesh: Mesh):
+    """Row-shard divisibility: pad big tables to a multiple of the row-shard
+    factor (standard pad-to-128-style practice)."""
+    import dataclasses
+    mult = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+    kw = {}
+    if hasattr(cfg, "vocab_sizes"):
+        kw["vocab_sizes"] = tuple(
+            _round_up(v, mult) if v >= 100_000 else v
+            for v in cfg.vocab_sizes)
+    if hasattr(cfg, "vocab_items") and cfg.vocab_items >= 100_000:
+        kw["vocab_items"] = _round_up(cfg.vocab_items, mult)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _recsys_cell(spec, shape_name: str, mesh: Mesh) -> Tuple[Callable, tuple]:
+    cell = spec.shapes[shape_name]
+    cfg = _pad_recsys_cfg(spec.make_config(), mesh)
+    M = _recsys_model(spec.name)
+    dax = data_axes(mesh)
+    params_avals = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+    if cell.kind == "train":
+        opt = _optimizer_for(spec, mesh)
+        opt_avals = jax.eval_shape(opt.init, params_avals)
+        p_sh, o_sh = recsys_state_shardings(mesh, params_avals, opt_avals)
+        state = TrainState(_sds((), jnp.int32, mesh, P()),
+                           _with_shardings(params_avals, p_sh),
+                           _with_shardings(opt_avals, o_sh))
+        batch = _recsys_batch(spec.name, cell.dims["batch"], mesh, cell.dims,
+                              cfg)
+        loss = functools.partial(M.loss_fn, cfg=cfg)
+        step = make_train_step(lambda p, b: loss(p, b), opt, TrainerConfig())
+        return step, (state, batch)
+
+    p_sh, _ = recsys_state_shardings(mesh, params_avals, {})
+    params = _with_shardings(params_avals, p_sh)
+
+    if cell.kind == "serve":
+        batch = _recsys_batch(spec.name, cell.dims["batch"], mesh, cell.dims,
+                              cfg)
+        batch.pop("labels", None)
+        return (lambda p, b: M.forward(p, b, cfg)), (params, batch)
+
+    if cell.kind == "retrieval":
+        # pad the candidate set to a mesh multiple (1M % 256 != 0 would
+        # otherwise fall back to data-only sharding and replicate the
+        # ranking compute 16x over "model")
+        ncand = _round_up(cell.dims["n_candidates"], n_devices(mesh))
+        if spec.name == "mind":
+            # multi-interest MaxSim over 1M candidates + top-k (EMVB regime)
+            def step(p, b):
+                caps = M.user_interests(p, b["hist_items"], b["hist_valid"],
+                                        cfg)
+                scores = M.score_candidates(caps, p["item_emb"][:ncand])
+                return jax.lax.top_k(scores, 100)
+            batch = _recsys_batch("mind", cell.dims["batch"], mesh, cell.dims,
+                                  cfg)
+            batch.pop("target_item")
+            return step, (params, batch)
+        # ranking models: score `n_candidates` items for one user
+        batch = _recsys_batch(spec.name, ncand, mesh, cell.dims, cfg)
+        batch.pop("labels", None)
+
+        def step(p, b):
+            return jax.lax.top_k(M.forward(p, b, cfg), 100)
+        return step, (params, batch)
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval family (the paper's own system at MS MARCO production scale)
+# ---------------------------------------------------------------------------
+
+def _retrieval_cell(spec, shape_name: str, mesh: Mesh, plan: str = "shardmap"
+                    ) -> Tuple[Callable, tuple]:
+    from repro.core.engine import retrieve
+    from repro.core.index import PackedIndex
+    from repro.launch.serve import make_shardmap_retriever
+
+    cell = spec.shapes[shape_name]
+    cfg = spec.make_config()
+    all_ax = tuple(mesh.axis_names)
+    ndev = n_devices(mesh)
+    nd = _round_up(cfg.n_docs, ndev)              # doc padding (len-0 docs)
+    cap, d, nc, m = cfg.doc_cap, cfg.d, cfg.n_centroids, cfg.m
+    ksub = 1 << cfg.nbits
+    qb = cell.dims["query_batch"]
+    ecfg = cfg.engine
+
+    if plan == "gspmd":
+        # baseline plan (§Perf cell 3): global arrays, GSPMD collectives —
+        # the IVF row gathers / bitmap scatters cross doc shards
+        index = PackedIndex(
+            centroids=_sds((nc, d), jnp.float32, mesh, P(None, None)),
+            codes=_sds((nd, cap), jnp.int32, mesh, P(all_ax, None)),
+            doc_lens=_sds((nd,), jnp.int32, mesh, P(all_ax)),
+            res_codes=_sds((nd, cap, m), jnp.uint8, mesh,
+                           P(all_ax, None, None)),
+            pq_codebooks=_sds((m, ksub, d // m), jnp.float32, mesh,
+                              P(None, None, None)),
+            ivf=_sds((nc, cfg.list_cap), jnp.int32, mesh, P(all_ax, None)),
+            ivf_lens=_sds((nc,), jnp.int32, mesh, P(all_ax)),
+            plaid_res=_sds((1, 1, 1), jnp.uint8, mesh, P(None, None, None)),
+            plaid_cutoffs=_sds((3,), jnp.float32, mesh, P(None)),
+            plaid_weights=_sds((4,), jnp.float32, mesh, P(None)),
+            opq_rotation=_sds((d, d), jnp.float32, mesh, P(None, None)),
+        )
+        queries = _sds((qb, ecfg.n_q, d), jnp.float32, mesh,
+                       P(None, None, None))
+        return (lambda idx, q: retrieve(idx, q, ecfg)), (index, queries)
+
+    # production plan: each device owns a doc shard + local IVF, runs the
+    # whole 4-phase pipeline locally, one small all-gather merges top-k
+    # (two-level top-k; launch/serve.py). Collective = O(B*k), not O(corpus).
+    per = nd // ndev
+    shard_spec = P(all_ax)
+
+    def leaf(shape, dtype):
+        return _sds((ndev, *shape), dtype, mesh,
+                    P(*shard_spec, *([None] * len(shape))))
+    index = PackedIndex(
+        centroids=leaf((nc, d), jnp.float32),
+        codes=leaf((per, cap), jnp.int32),
+        doc_lens=leaf((per,), jnp.int32),
+        res_codes=leaf((per, cap, m), jnp.uint8),
+        pq_codebooks=leaf((m, ksub, d // m), jnp.float32),
+        ivf=leaf((nc, cfg.list_cap), jnp.int32),
+        ivf_lens=leaf((nc,), jnp.int32),
+        plaid_res=leaf((1, 1, 1), jnp.uint8),
+        plaid_cutoffs=leaf((3,), jnp.float32),
+        plaid_weights=leaf((4,), jnp.float32),
+        opq_rotation=leaf((d, d), jnp.float32),
+    )
+    queries = _sds((qb, ecfg.n_q, d), jnp.float32, mesh, P(None, None, None))
+    step = make_shardmap_retriever(mesh, ecfg)
+    return step, (index, queries)
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh
+               ) -> Tuple[Callable, tuple]:
+    spec = registry.get(arch)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape_name, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape_name, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape_name, mesh)
+    if spec.family == "retrieval":
+        return _retrieval_cell(spec, shape_name, mesh)
+    raise ValueError(spec.family)
+
+
+def donate_argnums(arch: str, shape_name: str) -> tuple:
+    """Buffer donation: train steps alias state in->out; decode aliases the
+    KV cache. Without this the dry-run double-counts the largest buffers."""
+    kind = registry.get(arch).shapes[shape_name].kind
+    if kind in ("train", "train_sampled"):
+        return (0,)
+    if kind == "decode":
+        return (1,)
+    return ()

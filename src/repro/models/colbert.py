@@ -1,0 +1,75 @@
+"""ColBERT-style multi-vector encoder — the model side of the paper's system
+(ColBERTv2 produces the embeddings EMVB indexes; paper §5).
+
+A bidirectional transformer over token ids, projected to ``out_proj`` dims and
+L2-normalized: one vector per token. Trained with an in-batch contrastive
+MaxSim loss; optional STE product quantization of residuals *during* training
+reproduces JMPQ ("joint optimization of PQ with the fine-tuning", Fang et al.
+2022) inside this framework.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ModelConfig, Params, rms_norm
+from .transformer import forward_hidden, init_params as _init_lm
+
+
+def make_config(*, n_layers=4, d_model=256, n_heads=4, d_head=64, d_ff=512,
+                vocab=30522, out_dim=128, dtype=jnp.float32) -> ModelConfig:
+    return ModelConfig(name="colbert", n_layers=n_layers, d_model=d_model,
+                       n_heads=n_heads, n_kv_heads=n_heads, d_head=d_head,
+                       d_ff=d_ff, vocab=vocab, causal=False, out_proj=out_dim,
+                       dtype=dtype)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    return _init_lm(key, cfg)
+
+
+def encode(params: Params, tokens: jax.Array, valid: jax.Array,
+           cfg: ModelConfig) -> jax.Array:
+    """tokens/valid (B, S) -> per-token embeddings (B, S, out_dim), zeroed at
+    padding, L2-normalized elsewhere."""
+    # bidirectional attention restricted to valid tokens
+    attn_mask = (valid[:, None, :] & valid[:, :, None])[:, None, None, :, :]
+    h, _ = forward_hidden(params, tokens, cfg, attn_mask=attn_mask,
+                          remat=False)
+    e = h @ params["proj"]
+    e = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-9)
+    return jnp.where(valid[..., None], e, 0.0)
+
+
+def maxsim_scores(qe: jax.Array, qv: jax.Array, de: jax.Array,
+                  dv: jax.Array) -> jax.Array:
+    """In-batch late-interaction score matrix.
+
+    qe (B, Sq, d) queries, de (B, Sd, d) docs -> (B, B) MaxSim scores."""
+    sim = jnp.einsum("iqd,jtd->ijqt", qe, de)
+    sim = jnp.where(dv[None, :, None, :], sim, -1e9)
+    best = sim.max(axis=-1)                          # (B, B, Sq)
+    best = jnp.where(qv[:, None, :], best, 0.0)
+    return best.sum(axis=-1)
+
+
+def contrastive_loss(params: Params, batch: dict, cfg: ModelConfig,
+                     pq_codebooks: Optional[jax.Array] = None) -> jax.Array:
+    """In-batch softmax over MaxSim scores; diagonal = positives.
+
+    With ``pq_codebooks`` (m, K, dsub): JMPQ-style — document embeddings are
+    STE-quantized (centroid-free variant: direct PQ of the token embedding),
+    so the encoder co-adapts with the quantizer.
+    """
+    qe = encode(params, batch["q_tokens"], batch["q_valid"], cfg)
+    de = encode(params, batch["d_tokens"], batch["d_valid"], cfg)
+    if pq_codebooks is not None:
+        from repro.core.pq import PQCodebooks, pq_ste
+        b, s, d = de.shape
+        de = pq_ste(de.reshape(-1, d), PQCodebooks(pq_codebooks)).reshape(b, s, d)
+    scores = maxsim_scores(qe, batch["q_valid"], de, batch["d_valid"])
+    labels = jnp.arange(scores.shape[0])
+    logp = jax.nn.log_softmax(scores.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

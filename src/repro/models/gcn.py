@@ -1,0 +1,139 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) via edge-index message passing.
+
+JAX has no CSR SpMM — message passing is built from gather + segment_sum over
+an edge list (this IS the system, per the assignment): for symmetric
+normalization Ã = D^-1/2 (A + I) D^-1/2,
+
+    h' = Ã h W  ==  segment_sum( (deg_s deg_d)^-1/2 * h[src], dst ) W
+
+Two execution modes:
+  * full-graph (cora / ogbn-products): one edge list, optionally sharded
+    across the mesh (partial segment_sum per shard + all-reduce under GSPMD);
+  * sampled mini-batch (reddit-scale `minibatch_lg`): layered fanout
+    subgraphs from ``sampler.py``, aggregated layer by layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn"
+    n_layers: int = 2
+    d_feat: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    aggregator: str = "mean"   # 'mean' (sym-normalized) per the cora config
+    dtype: Any = jnp.float32
+
+
+def init_params(key: jax.Array, cfg: GCNConfig) -> Params:
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    return {
+        f"layer{i}": {
+            "w": (jax.random.normal(keys[i], (dims[i], dims[i + 1])) *
+                  (1.0 / jnp.sqrt(dims[i]))).astype(cfg.dtype),
+            "b": jnp.zeros((dims[i + 1],), cfg.dtype),
+        }
+        for i in range(cfg.n_layers)
+    }
+
+
+def _degrees(edges: jax.Array, n_nodes: int, edge_mask: jax.Array) -> jax.Array:
+    ones = edge_mask.astype(jnp.float32)
+    deg = jax.ops.segment_sum(ones, edges[1], num_segments=n_nodes)
+    return deg + 1.0  # + self loop
+
+
+def propagate(x: jax.Array, edges: jax.Array, edge_mask: jax.Array,
+              n_nodes: int) -> jax.Array:
+    """One sym-normalized propagation Ã x. edges (2, E) [src, dst] int32."""
+    deg = _degrees(edges, n_nodes, edge_mask)
+    inv_sqrt = jax.lax.rsqrt(deg)
+    src, dst = edges[0], edges[1]
+    coef = (jnp.take(inv_sqrt, src) * jnp.take(inv_sqrt, dst) *
+            edge_mask.astype(jnp.float32))
+    msg = jnp.take(x, src, axis=0) * coef[:, None]
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    return agg + x * (inv_sqrt * inv_sqrt)[:, None]  # self loop
+
+
+def forward(params: Params, feats: jax.Array, edges: jax.Array,
+            edge_mask: jax.Array, cfg: GCNConfig) -> jax.Array:
+    """feats (N, F) -> logits (N, n_classes)."""
+    n = feats.shape[0]
+    x = feats.astype(cfg.dtype)
+    for i in range(cfg.n_layers):
+        x = propagate(x, edges, edge_mask, n)
+        lp = params[f"layer{i}"]
+        x = x @ lp["w"] + lp["b"]
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params: Params, batch: dict, cfg: GCNConfig) -> jax.Array:
+    """batch: feats (N,F), edges (2,E), edge_mask (E,), labels (N,) int32
+    (-1 = unlabeled)."""
+    logits = forward(params, batch["feats"], batch["edges"],
+                     batch["edge_mask"], cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[:, None],
+                               axis=-1)[:, 0]
+    return jnp.where(valid, nll, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# sampled mini-batch forward (GraphSAGE-style layered blocks)
+# ---------------------------------------------------------------------------
+
+def forward_sampled(params: Params, blocks: List[dict], seed_feats: jax.Array,
+                    layer_feats: List[jax.Array], cfg: GCNConfig) -> jax.Array:
+    """blocks[i]: {'edges': (2, Ei) int32 — src indexes layer i+1 nodes, dst
+    indexes layer i nodes; 'edge_mask': (Ei,)}; layer_feats[i] = features of
+    layer-i nodes ((N_i, F)); layer 0 = seed nodes. Aggregation runs from the
+    outermost layer inward."""
+    xs = [seed_feats] + layer_feats  # xs[i] = features at hop i
+    h = [x.astype(cfg.dtype) for x in xs]
+    for li in range(cfg.n_layers):
+        # layer li produces representations for hops 0..len(h)-2, each
+        # aggregating from one hop further out; the hop list shrinks by one.
+        new_h = []
+        for hop in range(len(h) - 1):
+            edges = blocks[hop]["edges"]
+            emask = blocks[hop]["edge_mask"]
+            n_dst = h[hop].shape[0]
+            deg = jax.ops.segment_sum(emask.astype(jnp.float32), edges[1],
+                                      num_segments=n_dst) + 1.0
+            msg = jnp.take(h[hop + 1], edges[0], axis=0) * \
+                emask.astype(cfg.dtype)[:, None]
+            agg = jax.ops.segment_sum(msg, edges[1], num_segments=n_dst)
+            mixed = (agg + h[hop]) / deg[:, None]
+            lp = params[f"layer{li}"]
+            out = mixed @ lp["w"] + lp["b"]
+            if li < cfg.n_layers - 1:
+                out = jax.nn.relu(out)
+            new_h.append(out)
+        h = new_h
+    return h[0]
+
+
+def loss_fn_sampled(params: Params, batch: dict, cfg: GCNConfig) -> jax.Array:
+    blocks = [{"edges": batch[f"edges{i}"], "edge_mask": batch[f"edge_mask{i}"]}
+              for i in range(cfg.n_layers)]
+    layer_feats = [batch[f"feats{i + 1}"] for i in range(cfg.n_layers)]
+    logits = forward_sampled(params, blocks, batch["feats0"], layer_feats,
+                             cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return nll.mean()

@@ -1,0 +1,293 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (optional QKV bias),
+SwiGLU MLP. Parameters are plain pytrees (nested dicts) so sharding rules can
+be assigned by path patterns (repro.sharding.rules).
+
+Compute dtype policy: matmuls in ``cfg.dtype`` (bf16 on TPU), softmax and
+norm statistics in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    vocab: int = 1024
+    qkv_bias: bool = False            # Qwen2.5 uses QKV bias
+    causal: bool = True               # False for the ColBERT encoder
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32          # bf16 for dry-run / TPU
+    # MoE (0 experts -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # retrieval-encoder head (ColBERT): project to dim>0
+    out_proj: int = 0
+    tie_embeddings: bool = False
+    # flash-style chunked causal attention (0 = dense); used when causal,
+    # no cache, and seq_len >= attn_chunk_min_seq (dense logits at 4k fit
+    # HBM once TP shards the heads; chunking only pays at 8k+)
+    attn_q_chunk: int = 0
+    attn_kv_chunk: int = 0
+    attn_chunk_min_seq: int = 8192
+    # sequence-parallel attention (context parallelism): PartitionSpecs
+    # (q_spec, kv_spec) forced on q / k,v right before attention. Used when
+    # the arch's head counts don't divide the model axis (40H/8KV vs 16):
+    # left to itself GSPMD shards d_head 2-way and pays a partial-sum
+    # all-reduce of every flash logits block INSIDE the chunk scans (§Perf).
+    # q gets seq-sharded over "model", k/v replicated -> attention is
+    # collective-free; requires a mesh context at trace time. None = off.
+    attn_act_specs: Any = None
+    # Megatron-SP residual stream: PartitionSpec forced on x after each
+    # residual add (seq over "model") — turns the TP partial-sum all-reduces
+    # into reduce-scatters and keeps norms on 1/16th of the tokens.
+    residual_spec: Any = None
+    # MoE grouped dispatch (GShard): number of token groups (0 = capacity-
+    # gather path) and (token_spec, expert_spec) PartitionSpecs for the
+    # (g, t_l, ...) / (g, E, C, d) dispatch tensors.
+    moe_groups: int = 0
+    moe_specs: Any = None
+    # activation-checkpoint policy for the layer scan: "dots" saves matmul
+    # outputs with no batch dims (cheap recompute, more memory), "full"
+    # saves nothing (max recompute, min memory — buys smaller grad_accum,
+    # which is what bounds the per-microbatch FSDP gather count; §Perf).
+    remat_policy: str = "dots"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_layer_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """One transformer block's params (unstacked)."""
+    ks = jax.random.split(key, 12)
+    h, kv, dh, d, f = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model,
+                       cfg.d_ff)
+    p: Params = {
+        "attn": {
+            "wq": _dense_init(ks[0], (d, h * dh), cfg.dtype),
+            "wk": _dense_init(ks[1], (d, kv * dh), cfg.dtype),
+            "wv": _dense_init(ks[2], (d, kv * dh), cfg.dtype),
+            "wo": _dense_init(ks[3], (h * dh, d), cfg.dtype),
+        },
+        "ln1": {"scale": jnp.ones((d,), cfg.dtype)},
+        "ln2": {"scale": jnp.ones((d,), cfg.dtype)},
+    }
+    if cfg.qkv_bias:
+        p["attn"]["bq"] = jnp.zeros((h * dh,), cfg.dtype)
+        p["attn"]["bk"] = jnp.zeros((kv * dh,), cfg.dtype)
+        p["attn"]["bv"] = jnp.zeros((kv * dh,), cfg.dtype)
+    if cfg.is_moe:
+        e = cfg.n_experts
+        p["moe"] = {
+            "router": _dense_init(ks[4], (d, e), jnp.float32),
+            "wi_gate": _dense_init(ks[5], (e, d, f), cfg.dtype),
+            "wi_up": _dense_init(ks[6], (e, d, f), cfg.dtype),
+            "wo": _dense_init(ks[7], (e, f, d), cfg.dtype),
+        }
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            p["shared_mlp"] = {
+                "w_gate": _dense_init(ks[8], (d, fs), cfg.dtype),
+                "w_up": _dense_init(ks[9], (d, fs), cfg.dtype),
+                "w_down": _dense_init(ks[10], (fs, d), cfg.dtype),
+            }
+    else:
+        p["mlp"] = {
+            "w_gate": _dense_init(ks[4], (d, f), cfg.dtype),
+            "w_up": _dense_init(ks[5], (d, f), cfg.dtype),
+            "w_down": _dense_init(ks[6], (f, d), cfg.dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_tables(positions: jax.Array, d_head: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 -> cos/sin (..., d_head//2) fp32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, Dh); cos/sin (..., S, Dh//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: Optional[jax.Array]) -> jax.Array:
+    """q (B,S,H,Dh), k/v (B,T,KV,Dh) -> (B,S,H,Dh). Softmax in fp32."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, s, kv, groups, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             q_chunk: int, kv_chunk: int,
+                             act_specs=None) -> jax.Array:
+    """Flash-style causal attention in pure JAX: online softmax over KV
+    chunks under a scan over query chunks. Peak intermediate is
+    (B, KV, G, q_chunk, kv_chunk) instead of (B, KV, G, S, S) — what makes
+    the 32k prefill cells fit HBM (DESIGN.md §4).
+
+    q (B,S,H,Dh), k/v (B,S,KV,Dh) -> (B,S,H,Dh). Requires S % chunks == 0.
+
+    ``act_specs=(qg_spec, kv_spec)``: context parallelism for head counts
+    that don't divide the model axis — the *within-chunk* q position dim of
+    qg (B, nq, q_chunk, KV, G, Dh) is seq-sharded (the scan axis nq must
+    stay unsharded: scan is sequential), k/v chunks are replicated, so the
+    flash inner loop is collective-free.
+    """
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    nq, nk = s // q_chunk, s // kv_chunk
+    qg = q.reshape(b, nq, q_chunk, kv, g, dh)
+    kc = k.reshape(b, nk, kv_chunk, kv, dh)
+    vc = v.reshape(b, nk, kv_chunk, kv, dh)
+    if act_specs is not None:
+        qg_spec, kv_spec = act_specs
+        qg = jax.lax.with_sharding_constraint(qg, qg_spec)
+        kc = jax.lax.with_sharding_constraint(kc, kv_spec)
+        vc = jax.lax.with_sharding_constraint(vc, kv_spec)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                              # (B, qc, KV, G, Dh)
+        q_pos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgd,btkd->bkgqt", qblk,
+                                kblk).astype(jnp.float32) * scale
+            causal = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(causal[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(qblk.dtype),
+                            vblk).astype(jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             jnp.arange(nk, dtype=jnp.int32)))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)    # (B, qc, KV, G, Dh)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qg.swapaxes(0, 1),
+                            jnp.arange(nq, dtype=jnp.int32)))
+    out = outs.swapaxes(0, 1).reshape(b, s, h, dh)
+    return out
+
+
+def attention_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                    positions: jax.Array, mask: Optional[jax.Array],
+                    cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None
+                    ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out, (k, v)).
+
+    Without ``cache``: k/v are this call's keys/values (for the caller to
+    stack into a prefill cache). With ``cache=(k_layer, v_layer, pos)``
+    (decode): the new k/v are merged into the cache at ``pos``, attention
+    runs over the merged cache, and the merged (k, v) are returned.
+    """
+    b, s, d = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kvh, dh)
+    v = v.reshape(b, s, kvh, dh)
+    cos, sin = rope_tables(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cache is not None:
+        k_layer, v_layer, pos = cache
+        k = jax.lax.dynamic_update_slice_in_dim(k_layer, k.astype(k_layer.dtype),
+                                                pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(v_layer, v.astype(v_layer.dtype),
+                                                pos, axis=1)
+    use_chunked = (cache is None and cfg.causal and cfg.attn_q_chunk > 0 and
+                   s >= cfg.attn_chunk_min_seq and
+                   s % cfg.attn_q_chunk == 0 and s % cfg.attn_kv_chunk == 0)
+    if use_chunked:
+        out = chunked_causal_attention(q, k, v, cfg.attn_q_chunk,
+                                       cfg.attn_kv_chunk,
+                                       act_specs=cfg.attn_act_specs)
+    else:
+        if cfg.attn_act_specs is not None and cache is None:
+            # dense path context parallelism: q seq-sharded, k/v replicated
+            qg_spec, _ = cfg.attn_act_specs
+            from jax.sharding import PartitionSpec as P
+            q = jax.lax.with_sharding_constraint(
+                q, P(qg_spec[0], qg_spec[2], None, None))
+            kv4 = P(qg_spec[0], None, None, None)
+            k = jax.lax.with_sharding_constraint(k, kv4)
+            v = jax.lax.with_sharding_constraint(v, kv4)
+        out = gqa_attention(q, k, v, mask)
+    return out.reshape(b, s, h * dh) @ p["wo"], (k, v)
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN with top-k routing and per-expert capacity.
+
+Dispatch strategy ("capacity gather", DESIGN.md §4): instead of the GShard
+(T, E, C) one-hot dispatch tensor — O(T·E·C) memory, hopeless at E=384 — each
+expert gathers its top-C tokens directly:
+
+  1. router logits (T, E); token-side top-k selection mask + renormalized
+     gate weights;
+  2. expert-side: top-C tokens per expert from the masked gate matrix
+     transposed -> token ids (E, C) + weights (E, C);
+  3. gather (E, C, d), per-expert SwiGLU via batched einsum (grouped GEMM),
+     scatter-add back weighted outputs.
+
+Memory is O(T·top_k·d) (the unavoidable token-copy cost) and the expert axis
+shards cleanly over the mesh "model" axis (EP). Tokens over capacity are
+dropped (standard); capacity_factor sizes C = ceil(T·top_k/E · cf).
+
+An auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ModelConfig, Params
+
+
+def moe_block(p: Params, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar). Dispatch mode:
+    ``cfg.moe_groups > 0`` -> grouped GShard dispatch (production, all-to-all
+    under GSPMD); else capacity-gather (single-host friendly)."""
+    if cfg.moe_groups:
+        return moe_block_grouped(p, x, cfg)
+    return _moe_block_gather(p, x, cfg)
+
+
+def moe_block_grouped(p: Params, x: jax.Array, cfg: ModelConfig
+                      ) -> tuple[jax.Array, jax.Array]:
+    """GShard-style grouped dispatch (§Perf cell 2, iteration 3).
+
+    Tokens split into ``moe_groups`` groups (one per token shard); each group
+    selects its top-C tokens PER EXPERT locally and dispatches with a
+    (g, t_l, E, C) one-hot einsum — the canonical pattern GSPMD lowers to an
+    all-to-all when the group axis is token-sharded and the expert axis is
+    EP-sharded (``cfg.moe_specs``), replacing the capacity-gather's global
+    token gather/scatter that XLA answered with per-layer all-reduces of the
+    full (T, d) activation (measured 5.7 TiB/chip/step on kimi-k2).
+
+    Per-group capacity C = ceil(t_l·k/E·cf) keeps the same expected drop
+    rate as the global formulation (standard in GShard/Switch).
+    """
+    b, s, d = x.shape
+    g = cfg.moe_groups
+    t = b * s
+    assert t % g == 0, (t, g)
+    tl = t // g
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, -(-tl * k // e) * max(1.0, cfg.capacity_factor)))
+    cap = min(cap, tl)
+    xg = x.reshape(g, tl, d)
+    tok_spec, exp_spec = cfg.moe_specs or (None, None)
+    if tok_spec is not None:
+        xg = jax.lax.with_sharding_constraint(xg, tok_spec)
+
+    logits = xg.astype(jnp.float32) @ p["router"]              # (g, tl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                       # (g, tl, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    sel = (jax.nn.one_hot(topi, e, dtype=jnp.float32) *
+           topv[..., None]).sum(-2)                            # (g, tl, E)
+
+    # position of each token in its expert's queue; drop beyond capacity
+    mask = sel > 0
+    pos = jnp.cumsum(mask, axis=1) - 1                         # (g, tl, E)
+    keep = mask & (pos < cap)
+    disp = (keep[..., None] &
+            (pos[..., None] == jnp.arange(cap)))               # (g,tl,E,C)
+    disp_x = disp.astype(cfg.dtype)
+    xdisp = jnp.einsum("gtec,gtd->gecd", disp_x, xg)           # (g,E,C,d)
+    if exp_spec is not None:
+        xdisp = jax.lax.with_sharding_constraint(xdisp, exp_spec)
+
+    hidden = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xdisp, p["wi_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xdisp, p["wi_up"])
+    yexp = jnp.einsum("gecf,efd->gecd", hidden, p["wo"])       # (g,E,C,d)
+
+    comb = (disp * sel[..., None]).astype(cfg.dtype)           # gated one-hot
+    out = jnp.einsum("gtec,gecd->gtd", comb, yexp)
+    if tok_spec is not None:
+        out = jax.lax.with_sharding_constraint(out, tok_spec)
+
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = mask.astype(jnp.float32).mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_block_gather(p: Params, x: jax.Array, cfg: ModelConfig
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Capacity-gather dispatch (module docstring strategy)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                       # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # token-side selection mask with renormalized gates
+    sel = jnp.zeros((t, e), jnp.float32)
+    sel = sel.at[jnp.arange(t)[:, None], topi].set(topv)       # (T, E)
+
+    # expert-side capacity gather
+    cap = int(max(1, min(t, round(t * k / e * cfg.capacity_factor))))
+    gates_te = sel.T                                           # (E, T)
+    gw, gidx = jax.lax.top_k(gates_te, cap)                    # (E, C)
+    xg = jnp.take(xf, gidx.reshape(-1), axis=0)                # (E*C, d)
+    xg = xg.reshape(e, cap, d)
+
+    # grouped SwiGLU: (E, C, d) x (E, d, f) -> (E, C, f)
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["wi_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xg, p["wi_up"])
+    yexp = jnp.einsum("ecf,efd->ecd", hidden, p["wo"])         # (E, C, d)
+
+    # weighted scatter-add back to tokens (zero-gate rows contribute nothing)
+    yw = yexp * gw[..., None].astype(yexp.dtype)
+    out = jnp.zeros((t, d), yexp.dtype)
+    out = out.at[gidx.reshape(-1)].add(yw.reshape(-1, d))
+    if cfg.residual_spec is not None:
+        # token-sharded output: the cross-expert scatter partials combine
+        # with a reduce-scatter instead of a full all-reduce (§Perf)
+        from jax.sharding import PartitionSpec as P
+        sp = cfg.residual_spec
+        out = jax.lax.with_sharding_constraint(
+            out.reshape(b, s, d), P(*sp)).reshape(t, d)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = (sel > 0).astype(jnp.float32).mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux

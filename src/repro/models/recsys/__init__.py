@@ -1,0 +1,1 @@
+"""RecSys architectures: DLRM, DCN-v2, DIEN, MIND + EmbeddingBag substrate."""

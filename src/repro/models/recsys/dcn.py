@@ -1,0 +1,70 @@
+"""DCN-v2 (Wang et al., arXiv:2008.13535) — cross network + deep MLP.
+
+x_{l+1} = x_0 ⊙ (W_l x_l + b_l) + x_l   (full-rank cross layers), stacked
+combination: cross tower then deep tower on its output -> logit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .embedding_bag import embedding_bag, init_mlp, mlp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str = "dcn"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    vocab_sizes: Tuple[int, ...] = (1000,) * 26
+    n_cross_layers: int = 3
+    mlp_dims: Tuple[int, ...] = (1024, 1024, 512)
+    nnz: int = 1
+    dtype: Any = jnp.float32
+
+    @property
+    def x0_dim(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def init_params(key: jax.Array, cfg: DCNConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_sparse + cfg.n_cross_layers + 2)
+    p: Params = {"tables": {}}
+    for f, v in enumerate(cfg.vocab_sizes):
+        p["tables"][f"t{f}"] = (jax.random.normal(keys[f], (v, cfg.embed_dim))
+                                * 0.05).astype(cfg.dtype)
+    d0 = cfg.x0_dim
+    p["cross"] = [{
+        "w": (jax.random.normal(keys[cfg.n_sparse + i], (d0, d0)) /
+              jnp.sqrt(d0)).astype(cfg.dtype),
+        "b": jnp.zeros((d0,), cfg.dtype)}
+        for i in range(cfg.n_cross_layers)]
+    p["deep"] = init_mlp(keys[-2], [d0, *cfg.mlp_dims], cfg.dtype)
+    p["head"] = init_mlp(keys[-1], [cfg.mlp_dims[-1], 1], cfg.dtype)
+    return p
+
+
+def forward(params: Params, batch: dict, cfg: DCNConfig) -> jax.Array:
+    embs = [embedding_bag(params["tables"][f"t{f}"],
+                          batch["sparse_idx"][:, f],
+                          batch["sparse_valid"][:, f])
+            for f in range(cfg.n_sparse)]
+    x0 = jnp.concatenate([batch["dense"].astype(cfg.dtype), *embs], axis=-1)
+    x = x0
+    for lp in params["cross"]:
+        x = x0 * (x @ lp["w"] + lp["b"]) + x
+    x = mlp(params["deep"], x, final_act=True)
+    return mlp(params["head"], x)[:, 0]
+
+
+def loss_fn(params: Params, batch: dict, cfg: DCNConfig) -> jax.Array:
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

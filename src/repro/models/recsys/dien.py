@@ -1,0 +1,130 @@
+"""DIEN (Zhou et al., arXiv:1809.03672) — interest evolution with AUGRU.
+
+User behaviour sequence -> GRU interest extractor -> attention vs target item
+-> AUGRU (attention-modulated update gate) interest evolver -> final state
+concat target/profile -> MLP(200, 80) -> CTR logit. GRU/AUGRU run under
+``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .embedding_bag import init_mlp, mlp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    vocab_items: int = 100000
+    vocab_cats: int = 1000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    dtype: Any = jnp.float32
+
+    @property
+    def item_dim(self) -> int:
+        return 2 * self.embed_dim  # item embedding ++ category embedding
+
+
+def _init_gru(key, d_in, d_h, dtype):
+    k = jax.random.split(key, 3)
+    s_in, s_h = 1 / jnp.sqrt(d_in), 1 / jnp.sqrt(d_h)
+    return {
+        "wx": (jax.random.normal(k[0], (d_in, 3 * d_h)) * s_in).astype(dtype),
+        "wh": (jax.random.normal(k[1], (d_h, 3 * d_h)) * s_h).astype(dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    """Standard GRU; if ``att`` (B, 1) is given, the update gate is scaled by
+    it (AUGRU, the DIEN contribution)."""
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    xr, xz, xn = jnp.split(gx, 3, axis=-1)
+    hr, hz, hn = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    if att is not None:
+        z = att * z
+    return (1.0 - z) * h + z * n
+
+
+def init_params(key: jax.Array, cfg: DIENConfig) -> Params:
+    keys = jax.random.split(key, 6)
+    d_in = cfg.item_dim
+    return {
+        "item_emb": (jax.random.normal(keys[0], (cfg.vocab_items, cfg.embed_dim))
+                     * 0.05).astype(cfg.dtype),
+        "cat_emb": (jax.random.normal(keys[1], (cfg.vocab_cats, cfg.embed_dim))
+                    * 0.05).astype(cfg.dtype),
+        "gru1": _init_gru(keys[2], d_in, cfg.gru_dim, cfg.dtype),
+        "gru2": _init_gru(keys[3], cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att_w": (jax.random.normal(keys[4], (d_in, cfg.gru_dim)) * 0.05
+                  ).astype(cfg.dtype),
+        "head": init_mlp(keys[5],
+                         [cfg.gru_dim + 2 * d_in, *cfg.mlp_dims, 1], cfg.dtype),
+    }
+
+
+def _embed_items(params, items, cats):
+    ie = jnp.take(params["item_emb"], items, axis=0)
+    ce = jnp.take(params["cat_emb"], cats, axis=0)
+    return jnp.concatenate([ie, ce], axis=-1)
+
+
+def forward(params: Params, batch: dict, cfg: DIENConfig) -> jax.Array:
+    """batch: hist_items/hist_cats (B, L) int32, hist_valid (B, L) bool,
+    target_item/target_cat (B,) int32 -> logits (B,)."""
+    hist = _embed_items(params, batch["hist_items"], batch["hist_cats"])
+    target = _embed_items(params, batch["target_item"], batch["target_cat"])
+    valid = batch["hist_valid"].astype(cfg.dtype)
+    b = hist.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+
+    # interest extractor GRU over the sequence
+    def step1(h, xv):
+        x, v = xv
+        hn = _gru_cell(params["gru1"], h, x)
+        h = v[:, None] * hn + (1 - v)[:, None] * h
+        return h, h
+    _, states = jax.lax.scan(step1, h0, (hist.swapaxes(0, 1),
+                                         valid.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)                            # (B, L, H)
+
+    # attention of target vs extracted interests
+    att_logits = jnp.einsum("bd,dh,blh->bl", target, params["att_w"], states)
+    att_logits = jnp.where(batch["hist_valid"], att_logits, -1e9)
+    att = jax.nn.softmax(att_logits.astype(jnp.float32), axis=-1
+                         ).astype(cfg.dtype)                   # (B, L)
+
+    # AUGRU interest evolution
+    def step2(h, sva):
+        s, v, a = sva
+        hn = _gru_cell(params["gru2"], h, s, att=a[:, None])
+        h = v[:, None] * hn + (1 - v)[:, None] * h
+        return h, None
+    h_final, _ = jax.lax.scan(step2, h0, (states.swapaxes(0, 1),
+                                          valid.swapaxes(0, 1),
+                                          att.swapaxes(0, 1)))
+
+    hist_mean = (hist * valid[..., None]).sum(1) / \
+        jnp.maximum(valid.sum(1, keepdims=True), 1)
+    feat = jnp.concatenate([h_final, target, hist_mean], axis=-1)
+    return mlp(params["head"], feat)[:, 0]
+
+
+def loss_fn(params: Params, batch: dict, cfg: DIENConfig) -> jax.Array:
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

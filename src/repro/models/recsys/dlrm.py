@@ -1,0 +1,89 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — MLPerf benchmark config.
+
+13 dense features -> bottom MLP; 26 sparse fields -> per-field EmbeddingBag
+(multi-hot, sum-reduced); pairwise dot interaction over the 27 feature
+vectors; top MLP -> CTR logit. Criteo-1TB vocabulary sizes (public MLPerf
+config) are in ``repro.configs.dlrm_mlperf``.
+
+Tables may be PQ-compressed (``use_pq_tables=True``) — the beyond-paper
+application of EMVB's C3 recorded in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .embedding_bag import embedding_bag, embedding_bag_pq, init_mlp, mlp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    vocab_sizes: Tuple[int, ...] = (1000,) * 26
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    nnz: int = 1                  # multi-hot width per field
+    use_pq_tables: bool = False
+    pq_m: int = 16
+    pq_k: int = 256
+    dtype: Any = jnp.float32
+
+
+def init_params(key: jax.Array, cfg: DLRMConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_sparse + 3)
+    p: Params = {"tables": {}}
+    for f, v in enumerate(cfg.vocab_sizes):
+        if cfg.use_pq_tables:
+            p["tables"][f"t{f}"] = {
+                "codes": jax.random.randint(keys[f], (v, cfg.pq_m), 0,
+                                            cfg.pq_k).astype(jnp.uint8),
+                "codebooks": (jax.random.normal(
+                    keys[f], (cfg.pq_m, cfg.pq_k, cfg.embed_dim // cfg.pq_m))
+                    * 0.05).astype(cfg.dtype),
+            }
+        else:
+            p["tables"][f"t{f}"] = (jax.random.normal(keys[f], (v, cfg.embed_dim))
+                                    * 0.05).astype(cfg.dtype)
+    p["bot"] = init_mlp(keys[-3], [cfg.n_dense, *cfg.bot_mlp], cfg.dtype)
+    n_feat = cfg.n_sparse + 1
+    n_pairs = n_feat * (n_feat - 1) // 2
+    p["top"] = init_mlp(keys[-2], [n_pairs + cfg.bot_mlp[-1], *cfg.top_mlp],
+                        cfg.dtype)
+    return p
+
+
+def forward(params: Params, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    """batch: dense (B, 13) fp32; sparse_idx (B, 26, nnz) int32;
+    sparse_valid (B, 26, nnz) bool -> logits (B,)."""
+    dense = mlp(params["bot"], batch["dense"].astype(cfg.dtype),
+                final_act=True)                                 # (B, D)
+    embs = []
+    for f in range(cfg.n_sparse):
+        t = params["tables"][f"t{f}"]
+        idx = batch["sparse_idx"][:, f]
+        val = batch["sparse_valid"][:, f]
+        if cfg.use_pq_tables:
+            embs.append(embedding_bag_pq(t["codes"], t["codebooks"], idx, val))
+        else:
+            embs.append(embedding_bag(t, idx, val))
+    z = jnp.stack([dense, *embs], axis=1)                       # (B, 27, D)
+    inter = jnp.einsum("bid,bjd->bij", z, z)                    # (B, 27, 27)
+    iu, ju = jnp.triu_indices(z.shape[1], k=1)
+    pairs = inter[:, iu, ju]                                    # (B, n_pairs)
+    top_in = jnp.concatenate([dense, pairs.astype(cfg.dtype)], axis=-1)
+    return mlp(params["top"], top_in)[:, 0]
+
+
+def loss_fn(params: Params, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

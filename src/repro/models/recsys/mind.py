@@ -1,0 +1,96 @@
+"""MIND (Li et al., arXiv:1904.08030) — multi-interest retrieval with
+capsule routing. **The star cell for EMVB applicability** (DESIGN.md §5):
+a MIND user is a *multi-vector* representation (n_interests capsules) and
+candidate scoring is exactly late interaction with n_q = n_interests —
+``retrieval_cand`` runs through the EMVB engine.
+
+Behaviour-to-Interest (B2I) dynamic routing, 3 iterations; label-aware
+attention for the training loss; serving score = max_k (interest_k . item).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    vocab_items: int = 200000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    pow_label_aware: float = 2.0
+    dtype: Any = jnp.float32
+
+
+def init_params(key: jax.Array, cfg: MINDConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "item_emb": (jax.random.normal(k1, (cfg.vocab_items, cfg.embed_dim))
+                     * 0.05).astype(cfg.dtype),
+        # shared bilinear routing map S (B2I routing, Eq. 4 of the paper)
+        "s": (jax.random.normal(k2, (cfg.embed_dim, cfg.embed_dim)) *
+              (1.0 / jnp.sqrt(cfg.embed_dim))).astype(cfg.dtype),
+    }
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def user_interests(params: Params, hist_items: jax.Array, hist_valid: jax.Array,
+                   cfg: MINDConfig) -> jax.Array:
+    """hist (B, L) -> interest capsules (B, K, D), L2-normalized."""
+    e = jnp.take(params["item_emb"], hist_items, axis=0)      # (B, L, D)
+    eh = e @ params["s"]                                       # (B, L, D)
+    b_sz, l, d = e.shape
+    k = cfg.n_interests
+    # routing logits init: fixed (deterministic) per-position pattern — the
+    # paper uses random init; a fixed hash keeps the fn jit-pure.
+    blogit = jnp.sin(jnp.arange(l)[:, None] * (1.0 + jnp.arange(k))[None, :])
+    blogit = jnp.broadcast_to(blogit, (b_sz, l, k)).astype(jnp.float32)
+    neg = -1e9
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(jnp.where(hist_valid[..., None], blogit, neg),
+                           axis=1)                             # over L
+        caps = _squash(jnp.einsum("blk,bld->bkd", w.astype(cfg.dtype), eh))
+        blogit = blogit + jnp.einsum("bkd,bld->blk", caps, eh).astype(jnp.float32)
+    caps = caps / jnp.maximum(jnp.linalg.norm(caps, axis=-1, keepdims=True),
+                              1e-9)
+    return caps                                                # (B, K, D)
+
+
+def score_candidates(interests: jax.Array, item_embs: jax.Array) -> jax.Array:
+    """Late interaction with n_q = K: max_k interest_k . item.
+    interests (B, K, D); item_embs (N, D) -> (B, N)."""
+    return jnp.einsum("bkd,nd->bkn", interests, item_embs).max(axis=1)
+
+
+def forward(params: Params, batch: dict, cfg: MINDConfig) -> jax.Array:
+    """Training-style forward: label-aware attention score of target item."""
+    caps = user_interests(params, batch["hist_items"], batch["hist_valid"], cfg)
+    tgt = jnp.take(params["item_emb"], batch["target_item"], axis=0)
+    att = jnp.einsum("bkd,bd->bk", caps, tgt)
+    w = jax.nn.softmax(cfg.pow_label_aware * att.astype(jnp.float32), axis=-1)
+    v_user = jnp.einsum("bk,bkd->bd", w.astype(cfg.dtype), caps)
+    return jnp.einsum("bd,bd->b", v_user, tgt)
+
+
+def loss_fn(params: Params, batch: dict, cfg: MINDConfig) -> jax.Array:
+    """Sampled-softmax-style in-batch loss over target items."""
+    caps = user_interests(params, batch["hist_items"], batch["hist_valid"], cfg)
+    tgt = jnp.take(params["item_emb"], batch["target_item"], axis=0)  # (B, D)
+    att = jnp.einsum("bkd,jd->bkj", caps, tgt)                 # (B, K, B)
+    scores = att.max(axis=1).astype(jnp.float32)               # (B, B)
+    labels = jnp.arange(scores.shape[0])
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

@@ -1,0 +1,62 @@
+"""Uniform neighbor sampler for mini-batch GNN training (GraphSAGE-style).
+
+Real sampler over a padded neighbor table (CSR rows padded to max_degree with
+a sentinel): for each seed, draw ``fanout`` neighbors uniformly with
+replacement (the standard trick that keeps shapes static on TPU; invalid
+draws — padding — are masked, not resampled). Produces per-hop node-id arrays
+and block edge lists consumable by ``gcn.forward_sampled``.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_adjacency(row_ptr, col_idx, n_nodes: int, max_degree: int,
+                  sentinel: int):
+    """CSR -> padded (n_nodes, max_degree) neighbor table + (n_nodes,) degree."""
+    import numpy as np
+    nbr = np.full((n_nodes, max_degree), sentinel, dtype=np.int32)
+    deg = np.zeros((n_nodes,), dtype=np.int32)
+    for v in range(n_nodes):
+        lo, hi = row_ptr[v], row_ptr[v + 1]
+        d = min(hi - lo, max_degree)
+        nbr[v, :d] = col_idx[lo:lo + d]
+        deg[v] = d
+    return jnp.asarray(nbr), jnp.asarray(deg)
+
+
+def sample_hop(key: jax.Array, seeds: jax.Array, nbr_table: jax.Array,
+               degrees: jax.Array, fanout: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """seeds (B,) -> (neighbors (B*fanout,), edges (2, B*fanout), mask)."""
+    b = seeds.shape[0]
+    deg = jnp.take(degrees, seeds)                          # (B,)
+    draw = jax.random.randint(key, (b, fanout), 0, 1 << 30)
+    col = draw % jnp.maximum(deg, 1)[:, None]               # (B, fanout)
+    nbrs = jnp.take(nbr_table, seeds, axis=0)               # (B, max_deg)
+    picked = jnp.take_along_axis(nbrs, col, axis=1)         # (B, fanout)
+    valid = (deg > 0)[:, None] & jnp.ones((b, fanout), jnp.bool_)
+    src = picked.reshape(-1)                                # hop-(i+1) ids
+    dst = jnp.repeat(jnp.arange(b, dtype=jnp.int32), fanout)
+    return src, jnp.stack([jnp.arange(b * fanout, dtype=jnp.int32), dst]), \
+        valid.reshape(-1)
+
+
+def sample_blocks(key: jax.Array, seeds: jax.Array, nbr_table: jax.Array,
+                  degrees: jax.Array, fanouts: List[int]):
+    """Layered sampling. Returns (node_ids per hop, blocks) where
+    blocks[i] = {'edges' (2, E_i) [src -> local hop-(i+1) idx, dst -> local
+    hop-i idx], 'edge_mask'}."""
+    hop_nodes = [seeds]
+    blocks = []
+    cur = seeds
+    for i, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        src_ids, edges, mask = sample_hop(sub, cur, nbr_table, degrees, f)
+        hop_nodes.append(src_ids)
+        blocks.append({"edges": edges, "edge_mask": mask})
+        cur = src_ids
+    return hop_nodes, blocks

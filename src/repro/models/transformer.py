@@ -1,0 +1,183 @@
+"""Decoder-only transformer LM (dense or MoE) with GQA, RoPE, SwiGLU.
+
+Layer parameters are *stacked* along a leading ``n_layers`` axis and the
+layer stack runs under ``lax.scan`` (+ optional remat): one layer is compiled
+once regardless of depth — essential for the 61-layer/1T dry-run configs.
+
+Entry points:
+  init_params / abstract_params        (abstract via jax.eval_shape)
+  forward(params, tokens)              full causal forward -> logits
+  loss_fn(params, batch)               next-token CE (+ MoE aux)
+  prefill(params, tokens)              -> (logits, KVCache)
+  decode_step(params, cache, tok, pos) -> (logits, KVCache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (ModelConfig, Params, attention_block, init_layer_params,
+                     rms_norm, swiglu)
+from .moe import moe_block
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (L, B, S, KV, Dh)
+    v: jax.Array  # (L, B, S, KV, Dh)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    k_embed, k_layers, k_head, k_proj = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    p: Params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) *
+                  0.02).astype(cfg.dtype),
+        "layers": layers,
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), cfg.dtype)},
+    }
+    if not cfg.tie_embeddings and cfg.vocab > 0:
+        p["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) *
+                        0.02).astype(cfg.dtype)
+    if cfg.out_proj:
+        p["proj"] = (jax.random.normal(k_proj, (cfg.d_model, cfg.out_proj)) *
+                     0.02).astype(cfg.dtype)
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """Param pytree of ShapeDtypeStructs — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _layer(lp: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+           mask: Optional[jax.Array],
+           cache=None) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array],
+                                jax.Array]:
+    def _sp(t):
+        # Megatron-SP: residual stream sharded on seq (ModelConfig docs)
+        if cfg.residual_spec is not None and cache is None:
+            return jax.lax.with_sharding_constraint(t, cfg.residual_spec)
+        return t
+
+    h, kv = attention_block(lp["attn"], rms_norm(x, lp["ln1"]["scale"],
+                                                 cfg.norm_eps),
+                            cfg, positions, mask, cache)
+    x = _sp(x + h)
+    hin = rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.is_moe:
+        ff, aux = moe_block(lp["moe"], hin, cfg)
+        if cfg.n_shared_experts:
+            ff = ff + swiglu(lp["shared_mlp"], hin)
+    else:
+        ff, aux = swiglu(lp["mlp"], hin), jnp.float32(0)
+    return _sp(x + ff), kv, aux
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                   attn_mask: Optional[jax.Array] = None,
+                   remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (hidden (B, S, d), moe_aux scalar)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    if attn_mask is not None:
+        mask = attn_mask
+    elif cfg.causal:
+        mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    else:
+        mask = None
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _layer(lp, x, cfg, positions, mask)
+        return (x, aux + a), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["layers"])
+    return rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps), aux
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V), moe_aux)."""
+    h, aux = forward_hidden(params, tokens, cfg, remat=remat)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, aux
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
+            aux_weight: float = 0.01) -> jax.Array:
+    """batch: tokens (B, S) int32, labels (B, S) int32 (-1 = ignore)."""
+    logits, aux = forward(params, batch["tokens"], cfg)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - picked, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, KVCache]:
+    """tokens (B, S) -> (last-position logits (B, V), cache)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    def body(x, lp):
+        x, (k, v), _ = _layer(lp, x, cfg, positions, mask)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    h = rms_norm(x[:, -1], params["final_norm"]["scale"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, KVCache(ks, vs)
+
+
+def decode_step(params: Params, cache: KVCache, token: jax.Array,
+                pos: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, KVCache]:
+    """One decode step. token (B,) int32; pos scalar int32 = index of the new
+    token (cache holds ``pos`` valid entries before the call).
+
+    cache k/v (L, B, S, KV, Dh); the new token's k/v are written at ``pos``
+    and attention runs over positions <= pos.
+    """
+    b = token.shape[0]
+    s_max = cache.k.shape[2]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    att_mask = (jnp.arange(s_max) <= pos)[None, None, None, None, :]
+
+    def body(x, scanned):
+        lp, k_layer, v_layer = scanned
+        x, (k_merged, v_merged), _ = _layer(lp, x, cfg, positions, att_mask,
+                                            cache=(k_layer, v_layer, pos))
+        return x, (k_merged, v_merged)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    h = rms_norm(x[:, 0], params["final_norm"]["scale"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, KVCache(ks, vs)

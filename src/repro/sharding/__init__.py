@@ -1,0 +1,1 @@
+"""Partitioning rules and mesh helpers (TP / FSDP / EP / sequence-sharded KV)."""

@@ -1,0 +1,42 @@
+"""Sharding rules for recsys state: embedding tables row-shard over
+("data","model") (pod axis replicates: data-parallel across pods); everything
+else (MLPs, GRUs, capsule maps) is tiny and replicates. Optimizer states
+inherit by shape match (adagrad accumulators shard with their tables)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+ROW_SHARD_MIN = 100_000  # rows; smaller tables replicate
+
+
+def _row_axes(mesh: Mesh):
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def recsys_state_shardings(mesh: Mesh, params_avals: Any, opt_avals: Any
+                           ) -> Tuple[Any, Any]:
+    rows = _row_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_avals)
+    specs_by_shape = {}
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        big_table = (leaf.ndim >= 2 and leaf.shape[0] >= ROW_SHARD_MIN)
+        if big_table and ("tables" in keys or "item_emb" in keys or
+                          "cat_emb" in keys or "codes" in keys):
+            sp = P(rows, *([None] * (leaf.ndim - 1)))
+        else:
+            sp = P(*([None] * leaf.ndim))
+        specs_by_shape[leaf.shape] = sp
+        out.append(NamedSharding(mesh, sp))
+    params_sh = jax.tree_util.tree_unflatten(treedef, out)
+
+    def opt_spec(leaf):
+        sp = specs_by_shape.get(leaf.shape, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, sp)
+
+    return params_sh, jax.tree.map(opt_spec, opt_avals)

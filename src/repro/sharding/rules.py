@@ -1,0 +1,125 @@
+"""Parameter/activation partitioning rules.
+
+Params are plain pytrees; rules match on the flattened key path. Policy
+(DESIGN.md §4):
+
+  * TP over "model": attention projections on the folded head axis, FFN on
+    the hidden axis, experts on the expert axis (EP), vocab on the embedding
+    rows / lm_head cols.
+  * FSDP over ``fsdp_axes`` (() to disable, ("data",) single-pod,
+    ("pod","data") multi-pod): each TP-sharded param additionally shards its
+    *other* large axis; optimizer states inherit the param spec (leaves whose
+    shape matches the param; factored/scalar states replicate).
+  * Uneven dimensions (40 heads on 16-way TP, vocab 49155, Criteo rows) are
+    allowed: GSPMD pads — recorded in EXPERIMENTS.md where it costs.
+
+Activation/batch specs live with the arch configs; these rules only cover
+state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def lm_param_spec(key: str, ndim: int, fsdp, stacked: bool = True) -> P:
+    """Spec for one LM param. ``stacked``: leading n_layers axis present on
+    layer params. ``fsdp``: None or axis name/tuple for the data axes."""
+    L = (None,) if stacked else ()
+
+    def spec(*axes):
+        return P(*axes)
+
+    if "layers" in key:
+        if key.endswith("attn/wq") or key.endswith("attn/wk") or \
+                key.endswith("attn/wv"):
+            return spec(*L, fsdp, "model")
+        if key.endswith("attn/wo"):
+            return spec(*L, "model", fsdp)
+        if key.endswith("attn/bq") or key.endswith("attn/bk") or \
+                key.endswith("attn/bv"):
+            return spec(*L, "model")
+        if key.endswith("mlp/w_gate") or key.endswith("mlp/w_up") or \
+                key.endswith("shared_mlp/w_gate") or key.endswith("shared_mlp/w_up"):
+            return spec(*L, fsdp, "model")
+        if key.endswith("mlp/w_down") or key.endswith("shared_mlp/w_down"):
+            return spec(*L, "model", fsdp)
+        if key.endswith("moe/router"):
+            return spec(*L, None, None)
+        if key.endswith("moe/wi_gate") or key.endswith("moe/wi_up"):
+            return spec(*L, "model", fsdp, None)    # EP on expert axis
+        if key.endswith("moe/wo"):
+            return spec(*L, "model", None, fsdp)
+        if "ln" in key or "norm" in key:
+            return spec(*L, None)
+    if key.startswith("embed"):
+        return P("model", fsdp)
+    if key.startswith("lm_head"):
+        return P(fsdp, "model")
+    if key.startswith("proj"):
+        return P(None, None)
+    if "final_norm" in key:
+        return P(None)
+    return P(*([None] * ndim))
+
+
+def lm_state_shardings(mesh: Mesh, params_avals: Any, opt_avals: Any,
+                       fsdp) -> Tuple[Any, Any]:
+    """NamedSharding trees for (params, opt_state)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_avals)
+    specs = {}
+    param_tree = []
+    for path, leaf in flat:
+        k = _key_str(path)
+        sp = lm_param_spec(k, leaf.ndim, fsdp)
+        sp = _validate(sp, leaf.shape)
+        specs[leaf.shape] = sp          # shape -> spec lookup for opt states
+        param_tree.append(NamedSharding(mesh, sp))
+    params_sh = jax.tree_util.tree_unflatten(treedef, param_tree)
+
+    def opt_spec(leaf):
+        sp = specs.get(leaf.shape)
+        if sp is None:
+            sp = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, sp)
+
+    opt_sh = jax.tree.map(opt_spec, opt_avals)
+    return params_sh, opt_sh
+
+
+def _validate(spec: P, shape) -> P:
+    """Drop sharded axes on dims too small to split at all (dim < axis size is
+    fine for GSPMD padding, but dim==1/0 axes are pointless)."""
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is not None and i < len(shape) and shape[i] <= 1:
+            fixed.append(None)
+        else:
+            fixed.append(ax)
+    return P(*fixed)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * leaf.ndim))), tree)
+
+
+def table_sharding(mesh: Mesh, rows_axes=("data", "model")) -> NamedSharding:
+    """Row-wise embedding-table sharding (recsys)."""
+    return NamedSharding(mesh, P(rows_axes, None))
+
+
+def batch_spec(mesh: Mesh, data_axes) -> NamedSharding:
+    return NamedSharding(mesh, P(data_axes))

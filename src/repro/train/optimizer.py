@@ -1,0 +1,210 @@
+"""Optimizers as (init, update) pairs over plain pytrees (optax-style, but
+self-contained — nothing external is installed here).
+
+  adamw     — default for dense LMs / recsys / GNN.
+  adagrad   — classic recsys embedding-table choice (1 fp32 state).
+  adafactor — factored second moments; the memory-lean choice for 20B+.
+  muon      — momentum + Newton–Schulz orthogonalization on 2D params
+              (Kimi K2's actual optimizer; 1 state per param, which is what
+              makes the 1T-param dry-run fit — see EXPERIMENTS.md §Dry-run).
+
+States are stored in fp32 except muon/adamw ``momentum_dtype`` which can be
+bf16 for the ZeRO-lean configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = _tree_map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+        return {"m": zeros,
+                "v": _tree_map(lambda p: jnp.zeros(p.shape, state_dtype),
+                               params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        b1c = 1 - b1 ** c.astype(jnp.float32)
+        b2c = 1 - b2 ** c.astype(jnp.float32)
+        m = _tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                      state["m"], grads)
+        v = _tree_map(lambda v, g: b2 * v + (1 - b2) *
+                      jnp.square(g.astype(v.dtype)), state["v"], grads)
+        def upd(p, m, v):
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            return (p.astype(jnp.float32) - lr * (step + weight_decay *
+                    p.astype(jnp.float32))).astype(p.dtype)
+        new_params = _tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 1e-2, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return {"acc": _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)}
+
+    def update(grads, state, params):
+        acc = _tree_map(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                        state["acc"], grads)
+        new_params = _tree_map(
+            lambda p, g, a: (p.astype(jnp.float32) -
+                             lr * g.astype(jnp.float32) /
+                             (jnp.sqrt(a) + eps)).astype(p.dtype),
+            params, grads, acc)
+        return new_params, {"acc": acc}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30,
+              decay: float = 0.8, clip_rms: float = 1.0) -> Optimizer:
+    """Factored second moments for >=2D params (row/col accumulators over the
+    trailing two axes), full accumulator otherwise."""
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": _tree_map(one, params, ),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-decay)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_v = treedef.flatten_up_to(state["v"])
+        new_p, new_v = [], []
+        for g, p, v in zip(flat_g, flat_p, flat_v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                row = beta * v["row"] + (1 - beta) * g2.mean(axis=-1)
+                col = beta * v["col"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (row[..., None] / jnp.maximum(
+                    row.mean(axis=-1, keepdims=True)[..., None], eps)) * \
+                    col[..., None, :]
+                upd = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"row": row, "col": col}
+            else:
+                full = beta * v["full"] + (1 - beta) * g2
+                upd = g32 * jax.lax.rsqrt(jnp.maximum(full, eps))
+                nv = {"full": full}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_rms)
+            new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            new_v.append(nv)
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                {"v": jax.tree_util.tree_unflatten(treedef, new_v),
+                 "count": c})
+
+    return Optimizer(init, update)
+
+
+def _newton_schulz(g: jax.Array, steps: int = 5,
+                   dtype=jnp.float32) -> jax.Array:
+    """Orthogonalize a 2D matrix via the quintic Newton–Schulz iteration
+    (Jordan et al.; used by Muon). ``dtype=bf16`` is the practitioner
+    standard (NS is self-correcting); fp32 norm for stability."""
+    a, b, c = 3.4445, -4.7750, 2.0315
+    x = g.astype(jnp.float32)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    x = (x / (jnp.linalg.norm(x) + 1e-7)).astype(dtype)
+    for _ in range(steps):
+        xxt = x @ x.T
+        x = a * x + (b * xxt + c * (xxt @ xxt)) @ x
+    return (x.T if transpose else x)
+
+
+def muon(lr: float = 0.02, momentum: float = 0.95, ns_steps: int = 5,
+         adamw_lr: float = 3e-4, state_dtype=jnp.float32,
+         mats_spec=None, ns_dtype=jnp.float32) -> Optimizer:
+    """Muon for >=2D params (leading axes folded), AdamW-like fallback for
+    vectors/scalars. Single momentum state per param.
+
+    Distributed execution ("tensor-parallel Newton–Schulz", §Perf 3.2):
+    leading batch axes (layer stack / expert axis) are kept UNFOLDED and the
+    momentum keeps its natural param sharding — NS runs with the matrix's
+    row dim sharded wherever FSDP put it; the per-step gram contracts over
+    that dim and GSPMD inserts one all-reduce of the (small) gram per step.
+    The layer axis runs under ``lax.map`` so only one layer's grams are live
+    at a time. Two refuted designs are logged in §Perf: (a) reshape-folding
+    (L, E) merges an unsharded-major dim with the EP-sharded expert dim —
+    unrepresentable, GSPMD answers with full all-gathers; (b) resharding to
+    a matrix-sharded layout (``mats_spec``) — the reshard materializes a
+    gather-then-slice 84 GiB intermediate. ``mats_spec`` (callable shape ->
+    Optional[PartitionSpec]) remains available for meshes where that
+    reshard is cheap. ``ns_dtype=bf16`` halves NS compute/memory
+    (practitioner standard)."""
+    def init(params):
+        return {"mu": _tree_map(lambda p: jnp.zeros(p.shape, state_dtype),
+                                params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        mu = _tree_map(lambda m, g: momentum * m + g.astype(m.dtype),
+                       state["mu"], grads)
+
+        def upd(p, m):
+            if p.ndim >= 2:
+                # leading axes are batch dims, kept unfolded (docstring)
+                mats = m
+                sp = mats_spec(m.shape) if mats_spec is not None else None
+                if sp is not None:
+                    mats = jax.lax.with_sharding_constraint(mats, sp)
+                fn = lambda x: _newton_schulz(x, ns_steps, ns_dtype)  # noqa
+                for _ in range(m.ndim - 3):
+                    fn = jax.vmap(fn)
+                if m.ndim >= 3:
+                    # sequential over the outermost (layer) axis: bounds the
+                    # live gram memory to one layer's worth
+                    o = jax.lax.map(fn, mats)
+                else:
+                    o = fn(mats)
+                scale = jnp.sqrt(jnp.maximum(1.0, m.shape[-2] / m.shape[-1]))
+                return (p.astype(jnp.float32) - lr * scale *
+                        o.astype(jnp.float32)).astype(p.dtype)
+            return (p.astype(jnp.float32) -
+                    adamw_lr * m.astype(jnp.float32)).astype(p.dtype)
+        return _tree_map(upd, params, mu), {"mu": mu, "count": c}
+
+    return Optimizer(init, update)
+
+
+REGISTRY = {
+    "adamw": adamw,
+    "adagrad": adagrad,
+    "adafactor": adafactor,
+    "muon": muon,
+}
+
+
+def make(name: str, **kw) -> Optimizer:
+    return REGISTRY[name](**kw)

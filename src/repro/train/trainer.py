@@ -1,0 +1,172 @@
+"""Fault-tolerant training loop.
+
+Features (see DESIGN.md §4):
+  * gradient accumulation via ``lax.scan`` over microbatches;
+  * optional int8 gradient compression round-trip (models the compressed
+    cross-pod all-reduce);
+  * periodic + SIGTERM-safe checkpointing (atomic rename), resume-from-latest
+    with deterministic data skipping (batches are a pure function of step);
+  * straggler watch: per-step wall-time EWMA; steps slower than
+    ``straggler_factor``x the EWMA are counted and logged — on a real fleet
+    this signal feeds the reconfiguration hook ``on_straggler``;
+  * elastic restart: checkpoints are mesh-agnostic (train/checkpoint.py),
+    so a resumed job may run on a different device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import signal
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import checkpoint as ckpt_lib
+from .compression import compress_tree
+from .optimizer import Optimizer
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    grad_accum: int = 1
+    compress_grads: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    ckpt_chunks: int = 1
+    log_every: int = 10
+    straggler_factor: float = 3.0
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    cfg: TrainerConfig,
+                    micro_param_layout: Optional[Callable] = None) -> Callable:
+    """loss_fn(params, batch) -> scalar. Returns step fn
+    (state, batch) -> (state, metrics). With grad_accum > 1, ``batch`` leaves
+    must have a leading (grad_accum, ...) microbatch axis.
+
+    ``micro_param_layout``: optional params -> params layout transform
+    applied ONCE before the microbatch scan (e.g. drop the FSDP axis so the
+    weight all-gather is hoisted out of the loop instead of re-issued every
+    microbatch — the LM-train collective bound in EXPERIMENTS.md §Perf).
+    Gradients still accumulate (and the optimizer still runs) in the
+    original sharded layout."""
+
+    def compute_grads(params, batch):
+        if cfg.grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        pfull = micro_param_layout(params) if micro_param_layout else params
+
+        def micro(carry, mb):
+            acc_loss, acc_g = carry
+            loss, g = jax.value_and_grad(loss_fn)(pfull, mb)
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(micro, (jnp.float32(0), zeros),
+                                           batch)
+        inv = 1.0 / cfg.grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, grads = compute_grads(state.params, batch)
+        if cfg.compress_grads:
+            grads = compress_tree(grads)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return (TrainState(state.step + 1, new_params, new_opt),
+                {"loss": loss, "grad_norm": gnorm})
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, optimizer: Optimizer,
+                 make_batch: Callable[[int], Any], cfg: TrainerConfig,
+                 init_params: Any,
+                 on_straggler: Optional[Callable[[int, float], None]] = None,
+                 jit: bool = True):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.make_batch = make_batch
+        self.on_straggler = on_straggler
+        step_fn = make_train_step(loss_fn, optimizer, cfg)
+        self.step_fn = jax.jit(step_fn) if jit else step_fn
+        self.state = TrainState(jnp.int32(0), init_params,
+                                optimizer.init(init_params))
+        self._stop = False
+        self.metrics_log: list[dict] = []
+        self.straggler_steps = 0
+
+    # -- fault tolerance -----------------------------------------------------
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._stop = True  # finish current step, checkpoint, exit
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def save(self):
+        if self.cfg.ckpt_dir is None:
+            return
+        tree = {"params": self.state.params, "opt": self.state.opt_state}
+        ckpt_lib.save(self.cfg.ckpt_dir, tree, int(self.state.step),
+                      n_chunks=self.cfg.ckpt_chunks)
+
+    def maybe_resume(self) -> int:
+        if self.cfg.ckpt_dir is None:
+            return 0
+        step = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return 0
+        tree_like = {"params": self.state.params, "opt": self.state.opt_state}
+        tree, step = ckpt_lib.restore(self.cfg.ckpt_dir, tree_like)
+        params = jax.tree.map(lambda like, a: jnp.asarray(a, like.dtype),
+                              self.state.params, tree["params"])
+        opt = jax.tree.map(lambda like, a: jnp.asarray(a, like.dtype),
+                           self.state.opt_state, tree["opt"])
+        self.state = TrainState(jnp.int32(step), params, opt)
+        return step
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, n_steps: int) -> dict:
+        self._install_sigterm()
+        start = self.maybe_resume()   # deterministic skip: batches keyed by step
+        ewma = None
+        for step in range(start, n_steps):
+            if self._stop:
+                break
+            batch = self.make_batch(step)
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if dt > self.cfg.straggler_factor * ewma and step > start + 2:
+                self.straggler_steps += 1
+                if self.on_straggler:
+                    self.on_straggler(step, dt)
+            metrics.update(step=step + 1, sec=dt)
+            if (step + 1) % self.cfg.log_every == 0 or step == n_steps - 1:
+                self.metrics_log.append(metrics)
+            if self.cfg.ckpt_dir and (step + 1) % self.cfg.ckpt_every == 0:
+                self.save()
+        if self._stop:
+            self.save()
+        return {"final_step": int(self.state.step),
+                "interrupted": self._stop,
+                "stragglers": self.straggler_steps,
+                "log": self.metrics_log}

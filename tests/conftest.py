@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the 1 real CPU
+device (the 512-device override belongs to launch/dryrun.py ONLY)."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core import build_index  # noqa: E402
+from repro.data.synthetic import make_corpus  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return make_corpus(0, n_docs=600, cap=24, min_len=8, n_queries=24,
+                       n_topics=24)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_corpus):
+    idx, meta = build_index(
+        jax.random.PRNGKey(0), small_corpus.doc_embs, small_corpus.doc_lens,
+        n_centroids=128, m=8, nbits=4, plaid_b=2, kmeans_iters=3)
+    return idx, meta
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,94 @@
+"""Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
+in Pallas interpret mode (the CPU-validation target per the assignment)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (n_q, n_c, n_docs, cap, m, ksub)
+    (32, 256, 64, 16, 8, 16),
+    (32, 640, 100, 24, 16, 16),
+    (16, 512, 130, 32, 8, 256),   # n_q < 32; non-multiple doc count
+    (4, 1024, 33, 8, 4, 256),     # MIND-like n_q=4
+]
+
+
+def _inputs(n_q, n_c, n_docs, cap, m, ksub, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    cs = jnp.asarray(rng.normal(size=(n_q, n_c)).astype(dtype))
+    codes = jnp.asarray(rng.integers(0, n_c + 1, size=(n_docs, cap)
+                                     ).astype(np.int32))
+    lens = rng.integers(1, cap + 1, size=n_docs)
+    mask = jnp.asarray(np.arange(cap)[None, :] < lens[:, None])
+    lut = jnp.asarray(rng.normal(size=(n_q, m, ksub)).astype(dtype))
+    res = jnp.asarray(rng.integers(0, ksub, size=(n_docs, cap, m)
+                                   ).astype(np.uint8))
+    return cs, codes, mask, lut, res
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("th", [-0.5, 0.0, 0.5, 2.0])
+def test_bitpack(shape, th):
+    cs, *_ = _inputs(*shape)
+    np.testing.assert_array_equal(np.asarray(ops.bitpack(cs, th)),
+                                  np.asarray(ref.bitpack(cs, th)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_bitfilter(shape):
+    cs, codes, mask, _, _ = _inputs(*shape)
+    bits = ref.bitpack(cs, 0.3)
+    np.testing.assert_array_equal(
+        np.asarray(ops.bitfilter(bits, codes, mask)),
+        np.asarray(ref.bitfilter(bits, codes, mask)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_cinter(shape):
+    cs, codes, mask, _, _ = _inputs(*shape)
+    out = ops.cinter(cs.T, codes, mask)
+    exp = ref.cinter(cs.T, codes, mask)
+    # fp32 sum-of-maxes: kernel accumulates per-block, ref in one reduce —
+    # accumulation order differs, so allow normal fp32 slack.
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("th_r", [None, 0.3])
+def test_pqscore(shape, th_r):
+    cs, codes, mask, lut, res = _inputs(*shape)
+    out = ops.pqscore(cs.T, lut, codes, res, mask, th_r)
+    exp = ref.pqscore(cs.T, lut, codes, res, mask, th_r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_bitpack_block_boundary():
+    """n_c not a multiple of the block: padding must not flip bits."""
+    cs, *_ = _inputs(32, 700, 8, 8, 4, 16)
+    out = ops.bitpack(cs, 0.1)
+    exp = ref.bitpack(cs, 0.1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_pqscore_bf16_tolerance():
+    cs, codes, mask, lut, res = _inputs(32, 256, 32, 16, 8, 16)
+    out = ops.pqscore(cs.T.astype(jnp.bfloat16).astype(jnp.float32), lut,
+                      codes, res, mask, 0.3)
+    exp = ref.pqscore(cs.T.astype(jnp.bfloat16).astype(jnp.float32), lut,
+                      codes, res, mask, 0.3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_empty_docs_masked_out():
+    """A doc with zero valid tokens must score popcount 0 / NEG maxsim."""
+    cs, codes, mask, lut, res = _inputs(32, 256, 16, 8, 4, 16)
+    mask = mask.at[3].set(False)
+    bits = ref.bitpack(cs, 0.0)
+    f = np.asarray(ops.bitfilter(bits, codes, mask))
+    assert f[3] == 0

@@ -1,0 +1,243 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitvector, residual
+from repro.core.pq import PQCodebooks, build_lut, decode_pq, encode_pq, lut_score
+from repro.train.compression import dequantize_int8, quantize_int8
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# C1: the stacked bit vector is EXACTLY the set-membership structure (Eq. 4)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 32), st.integers(2, 64),
+       st.floats(-0.9, 0.9))
+def test_bitvector_equals_set_semantics(seed, n_q, n_c, th):
+    rng = np.random.default_rng(seed)
+    cs = rng.uniform(-1, 1, size=(n_q, n_c)).astype(np.float32)
+    bits = np.asarray(bitvector.build_bitvectors(jnp.asarray(cs), th))
+    # brute-force close_i sets
+    for c in range(n_c):
+        for i in range(n_q):
+            assert bool(bits[c] >> i & 1) == bool(cs[i, c] > th)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(4, 48),
+       st.integers(1, 12))
+def test_filter_score_counts_covered_terms(seed, n_q, n_c, cap):
+    """F(P,q) == #{i : exists token whose centroid is in close_i} (Eq. 4)."""
+    rng = np.random.default_rng(seed)
+    cs = rng.uniform(-1, 1, size=(n_q, n_c)).astype(np.float32)
+    th = 0.2
+    codes = rng.integers(0, n_c, size=(5, cap)).astype(np.int32)
+    lens = rng.integers(1, cap + 1, size=5)
+    mask = np.arange(cap)[None] < lens[:, None]
+    bits = bitvector.build_bitvectors(jnp.asarray(cs), th)
+    f = np.asarray(bitvector.filter_score(bits, jnp.asarray(codes),
+                                          jnp.asarray(mask)))
+    for p in range(5):
+        close = {(i, c) for i in range(n_q) for c in range(n_c)
+                 if cs[i, c] > th}
+        toks = set(codes[p, :lens[p]].tolist())
+        expected = sum(1 for i in range(n_q)
+                       if any((i, c) in close for c in toks))
+        assert f[p] == expected
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_filter_monotone_in_threshold(seed):
+    """Raising th can only shrink close_i sets -> F non-increasing."""
+    rng = np.random.default_rng(seed)
+    cs = jnp.asarray(rng.uniform(-1, 1, size=(8, 32)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 32, size=(7, 9)).astype(np.int32))
+    mask = jnp.ones((7, 9), bool)
+    f_lo = np.asarray(bitvector.filter_score(
+        bitvector.build_bitvectors(cs, 0.1), codes, mask))
+    f_hi = np.asarray(bitvector.filter_score(
+        bitvector.build_bitvectors(cs, 0.5), codes, mask))
+    assert (f_hi <= f_lo).all()
+    assert (f_lo <= 8).all() and (f_lo >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# C3: PQ invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]),
+       st.sampled_from([4, 16]))
+def test_pq_lut_score_equals_decode_dot(seed, m, ksub):
+    """LUT scoring == dot with decoded vectors (the no-decompression claim)."""
+    rng = np.random.default_rng(seed)
+    d = m * 4
+    cb = PQCodebooks(jnp.asarray(
+        rng.normal(size=(m, ksub, 4)).astype(np.float32)))
+    x = jnp.asarray(rng.normal(size=(20, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    codes = encode_pq(x, cb)
+    via_lut = np.asarray(lut_score(build_lut(q, cb), codes))
+    via_decode = np.asarray(decode_pq(codes, cb) @ q)
+    np.testing.assert_allclose(via_lut, via_decode, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_pq_encode_is_nearest_codeword(seed):
+    rng = np.random.default_rng(seed)
+    m, ksub, dsub = 4, 8, 3
+    cb = PQCodebooks(jnp.asarray(
+        rng.normal(size=(m, ksub, dsub)).astype(np.float32)))
+    x = rng.normal(size=(10, m * dsub)).astype(np.float32)
+    codes = np.asarray(encode_pq(jnp.asarray(x), cb))
+    for n in range(10):
+        for s in range(m):
+            sub = x[n, s * dsub:(s + 1) * dsub]
+            d2 = ((np.asarray(cb.codebooks)[s] - sub) ** 2).sum(-1)
+            assert d2[codes[n, s]] <= d2.min() + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# PLAID b-bit codec: pack/unpack roundtrip
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]),
+       st.integers(1, 8))
+def test_residual_pack_roundtrip(seed, b, groups):
+    rng = np.random.default_rng(seed)
+    d = groups * (8 // b)
+    codes = rng.integers(0, 1 << b, size=(6, d)).astype(np.uint8)
+    packed = residual.pack_codes(jnp.asarray(codes), b)
+    assert packed.shape == (6, d * b // 8)
+    out = np.asarray(residual.unpack_codes(packed, b, d))
+    np.testing.assert_array_equal(out, codes)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2]))
+def test_residual_codec_error_bounded_by_buckets(seed, b):
+    rng = np.random.default_rng(seed)
+    r = rng.normal(scale=0.2, size=(512, 16)).astype(np.float32)
+    codec = residual.train_residual_codec(jnp.asarray(r), b)
+    dec = np.asarray(residual.decode_residual(
+        residual.encode_residual(jnp.asarray(r), codec), codec, 16))
+    # reconstruction is within the spread of adjacent bucket weights
+    w = np.asarray(codec.bucket_weights)
+    max_gap = np.max(np.abs(r - dec))
+    assert max_gap <= np.abs(r).max() + 1e-6
+    # quantizing the decoded values again is a fixed point
+    dec2 = np.asarray(residual.decode_residual(
+        residual.encode_residual(jnp.asarray(dec), codec), codec, 16))
+    np.testing.assert_allclose(dec, dec2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+def test_int8_compression_relative_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray((rng.normal(size=(64,)) * scale).astype(np.float32))
+    q, s = quantize_int8(g)
+    out = dequantize_int8(q, s)
+    err = np.abs(np.asarray(out) - np.asarray(g)).max()
+    assert err <= float(s) * 0.5 + 1e-9  # half-ULP of the int8 grid
+
+
+# ---------------------------------------------------------------------------
+# C4 (TPU-adapted): per-token compaction of the PQ late interaction
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 32), st.integers(4, 24),
+       st.sampled_from([4, 8, 16]))
+def test_compact_equals_full_when_buffer_covers_cap(seed, n_q, cap, m):
+    """cap_c == cap must reproduce Eq. 6 EXACTLY (no approximation)."""
+    from repro.core import interaction as I
+    rng = np.random.default_rng(seed)
+    n_c, docs, ksub = 128, 12, 256
+    cs_t = jnp.asarray(rng.normal(size=(n_c, n_q)).astype(np.float32)) * 0.4
+    codes = jnp.asarray(rng.integers(0, n_c + 1, (docs, cap)).astype(np.int32))
+    lens = rng.integers(1, cap + 1, docs)
+    mask = jnp.asarray(np.arange(cap)[None, :] < lens[:, None])
+    lut = jnp.asarray(rng.normal(size=(n_q, m, ksub)).astype(np.float32)) * .1
+    # uint8 res codes: regression for the flat-LUT uint8 index-offset wrap
+    res = jnp.asarray(rng.integers(0, ksub, (docs, cap, m)).astype(np.uint8))
+    full = I.late_interaction_pq(cs_t, lut, codes, res, mask, 0.3)
+    comp = I.late_interaction_pq_compact(cs_t, lut, codes, res, mask, 0.3, cap)
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(full), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_compact_masked_terms_exact_when_kept_fit(seed):
+    """If every kept token fits the buffer, terms with J̄_i nonempty score
+    EXACTLY as Eq. 6; only empty-J̄ fallback terms may be approximated."""
+    from repro.core import interaction as I
+    rng = np.random.default_rng(seed)
+    n_q, n_c, docs, cap, m, ksub = 8, 64, 8, 16, 4, 16
+    th_r = 0.5
+    cs_t = jnp.asarray(rng.normal(size=(n_c, n_q)).astype(np.float32)) * 0.4
+    codes = jnp.asarray(rng.integers(0, n_c, (docs, cap)).astype(np.int32))
+    mask = jnp.ones((docs, cap), bool)
+    lut = jnp.asarray(rng.normal(size=(n_q, m, ksub)).astype(np.float32)) * .1
+    res = jnp.asarray(rng.integers(0, ksub, (docs, cap, m)).astype(np.uint8))
+    row_max = np.asarray(cs_t).max(1)
+    kept = (row_max[np.asarray(codes)] > th_r)
+    cap_c = max(int(kept.sum(1).max()), 1)
+    if cap_c >= cap:
+        return  # nothing compacted, covered by the exactness test above
+    centroid = np.asarray(I.gather_centroid_scores(cs_t, codes))
+    keep_t = centroid > th_r                      # (docs, cap, n_q)
+    full = np.asarray(I.late_interaction_pq(cs_t, lut, codes, res, mask, th_r))
+    comp = np.asarray(I.late_interaction_pq_compact(
+        cs_t, lut, codes, res, mask, th_r, cap_c))
+    # docs where EVERY term has a kept token -> fully exact
+    all_masked = keep_t.any(axis=1).all(axis=-1)
+    if all_masked.any():
+        np.testing.assert_allclose(comp[all_masked], full[all_masked],
+                                   rtol=1e-5, atol=1e-5)
+    # fallback terms can only lower the score (max over a token subset)
+    assert (comp <= full + 1e-4).all()
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch modes: grouped (GShard) == capacity-gather at ample capacity
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]),
+       st.sampled_from([1, 2]), st.sampled_from([1, 2, 4]))
+def test_moe_grouped_matches_gather_at_ample_capacity(seed, e, k, groups):
+    """With capacity >= tokens-per-group, no tokens drop in either mode and
+    the two dispatch strategies compute the SAME function."""
+    import dataclasses
+    from repro.models import moe
+    from repro.models.layers import ModelConfig
+    rng = np.random.default_rng(seed)
+    d, f, b, s = 8, 16, 2, 8
+    cfg = ModelConfig(name="m", n_experts=e, top_k=min(k, e),
+                      capacity_factor=100.0, d_model=d, d_ff=f,
+                      dtype=jnp.float32)
+    p = {"router": jnp.asarray(rng.normal(size=(d, e)).astype(np.float32)),
+         "wi_gate": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)) * .1,
+         "wi_up": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)) * .1,
+         "wo": jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32)) * .1}
+    x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+    out_g, aux_g = moe.moe_block(p, x, cfg)
+    cfg2 = dataclasses.replace(cfg, moe_groups=groups)
+    out_h, aux_h = moe.moe_block(p, x, cfg2)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_h),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(aux_g), float(aux_h), rtol=1e-5)
