@@ -1,8 +1,13 @@
 """Paper Fig. 1 — breakdown of PLAID query latency across its four phases
 (retrieval, filtering, decompression, late interaction), for k = 10/100/1000,
-plus the same breakdown for EMVB's four phases for contrast.
+plus the same breakdown for EMVB's four phases for contrast, plus the
+fused-vs-unfused phase-1/2 comparison: the ``kernels/prefilter.py``
+megakernel (one launch, no full-corpus intermediates) against the separate
+phase1_candidates + phase2_prefilter launches it replaces.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -45,6 +50,17 @@ def run() -> list[str]:
         for name, t in (("candidates", e1), ("bitvector_prefilter", e2),
                         ("centroid_interaction", e3), ("pq_maxsim", e4)):
             rows.append(row(f"fig1,emvb,k={k},{name}", t * 1e6))
+
+        # fused-vs-unfused phases 1-2: the prefilter megakernel in one
+        # launch vs the two separate phase entry points above
+        fcfg = dataclasses.replace(ecfg, use_kernels=True,
+                                   fused_prefilter=True)
+        ucfg = dataclasses.replace(fcfg, fused_prefilter=False)
+        ef = time_fn(lambda: emvb.phase12_prefilter(idx, q, fcfg))
+        eu = time_fn(lambda: emvb.phase12_prefilter(idx, q, ucfg))
+        rows.append(row(f"fig1,emvb,k={k},p12_unfused_ref", (e1 + e2) * 1e6))
+        rows.append(row(f"fig1,emvb,k={k},p12_unfused_kernels", eu * 1e6))
+        rows.append(row(f"fig1,emvb,k={k},p12_fused", ef * 1e6))
     return rows
 
 

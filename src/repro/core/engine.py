@@ -10,6 +10,19 @@ Phases (single query; batched via vmap):
 Every phase has fixed shapes. ``EngineConfig`` is hashable and passed as a
 static jit argument. The same functions run single-device (benchmarks/tests)
 and under shard_map with per-shard local indices (launch/serve.py).
+
+The public phase-split entry points (``phase1_candidates`` …
+``phase4_late_interaction``, plus the fused ``phase12_prefilter``) and
+``retrieve`` share the SAME internal ``_phaseN`` helpers, so composing the
+split phases reproduces ``retrieve`` exactly by construction — the invariant
+tests/test_engine_phases.py asserts.
+
+Kernel dispatch: ``use_kernels`` selects the Pallas kernels over the jnp
+reference math; ``fused_prefilter`` additionally replaces the four-launch
+phase 1b-2 sequence (bitpack -> bitfilter -> mask -> top_k, with full-corpus
+intermediates) by the single ``kernels/prefilter.py`` megakernel;
+``kernel_interpret`` picks Pallas interpret mode (CPU) vs compiled Mosaic
+(TPU) — it replaces the old mutable ``kernels.ops.INTERPRET`` module global.
 """
 from __future__ import annotations
 
@@ -34,7 +47,14 @@ class EngineConfig:
     n_filter: int = 512      # docs surviving the bit-vector pre-filter
     n_docs: int = 64         # docs entering PQ late interaction
     k: int = 10              # final results
-    use_kernels: bool = False  # Pallas kernels (interpret on CPU) vs jnp ref
+    use_kernels: bool = False  # Pallas kernels vs jnp ref
+    # With use_kernels: run phases 1b-2 as the single fused megakernel
+    # (kernels/prefilter.py) instead of bitpack -> bitfilter -> mask -> top_k
+    # with full-corpus intermediates. False keeps the four separate kernels
+    # (the benchmarks time both).
+    fused_prefilter: bool = True
+    # Pallas interpret mode (CPU validation) vs compiled Mosaic (TPU).
+    kernel_interpret: bool = True
     # 'score_all' evaluates F on every (local) doc masked by the candidate
     # bitmap (TPU-friendly); 'compact' gathers candidates into a fixed buffer
     # of size cand_cap first (closer to the paper's CPU loop).
@@ -53,6 +73,13 @@ class EngineConfig:
 class RetrievalResult(NamedTuple):
     scores: jax.Array   # (B, k)
     doc_ids: jax.Array  # (B, k) int32
+
+
+def _kops(cfg: EngineConfig):
+    if not cfg.use_kernels:
+        return None
+    from repro.kernels import ops as kops
+    return kops
 
 
 # ---------------------------------------------------------------------------
@@ -79,39 +106,43 @@ def candidate_bitmap(ivf: jax.Array, ivf_lens: jax.Array, probe_ids: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Full pipeline (single query)
+# Internal phase helpers — single source of truth for retrieve() AND the
+# public phase-split entry points.
 # ---------------------------------------------------------------------------
 
-def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
-                  cfg: EngineConfig) -> RetrievalResult:
-    n_docs_corpus = index.codes.shape[0]
-    n_c = index.centroids.shape[0]
-
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-    else:
-        kops = None
-
-    # ---- phase 1 ----
-    cs = centroid_scores(q, index.centroids, cfg.cs_dtype)       # (n_q, n_c)
+def _phase1(q: jax.Array, index: PackedIndex, cfg: EngineConfig):
+    """-> (cs (n_q, n_c), bits (n_c,) u32, bitmap (n_docs,) bool)."""
+    kops = _kops(cfg)
+    cs = centroid_scores(q, index.centroids, cfg.cs_dtype)
     if kops is not None:
-        bits = kops.bitpack(cs, cfg.th)
+        bits = kops.bitpack(cs, cfg.th, interpret=cfg.kernel_interpret)
     else:
-        bits = bitvector.build_bitvectors(cs, cfg.th)            # (n_c,) u32
+        bits = bitvector.build_bitvectors(cs, cfg.th)
     probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
     bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
-                              n_docs_corpus)
+                              index.codes.shape[0])
+    return cs, bits, bitmap
 
-    # ---- phase 2: bit-vector pre-filter ----
+
+def _compact_candidates(bitmap: jax.Array, cfg: EngineConfig):
+    """Fixed-size candidate buffer (ids of bitmap==True, arbitrary order)."""
+    _, cand_ids = jax.lax.top_k(bitmap.astype(jnp.int32), cfg.cand_cap)
+    cand_ids = cand_ids.astype(jnp.int32)
+    cand_valid = jnp.take(bitmap, cand_ids)
+    return cand_ids, cand_valid
+
+
+def _phase2(index: PackedIndex, token_mask: jax.Array, bits: jax.Array,
+            bitmap: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Unfused bit-vector pre-filter -> sel1 (n_filter,) int32."""
+    kops = _kops(cfg)
     if cfg.candidate_mode == "compact":
-        # Fixed-size candidate buffer (ids of bitmap==True, arbitrary order).
-        _, cand_ids = jax.lax.top_k(bitmap.astype(jnp.int32), cfg.cand_cap)
-        cand_ids = cand_ids.astype(jnp.int32)
-        cand_valid = jnp.take(bitmap, cand_ids)
+        cand_ids, cand_valid = _compact_candidates(bitmap, cfg)
         c_codes = jnp.take(index.codes, cand_ids, axis=0)
         c_mask = jnp.take(token_mask, cand_ids, axis=0) & cand_valid[:, None]
         if kops is not None:
-            f = kops.bitfilter(bits, c_codes, c_mask)
+            f = kops.bitfilter(bits, c_codes, c_mask,
+                               interpret=cfg.kernel_interpret)
         else:
             f = bitvector.filter_score(bits, c_codes, c_mask)
         f = jnp.where(cand_valid, f, -1)
@@ -119,25 +150,65 @@ def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
         sel1 = jnp.take(cand_ids, sel1_local)
     else:
         if kops is not None:
-            f = kops.bitfilter(bits, index.codes, token_mask)
+            f = kops.bitfilter(bits, index.codes, token_mask,
+                               interpret=cfg.kernel_interpret)
         else:
             f = bitvector.filter_score(bits, index.codes, token_mask)
         f = jnp.where(bitmap, f, -1)                             # (n_docs,)
         _, sel1 = jax.lax.top_k(f, cfg.n_filter)
-    sel1 = sel1.astype(jnp.int32)
+    return sel1.astype(jnp.int32)
 
-    # ---- phase 3: centroid interaction on survivors ----
+
+def _phase12(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
+             cfg: EngineConfig):
+    """Phases 1-2 -> (cs, sel1). Dispatches to the fused megakernel when
+    configured; otherwise composes _phase1 + _phase2."""
+    kops = _kops(cfg)
+    if kops is None or not cfg.fused_prefilter:
+        cs, bits, bitmap = _phase1(q, index, cfg)
+        return cs, _phase2(index, token_mask, bits, bitmap, cfg)
+    # Fused path: the bit table never leaves the kernel; no full-corpus f.
+    cs = centroid_scores(q, index.centroids, cfg.cs_dtype)
+    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
+    bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
+                              index.codes.shape[0])
+    if cfg.candidate_mode == "compact":
+        cand_ids, cand_valid = _compact_candidates(bitmap, cfg)
+        c_codes = jnp.take(index.codes, cand_ids, axis=0)
+        c_mask = jnp.take(token_mask, cand_ids, axis=0)
+        _, sel1_local, _ = kops.prefilter(cs, cfg.th, c_codes, c_mask,
+                                          cand_valid, cfg.n_filter,
+                                          interpret=cfg.kernel_interpret)
+        sel1 = jnp.take(cand_ids, sel1_local)
+    else:
+        _, sel1, _ = kops.prefilter(cs, cfg.th, index.codes, token_mask,
+                                    bitmap, cfg.n_filter,
+                                    interpret=cfg.kernel_interpret)
+    return cs, sel1.astype(jnp.int32)
+
+
+def _phase3(index: PackedIndex, token_mask: jax.Array, cs: jax.Array,
+            sel1: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Centroid interaction on survivors -> sel2 (n_docs,) int32."""
+    kops = _kops(cfg)
     cs_t = cs.T                                                  # (n_c, n_q)
     s1_codes = jnp.take(index.codes, sel1, axis=0)               # (nf, cap)
     s1_mask = jnp.take(token_mask, sel1, axis=0)
     if kops is not None:
-        sbar = kops.cinter(cs_t, s1_codes, s1_mask)
+        sbar = kops.cinter(cs_t, s1_codes, s1_mask,
+                           interpret=cfg.kernel_interpret)
     else:
         sbar = interaction.centroid_interaction(cs_t, s1_codes, s1_mask)
     _, sel2_local = jax.lax.top_k(sbar, cfg.n_docs)
-    sel2 = jnp.take(sel1, sel2_local)                            # (nd,)
+    return jnp.take(sel1, sel2_local)                            # (nd,)
 
-    # ---- phase 4: PQ late interaction (+ Eq. 6 term filter) ----
+
+def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
+            cs: jax.Array, sel2: jax.Array, cfg: EngineConfig):
+    """PQ late interaction (+ Eq. 6 term filter) -> (scores, ids), (k,)."""
+    kops = _kops(cfg)
+    n_c = index.centroids.shape[0]
+    cs_t = cs.T
     pq = index.pq
     q_rot = q @ index.opq_rotation
     lut = build_lut(q_rot, pq)                                   # (n_q, m, K)
@@ -145,7 +216,8 @@ def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
     s2_res = jnp.take(index.res_codes, sel2, axis=0)
     s2_mask = jnp.take(token_mask, sel2, axis=0)
     if kops is not None:
-        scores = kops.pqscore(cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r)
+        scores = kops.pqscore(cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r,
+                              interpret=cfg.kernel_interpret)
     elif cfg.compact_cap is not None and cfg.th_r is not None:
         scores = interaction.late_interaction_pq_compact(
             cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, cfg.compact_cap)
@@ -161,7 +233,19 @@ def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
         scores = interaction.late_interaction_pq(
             cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, centroid=centroid)
     top_scores, top_local = jax.lax.top_k(scores, cfg.k)
-    return RetrievalResult(top_scores, jnp.take(sel2, top_local))
+    return top_scores, jnp.take(sel2, top_local)
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline (single query)
+# ---------------------------------------------------------------------------
+
+def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
+                  cfg: EngineConfig) -> RetrievalResult:
+    cs, sel1 = _phase12(q, index, token_mask, cfg)
+    sel2 = _phase3(index, token_mask, cs, sel1, cfg)
+    top_scores, top_ids = _phase4(index, token_mask, q, cs, sel2, cfg)
+    return RetrievalResult(top_scores, top_ids)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -173,49 +257,36 @@ def retrieve(index: PackedIndex, queries: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Phase-split entry points (benchmarks: paper Fig. 1-style breakdown)
+# Phase-split entry points (benchmarks: paper Fig. 1-style breakdown).
+# Thin jit wrappers over the SAME _phaseN internals retrieve() composes.
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase1_candidates(index: PackedIndex, q: jax.Array, cfg: EngineConfig):
-    cs = centroid_scores(q, index.centroids)
-    bits = bitvector.build_bitvectors(cs, cfg.th)
-    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
-    bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
-                              index.codes.shape[0])
-    return cs, bits, bitmap
+    return _phase1(q, index, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase2_prefilter(index: PackedIndex, bits: jax.Array, bitmap: jax.Array,
                      cfg: EngineConfig):
-    token_mask = index.token_mask()
-    f = bitvector.filter_score(bits, index.codes, token_mask)
-    f = jnp.where(bitmap, f, -1)
-    _, sel1 = jax.lax.top_k(f, cfg.n_filter)
-    return sel1.astype(jnp.int32)
+    return _phase2(index, index.token_mask(), bits, bitmap, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def phase12_prefilter(index: PackedIndex, q: jax.Array, cfg: EngineConfig):
+    """Fused phases 1-2 -> (cs, sel1); with a fused-prefilter config this is
+    the single megakernel launch the breakdown benchmark times against the
+    phase1_candidates + phase2_prefilter pair."""
+    return _phase12(q, index, index.token_mask(), cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
                                 sel1: jax.Array, cfg: EngineConfig):
-    token_mask = index.token_mask()
-    sbar = interaction.centroid_interaction(
-        cs.T, jnp.take(index.codes, sel1, axis=0),
-        jnp.take(token_mask, sel1, axis=0))
-    _, sel2_local = jax.lax.top_k(sbar, cfg.n_docs)
-    return jnp.take(sel1, sel2_local)
+    return _phase3(index, index.token_mask(), cs, sel1, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase4_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
                             sel2: jax.Array, cfg: EngineConfig):
-    token_mask = index.token_mask()
-    lut = build_lut(q @ index.opq_rotation, index.pq)
-    scores = interaction.late_interaction_pq(
-        cs.T, lut,
-        jnp.take(index.codes, sel2, axis=0),
-        jnp.take(index.res_codes, sel2, axis=0),
-        jnp.take(token_mask, sel2, axis=0), cfg.th_r)
-    top_scores, top_local = jax.lax.top_k(scores, cfg.k)
-    return top_scores, jnp.take(sel2, top_local)
+    return _phase4(index, index.token_mask(), q, cs, sel2, cfg)

@@ -1,8 +1,10 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only; on real
-TPU hardware set ``repro.kernels.ops.INTERPRET = False`` (or pass through the
-engine config) to compile the Mosaic kernels.
+``interpret`` selects Pallas interpret mode (the CPU validation target for
+this container) vs compiled Mosaic on real TPU hardware.  It is a plain
+keyword argument plumbed from ``EngineConfig.kernel_interpret`` — there is no
+module-level mutable state (the former ``INTERPRET`` global leaked one
+process-wide choice into every caller and could not be jit-cached per mode).
 """
 from __future__ import annotations
 
@@ -12,24 +14,33 @@ from . import bitpack as _bitpack
 from . import bitfilter as _bitfilter
 from . import cinter as _cinter
 from . import pqscore as _pqscore
-
-INTERPRET = True
-
-
-def bitpack(cs: jax.Array, th: float) -> jax.Array:
-    return _bitpack.bitpack(cs, th, interpret=INTERPRET)
+from . import prefilter as _prefilter
 
 
-def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array) -> jax.Array:
-    return _bitfilter.bitfilter(bits, codes, token_mask, interpret=INTERPRET)
+def bitpack(cs: jax.Array, th: float, *, interpret: bool = True) -> jax.Array:
+    return _bitpack.bitpack(cs, th, interpret=interpret)
 
 
-def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array) -> jax.Array:
-    return _cinter.cinter(cs_t, codes, token_mask, interpret=INTERPRET)
+def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
+              interpret: bool = True) -> jax.Array:
+    return _bitfilter.bitfilter(bits, codes, token_mask, interpret=interpret)
+
+
+def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
+           interpret: bool = True) -> jax.Array:
+    return _cinter.cinter(cs_t, codes, token_mask, interpret=interpret)
 
 
 def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None) -> jax.Array:
+            th_r: float | None, *, interpret: bool = True) -> jax.Array:
     return _pqscore.pqscore(cs_t, lut, codes, res_codes, token_mask, th_r,
-                            interpret=INTERPRET)
+                            interpret=interpret)
+
+
+def prefilter(cs: jax.Array, th: float, codes: jax.Array,
+              token_mask: jax.Array, bitmap: jax.Array, n_filter: int, *,
+              interpret: bool = True):
+    """Fused phases 1b-2 megakernel -> (scores, doc_ids, bits)."""
+    return _prefilter.prefilter(cs, th, codes, token_mask, bitmap, n_filter,
+                                interpret=interpret)

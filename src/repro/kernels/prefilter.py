@@ -1,0 +1,143 @@
+"""Fused Pallas megakernel: bit-vector build + candidate masking + pre-filter
+scoring + running top-n_filter selection (EMVB phases 1b-2 in ONE kernel).
+
+The seed engine ran this as four kernels with full-corpus intermediates:
+
+    bitpack(CS) -> bits        (n_c,)  HBM round-trip
+    bitfilter(bits, codes)     (n_docs,) full-corpus f array in HBM
+    where(bitmap, f, -1)       second full-corpus pass
+    top_k(f, n_filter)         third full-corpus pass
+
+This kernel streams document blocks once.  Grid step 0 packs the stacked bit
+vectors from the (VMEM-resident) centroid-score matrix into an on-chip table;
+every step then gathers the packed words for its (BD, cap) code block, masks
+by token validity AND the candidate bitmap, popcounts (Eq. 4), and merges the
+block's scores into a running top-``n_filter`` kept on chip.  Nothing of
+size n_docs ever touches HBM — the only outputs are the (n_filter,) winners
+and the (n_c,) bit table (a free byproduct kept for API compatibility).
+
+Selection is EXACTLY ``top_k(where(bitmap, F, -1), n_filter)`` including
+tie-breaking: scores and doc ids are packed into one monotonic int32 key
+
+    key = (f + 1) << ID_BITS  |  (MAX_ID - doc_id)
+
+so "higher f, then lower doc id" is plain integer order and the running merge
+is a single ``top_k`` over (n_filter + BD) keys.  f ranges over [-1, 32]
+(34 values) which leaves ID_BITS = 25 id bits inside int32: up to 2^25
+(~33.5M) documents per shard — far above any per-shard corpus slice here.
+
+TPU notes: the grid is sequential, so the step-0 bit table and the running
+keys live in revisited output blocks (the standard Pallas accumulator
+pattern).  The merge's ``lax.top_k`` is the one op a Mosaic build would
+replace with a bitonic merge over the 8x128 lanes; everything else is VPU
+compare/shift/gather, same as the unfused kernels.  Interpret mode (CPU) is
+the tier-1 validation target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BD = 256
+ID_BITS = 25          # (f+1) <= 33 -> 34 << 25 < 2^31: int32-safe
+MAX_ID = (1 << ID_BITS) - 1
+KEY_INIT = -(2 ** 31)  # python int: jnp scalars would be captured as consts
+
+
+def _prefilter_kernel(th_ref, cs_ref, codes_ref, mask_ref, bitmap_ref,
+                      bits_ref, keys_ref, *, n_filter: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cs = cs_ref[...]                                    # (n_q, n_c)
+        # Compare in the CS dtype (weak-typed-scalar semantics): for bf16 CS
+        # the reference rounds th to bf16 before comparing; do the same here
+        # so boundary values cannot flip bits between kernel and oracle.
+        m = (cs > th_ref[0].astype(cs.dtype)).astype(jnp.uint32)
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (cs.shape[0], 1), 0)
+        # Disjoint bit positions: sum == OR (same pack as kernels/bitpack.py).
+        bits_ref[...] = jnp.sum(m << shifts, axis=0, keepdims=True)
+        keys_ref[...] = jnp.full((1, n_filter), KEY_INIT, jnp.int32)
+
+    bits = bits_ref[0, :]                                   # (n_c,) u32
+    codes = codes_ref[...]                                  # (BD, cap)
+    valid = mask_ref[...] != 0                              # (BD, cap)
+    cand = bitmap_ref[0, :] != 0                            # (BD,)
+    bd = codes.shape[0]
+
+    idx = jnp.clip(codes, 0, bits.shape[0] - 1)
+    words = jnp.take(bits, idx, axis=0)                     # (BD, cap) u32
+    words = jnp.where(valid, words, jnp.uint32(0))
+    ored = jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    f = jax.lax.population_count(ored).astype(jnp.int32)    # (BD,)
+    f = jnp.where(cand, f, -1)
+
+    ids = i * bd + jax.lax.broadcasted_iota(jnp.int32, (bd, 1), 0)[:, 0]
+    keys = ((f + 1) << ID_BITS) + (MAX_ID - ids)
+    merged = jnp.concatenate([keys_ref[0, :], keys])
+    top, _ = jax.lax.top_k(merged, n_filter)
+    keys_ref[...] = top[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_filter", "block_d", "interpret"))
+def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
+              bitmap: jax.Array, n_filter: int, *,
+              block_d: int = DEFAULT_BD,
+              interpret: bool = True) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Fused phases 1b-2 for one query.
+
+    cs         : (n_q, n_c) centroid scores (fp32 or bf16), n_q <= 32
+    th         : scalar bit-vector threshold
+    codes      : (n_docs, cap) int32 centroid id per token (padded)
+    token_mask : (n_docs, cap) bool — True for real tokens
+    bitmap     : (n_docs,) bool — candidate docs (IVF union)
+    -> (scores (n_filter,) int32, doc_ids (n_filter,) int32,
+        bits (n_c,) uint32)
+
+    (scores, doc_ids) == ``lax.top_k(where(bitmap, F, -1), n_filter)``
+    bit-exactly, including index-order tie-breaking.
+    """
+    n_q, n_c = cs.shape
+    n_docs, cap = codes.shape
+    assert n_q <= 32, "stacked bitvector packs one query term per uint32 bit"
+    assert n_filter <= n_docs, \
+        f"n_filter={n_filter} exceeds the {n_docs} documents scored " \
+        f"(compact mode: cand_cap is the document count)"
+    assert n_docs <= MAX_ID, "int32 packed keys support up to 2^25 docs/shard"
+    pad = (-n_docs) % block_d
+    codesp = jnp.pad(codes, ((0, pad), (0, 0)))
+    maskp = jnp.pad(token_mask.astype(jnp.int8), ((0, pad), (0, 0)))
+    bmp = jnp.pad(bitmap.astype(jnp.int8), (0, pad))[None, :]
+    ndp = n_docs + pad
+    th_arr = jnp.asarray([th], jnp.float32)
+    kern = functools.partial(_prefilter_kernel, n_filter=n_filter)
+    bits, keys = pl.pallas_call(
+        kern,
+        grid=(ndp // block_d,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),              # th
+            pl.BlockSpec((n_q, n_c), lambda i: (0, 0)),      # CS resident
+            pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_c), lambda i: (0, 0)),        # revisited accum
+            pl.BlockSpec((1, n_filter), lambda i: (0, 0)),   # revisited accum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_c), jnp.uint32),
+            jax.ShapeDtypeStruct((1, n_filter), jnp.int32),
+        ],
+        interpret=interpret,
+    )(th_arr, cs, codesp, maskp, bmp)
+    keys = keys[0]
+    scores = (keys >> ID_BITS) - 1
+    doc_ids = MAX_ID - (keys & MAX_ID)
+    return scores.astype(jnp.int32), doc_ids.astype(jnp.int32), bits[0]

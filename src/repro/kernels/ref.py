@@ -37,3 +37,16 @@ def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     """Fused PQ late interaction oracle -> (docs,) fp32."""
     return _ia.late_interaction_pq(cs_t, lut, codes, res_codes, token_mask,
                                    th_r)
+
+
+def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
+              bitmap: jax.Array, n_filter: int) -> tuple[jax.Array,
+                                                         jax.Array]:
+    """Oracle for the fused phases 1b-2 megakernel: bitpack -> Eq. 4 filter
+    -> candidate masking -> top-n_filter.  -> (scores, doc_ids), both
+    (n_filter,) int32, in ``lax.top_k`` order (ties: lowest doc id first)."""
+    bits = _bv.build_bitvectors(cs, th)
+    f = _bv.filter_score(bits, codes, token_mask)
+    f = jnp.where(bitmap, f, -1)
+    scores, ids = jax.lax.top_k(f, n_filter)
+    return scores.astype(jnp.int32), ids.astype(jnp.int32)

@@ -24,6 +24,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.engine import EngineConfig, RetrievalResult, _retrieve_one
 from repro.core.index import PackedIndex
 
+# jax >= 0.6 exposes shard_map at top level (replication check kw:
+# check_vma); 0.4.x has it under experimental (kw: check_rep).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_KW = {"check_vma": False}
+else:  # pragma: no cover - exercised on jax 0.4.x containers
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
+
+
+def _axis_size(ax: str):
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)  # jax 0.4.x
+
 
 def retrieve_pjit(mesh: Mesh, index: PackedIndex, queries: jax.Array,
                   cfg: EngineConfig) -> RetrievalResult:
@@ -49,8 +64,8 @@ def _local_retrieve(index_local: PackedIndex, queries: jax.Array,
     shard_id = jnp.int32(0)
     n_shards = 1
     for ax in axes:
-        shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        n_shards *= jax.lax.axis_size(ax)
+        shard_id = shard_id * _axis_size(ax) + jax.lax.axis_index(ax)
+        n_shards *= _axis_size(ax)
     n_local = index_local.codes.shape[0]
     global_ids = local.doc_ids + shard_id * n_local
 
@@ -80,8 +95,8 @@ def make_shardmap_retriever(mesh: Mesh, cfg: EngineConfig):
     out_specs = RetrievalResult(P(None), P(None))
 
     @functools.partial(jax.jit)
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **_SM_KW)
     def step(index_stacked, queries):
         index_local = jax.tree.map(lambda x: x[0], index_stacked)
         return _local_retrieve(index_local, queries, cfg, axes)

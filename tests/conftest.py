@@ -3,6 +3,10 @@ device (the 512-device override belongs to launch/dryrun.py ONLY)."""
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# The tier-1 lane is compile-bound (dozens of tiny jits on 1 CPU core);
+# backend optimization buys nothing at these shapes but ~2x wall time.
+# setdefault: an explicit XLA_FLAGS from the caller wins.
+os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402

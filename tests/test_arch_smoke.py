@@ -18,6 +18,7 @@ def test_registry_has_all_assigned():
         set(registry.names())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_smoke(arch):
     from repro.models import transformer as T
@@ -50,6 +51,7 @@ def test_lm_smoke(arch):
     assert dl.shape == (2, cfg.vocab) and not bool(jnp.isnan(dl).any())
 
 
+@pytest.mark.slow
 def test_gcn_smoke():
     from repro.models import gcn
     spec = registry.get("gcn-cora")
@@ -70,6 +72,7 @@ def test_gcn_smoke():
         jax.tree.map(lambda x: bool(jnp.isfinite(x).all()), g))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", RECSYS_ARCHS)
 def test_recsys_smoke(arch):
     from repro.launch.steps import _recsys_model

@@ -92,3 +92,80 @@ def test_empty_docs_masked_out():
     bits = ref.bitpack(cs, 0.0)
     f = np.asarray(ops.bitfilter(bits, codes, mask))
     assert f[3] == 0
+
+
+# ---------------------------------------------------------------------------
+# Fused prefilter megakernel (phases 1b-2 in one launch)
+# ---------------------------------------------------------------------------
+
+def _bitmap(n_docs, seed=0, density=0.4):
+    rng = np.random.default_rng(seed + 1)
+    return jnp.asarray(rng.random(n_docs) < density)
+
+
+def _assert_prefilter_matches_ref(cs, codes, mask, bitmap, n_filter, th=0.2):
+    s, i, bits = ops.prefilter(cs, th, codes, mask, bitmap, n_filter)
+    rs, ri = ref.prefilter(cs, th, codes, mask, bitmap, n_filter)
+    # selection parity is BIT-EXACT, including lax.top_k tie order
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    # the byproduct bit table equals the standalone bitpack
+    np.testing.assert_array_equal(np.asarray(bits),
+                                  np.asarray(ref.bitpack(cs, th)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("th", [-0.5, 0.5, 2.0])
+def test_prefilter_fused(shape, th):
+    cs, codes, mask, _, _ = _inputs(*shape)
+    n_docs = codes.shape[0]
+    _assert_prefilter_matches_ref(cs, codes, mask, _bitmap(n_docs),
+                                  max(1, n_docs // 3), th)
+
+
+@pytest.mark.parametrize("shape", [SHAPES[0], SHAPES[3]])
+def test_prefilter_fused_full_and_tiny_nfilter(shape):
+    """n_filter == n_docs (everything survives, order must still match) and
+    n_filter == 1 (running merge degenerates to an argmax)."""
+    cs, codes, mask, _, _ = _inputs(*shape, seed=3)
+    n_docs = codes.shape[0]
+    bm = _bitmap(n_docs, seed=3)
+    _assert_prefilter_matches_ref(cs, codes, mask, bm, n_docs)
+    _assert_prefilter_matches_ref(cs, codes, mask, bm, 1)
+
+
+def test_prefilter_fused_block_boundary():
+    """Doc counts straddling the block size: padded rows must never be
+    selected ahead of real docs (even real docs with f == -1)."""
+    for n_docs in (255, 257):
+        cs, codes, mask, _, _ = _inputs(32, 256, n_docs, 16, 8, 16, seed=7)
+        _assert_prefilter_matches_ref(cs, codes, mask,
+                                      _bitmap(n_docs, seed=7), n_docs // 2)
+
+
+def test_prefilter_fused_all_docs_masked():
+    """bitmap all-False: ref top_k ranks a flat -1 array, i.e. doc ids in
+    index order with score -1 — the fused tie-break must reproduce that."""
+    cs, codes, mask, _, _ = _inputs(32, 256, 64, 16, 8, 16)
+    s, i, _ = ops.prefilter(cs, 0.2, codes, mask, jnp.zeros(64, bool), 16)
+    np.testing.assert_array_equal(np.asarray(i), np.arange(16))
+    assert (np.asarray(s) == -1).all()
+
+
+def test_prefilter_fused_zero_token_docs():
+    """Docs whose every token is padding score popcount 0, not -1 (they are
+    still candidates if the bitmap says so)."""
+    cs, codes, mask, _, _ = _inputs(32, 256, 64, 16, 8, 16)
+    mask = mask.at[5].set(False)
+    bm = jnp.ones(64, bool)
+    _assert_prefilter_matches_ref(cs, codes, mask, bm, 64)
+    s, i, _ = ops.prefilter(cs, 0.2, codes, mask, bm, 64)
+    assert np.asarray(s)[np.asarray(i) == 5] == 0
+
+
+def test_prefilter_fused_bf16_cs():
+    """bf16 centroid scores: threshold comparison happens in the CS dtype on
+    both sides, so parity stays bit-exact."""
+    cs, codes, mask, _, _ = _inputs(32, 640, 100, 24, 16, 16)
+    _assert_prefilter_matches_ref(cs.astype(jnp.bfloat16), codes, mask,
+                                  _bitmap(100), 40, th=0.1)

@@ -2,12 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models import colbert, sampler
 from repro.models.layers import chunked_causal_attention, gqa_attention
 from repro.models.recsys.embedding_bag import embedding_bag, embedding_bag_pq
 
 
+@pytest.mark.slow
 def test_colbert_encode_and_train_step():
     cfg = colbert.make_config(n_layers=2, d_model=64, n_heads=4, d_head=16,
                               d_ff=128, vocab=300, out_dim=32)
@@ -31,6 +33,7 @@ def test_colbert_encode_and_train_step():
     assert np.isfinite(float(loss_pq))
 
 
+@pytest.mark.slow
 def test_sampler_respects_adjacency():
     import numpy as onp
     n = 30
@@ -79,6 +82,7 @@ def test_embedding_bag_pq_equals_decoded_dense():
                                rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_chunked_attention_matches_dense():
     k = jax.random.PRNGKey(0)
     B, S, H, KV, Dh = 2, 64, 4, 2, 16
@@ -92,6 +96,7 @@ def test_chunked_attention_matches_dense():
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_moe_capacity_dispatch_routes_tokens():
     """With E=4, top_k=1, capacity ample: output == chosen expert's FFN."""
     from repro.models.moe import moe_block

@@ -24,6 +24,7 @@ def _mesh11():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+@pytest.mark.slow
 def test_context_parallel_specs_preserve_forward():
     """attn_act_specs + residual_spec are pure layout constraints: on a 1x1
     mesh the constrained forward must equal the unconstrained one exactly."""
@@ -46,6 +47,7 @@ def test_context_parallel_specs_preserve_forward():
                                np.asarray(out_cache.k), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_distributed_muon_matches_plain_muon():
     """mats_spec + nested-vmap fold is numerics-equivalent to plain Muon
     (same ns_dtype) on a 1x1 mesh."""
@@ -66,6 +68,7 @@ def test_distributed_muon_matches_plain_muon():
         np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6), new_p, new_d)
 
 
+@pytest.mark.slow
 def test_moe_grouped_drops_over_capacity():
     """Tight per-group capacity drops tokens (outputs zero for dropped rows)
     but never produces NaN, and aux loss stays finite."""

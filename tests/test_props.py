@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dep (requirements-dev.txt); tier-1 stays green "
+           "without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bitvector, residual
 from repro.core.pq import PQCodebooks, build_lut, decode_pq, encode_pq, lut_score

@@ -14,6 +14,8 @@ from repro.train import optimizer as O
 from repro.train.trainer import (TrainState, Trainer, TrainerConfig,
                                  make_train_step)
 
+pytestmark = pytest.mark.slow  # transformer train steps: the multi-minute lane
+
 CFG = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
                   d_ff=64, vocab=64)
 
