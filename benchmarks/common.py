@@ -11,7 +11,6 @@ import time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build_index

@@ -1,9 +1,18 @@
 """Paper Fig. 1 — breakdown of PLAID query latency across its four phases
 (retrieval, filtering, decompression, late interaction), for k = 10/100/1000,
 plus the same breakdown for EMVB's four phases for contrast, plus the
-fused-vs-unfused phase-1/2 comparison: the ``kernels/prefilter.py``
-megakernel (one launch, no full-corpus intermediates) against the separate
-phase1_candidates + phase2_prefilter launches it replaces.
+fused-vs-unfused megakernel comparisons at both ends of the pipeline:
+
+  * phases 1-2: the ``kernels/prefilter.py`` megakernel (one launch, no
+    full-corpus intermediates) against the separate phase1_candidates +
+    phase2_prefilter launches it replaces (p12_* rows);
+  * phases 3-4: the ``kernels/pqinter.py`` megakernel (one launch: centroid
+    interaction + phase-3 selection + Eq. 5/6 PQ scoring + final top-k)
+    against the cinter -> top_k -> gather -> pqscore -> top_k composition it
+    replaces (p34_* rows). ``p34_unfused_ref`` is the interpret-free
+    XLA-compiled jnp path; the ``*_kernels``/``*_fused`` rows run the Pallas
+    kernels in the session's kernel mode (interpret on CPU, Mosaic on TPU —
+    only the TPU numbers are launch-overhead-faithful).
 """
 from __future__ import annotations
 
@@ -61,6 +70,21 @@ def run() -> list[str]:
         rows.append(row(f"fig1,emvb,k={k},p12_unfused_ref", (e1 + e2) * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p12_unfused_kernels", eu * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p12_fused", ef * 1e6))
+
+        # fused-vs-unfused phases 3-4: the pqinter megakernel in one launch
+        # vs the cinter + top_k + gather + pqscore + top_k composition
+        f34 = dataclasses.replace(ecfg, use_kernels=True,
+                                  fused_late_interaction=True)
+        u34 = dataclasses.replace(f34, fused_late_interaction=False)
+        ef34 = time_fn(lambda: emvb.phase34_late_interaction(
+            idx, q, cs, sel1, f34))
+        eu34 = time_fn(lambda: emvb.phase34_late_interaction(
+            idx, q, cs, sel1, u34))
+        rows.append(row(f"fig1,emvb,k={k},p34_unfused_ref", (e3 + e4) * 1e6))
+        rows.append(row(f"fig1,emvb,k={k},p34_unfused_kernels", eu34 * 1e6))
+        rows.append(row(f"fig1,emvb,k={k},p34_fused", ef34 * 1e6))
+        rows.append(row(f"fig1,emvb,k={k},p34_fused_speedup_vs_kernels", 0.0,
+                        f"x{eu34 / ef34:.2f}"))
     return rows
 
 

@@ -5,8 +5,15 @@ function of th_r.
 The scored-term fraction is measured on the documents that actually reach
 the late-interaction phase (the engine's phase-3 selection), matching the
 paper's setting — on non-candidate documents the fraction is trivially ~0.
+
+Also times the phase-3/4 tail per th_r (p34_* rows): the filter changes how
+much PQ work Eq. 6 keeps, so its latency effect shows up here — fused
+``kernels/pqinter.py`` megakernel vs the unfused cinter+pqscore kernel pair
+vs the XLA-compiled jnp reference.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +23,7 @@ from repro.core import engine as emvb
 from repro.core.interaction import scored_term_fraction
 from repro.data.synthetic import mrr_at_k
 
-from .common import TH, bench_corpus, bench_index, row
+from .common import TH, bench_corpus, bench_index, row, time_fn
 
 
 def run() -> list[str]:
@@ -42,6 +49,28 @@ def run() -> list[str]:
         sel2_per_q.append(sel2)
         cs_per_q.append(cs)
 
+    # p34 tail latency in the two filter modes (Eq. 5 all-terms vs Eq. 6 at
+    # the operating point), one representative query each — every th_r value
+    # would recompile the whole phase-3/4 stack per config for no extra
+    # signal (the filter mode, not the threshold value, changes the math)
+    q0 = jnp.asarray(queries[0])
+    cs0, bits0, bmap0 = emvb.phase1_candidates(idx, q0, base_cfg)
+    sel1_0 = emvb.phase2_prefilter(idx, bits0, bmap0, base_cfg)
+
+    def p34_rows(th_r):
+        rcfg = dataclasses.replace(base_cfg, th_r=th_r)
+        fcfg = dataclasses.replace(rcfg, use_kernels=True,
+                                   fused_late_interaction=True)
+        ucfg = dataclasses.replace(fcfg, fused_late_interaction=False)
+        tag = "eq5" if th_r is None else f"eq6,th_r={th_r}"
+        for name, cfg in (("unfused_ref", rcfg), ("unfused_kernels", ucfg),
+                          ("fused", fcfg)):
+            t = time_fn(lambda: emvb.phase34_late_interaction(
+                idx, q0, cs0, sel1_0, cfg))
+            rows.append(row(f"fig5,p34_{name},{tag}", t * 1e6))
+
+    p34_rows(None)
+    p34_rows(0.3)
     for th_r in (0.1, 0.2, 0.3, 0.4, 0.5):
         cfg = EngineConfig(k=10, th=TH, th_r=th_r)
         ids = np.asarray(emvb.retrieve(idx, queries, cfg).doc_ids)

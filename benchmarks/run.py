@@ -3,9 +3,17 @@ report. ``PYTHONPATH=src python -m benchmarks.run [name ...]``.
 
 Emits ``name,us_per_call,derived`` CSV rows (absolute times are single-core
 CPU; the EMVB/PLAID *ratios* are the reproduction target).
-"""
-from __future__ import annotations
 
+``--smoke`` runs the fast default subset (fig1: the phase breakdown plus the
+fused-vs-unfused megakernel rows) and writes the rows to ``BENCH_smoke.json``
+so CI can upload the perf trajectory as a per-push artifact; ``--json PATH``
+does the same for any suite selection. BENCH_*.json is gitignored by design —
+machine-dependent numbers belong in artifacts, not history.
+"""
+
+import argparse
+import json
+import platform
 import sys
 import time
 
@@ -21,17 +29,57 @@ SUITES = {
     "fig5": fig5_termfilter,
     "roofline": roofline,
 }
+SMOKE_SUITES = ["fig1"]
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(SUITES)
+    ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
+    # nargs="*" + choices rejects the empty default in this argparse
+    # version, so membership is checked by hand below
+    ap.add_argument("names", nargs="*", metavar="name",
+                    help=f"suites to run: {', '.join(SUITES)} "
+                         "(default: all, or the smoke subset)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset + write BENCH_smoke.json (CI artifact)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows to this JSON file")
+    args = ap.parse_args()
+    unknown = [n for n in args.names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s): {', '.join(unknown)}")
+    names = args.names or (SMOKE_SUITES if args.smoke else list(SUITES))
+
+    results, timings = {}, {}
     for name in names:
         mod = SUITES[name]
         t0 = time.time()
         print(f"# === {name} ({mod.__name__}) ===", flush=True)
-        for line in mod.run():
+        rows = mod.run()
+        for line in rows:
             print(line, flush=True)
-        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+        timings[name] = time.time() - t0
+        results[name] = rows
+        print(f"# {name} done in {timings[name]:.0f}s", flush=True)
+
+    json_path = args.json or ("BENCH_smoke.json" if args.smoke else None)
+    if json_path:
+        import jax
+
+        payload = {
+            "suites": results,
+            "suite_seconds": {k: round(v, 1) for k, v in timings.items()},
+            "meta": {
+                "unix_time": int(time.time()),
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "argv": sys.argv[1:],
+            },
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {json_path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -5,8 +5,6 @@ gcn-cora at every shape): cora full-batch, reddit-scale sampled minibatch
 (real neighbor sampler, fanout 15-10), ogbn-products full-batch, and
 block-diagonal batched small molecule graphs.
 """
-import dataclasses
-
 import jax.numpy as jnp
 
 from repro.models.gcn import GCNConfig

@@ -11,8 +11,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional
 
-import jax.numpy as jnp
-
 
 @dataclasses.dataclass(frozen=True)
 class ShapeCell:

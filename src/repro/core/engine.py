@@ -12,17 +12,20 @@ static jit argument. The same functions run single-device (benchmarks/tests)
 and under shard_map with per-shard local indices (launch/serve.py).
 
 The public phase-split entry points (``phase1_candidates`` …
-``phase4_late_interaction``, plus the fused ``phase12_prefilter``) and
-``retrieve`` share the SAME internal ``_phaseN`` helpers, so composing the
-split phases reproduces ``retrieve`` exactly by construction — the invariant
-tests/test_engine_phases.py asserts.
+``phase4_late_interaction``, plus the fused ``phase12_prefilter`` and
+``phase34_late_interaction``) and ``retrieve`` share the SAME internal
+``_phaseN`` helpers, so composing the split phases reproduces ``retrieve``
+exactly by construction — the invariant tests/test_engine_phases.py asserts.
 
 Kernel dispatch: ``use_kernels`` selects the Pallas kernels over the jnp
 reference math; ``fused_prefilter`` additionally replaces the four-launch
 phase 1b-2 sequence (bitpack -> bitfilter -> mask -> top_k, with full-corpus
 intermediates) by the single ``kernels/prefilter.py`` megakernel;
-``kernel_interpret`` picks Pallas interpret mode (CPU) vs compiled Mosaic
-(TPU) — it replaces the old mutable ``kernels.ops.INTERPRET`` module global.
+``fused_late_interaction`` does the same for phases 3-4 (cinter -> top_k ->
+gather -> pqscore -> top_k becomes the single ``kernels/pqinter.py``
+megakernel); ``kernel_interpret`` picks Pallas interpret mode (CPU) vs
+compiled Mosaic (TPU) — it replaces the old mutable ``kernels.ops.INTERPRET``
+module global.
 """
 from __future__ import annotations
 
@@ -35,7 +38,7 @@ import jax.numpy as jnp
 
 from . import bitvector, interaction
 from .index import PackedIndex
-from .pq import PQCodebooks, build_lut
+from .pq import build_lut
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +56,12 @@ class EngineConfig:
     # with full-corpus intermediates. False keeps the four separate kernels
     # (the benchmarks time both).
     fused_prefilter: bool = True
+    # With use_kernels: run phases 3-4 as the single fused megakernel
+    # (kernels/pqinter.py: centroid interaction + phase-3 top-n_docs + PQ
+    # late interaction + final top-k in one launch) instead of
+    # cinter -> top_k -> gather -> pqscore -> top_k with per-survivor
+    # intermediates. False keeps the two separate kernels.
+    fused_late_interaction: bool = True
     # Pallas interpret mode (CPU validation) vs compiled Mosaic (TPU).
     kernel_interpret: bool = True
     # 'score_all' evaluates F on every (local) doc masked by the candidate
@@ -236,6 +245,28 @@ def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
     return top_scores, jnp.take(sel2, top_local)
 
 
+def _phase34(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
+             cs: jax.Array, sel1: jax.Array, cfg: EngineConfig):
+    """Phases 3-4 -> (scores, ids), both (k,). Dispatches to the fused
+    megakernel when configured; otherwise composes _phase3 + _phase4."""
+    kops = _kops(cfg)
+    if kops is None or not cfg.fused_late_interaction:
+        sel2 = _phase3(index, token_mask, cs, sel1, cfg)
+        return _phase4(index, token_mask, q, cs, sel2, cfg)
+    # Fused path: S̄, the phase-3 selection, the Eq. 5/6 PQ scores and the
+    # final top-k never leave the kernel; codes/residuals are gathered ONCE
+    # for the phase-2 survivors instead of once per phase.
+    q_rot = q @ index.opq_rotation
+    lut = build_lut(q_rot, index.pq)                             # (n_q, m, K)
+    s1_codes = jnp.take(index.codes, sel1, axis=0)               # (nf, cap)
+    s1_res = jnp.take(index.res_codes, sel1, axis=0)
+    s1_mask = jnp.take(token_mask, sel1, axis=0)
+    top_scores, top_pos, _, _ = kops.pqinter(
+        cs.T, lut, s1_codes, s1_res, s1_mask, cfg.th_r, cfg.n_docs, cfg.k,
+        interpret=cfg.kernel_interpret)
+    return top_scores, jnp.take(sel1, top_pos)
+
+
 # ---------------------------------------------------------------------------
 # Full pipeline (single query)
 # ---------------------------------------------------------------------------
@@ -243,8 +274,7 @@ def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
 def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
                   cfg: EngineConfig) -> RetrievalResult:
     cs, sel1 = _phase12(q, index, token_mask, cfg)
-    sel2 = _phase3(index, token_mask, cs, sel1, cfg)
-    top_scores, top_ids = _phase4(index, token_mask, q, cs, sel2, cfg)
+    top_scores, top_ids = _phase34(index, token_mask, q, cs, sel1, cfg)
     return RetrievalResult(top_scores, top_ids)
 
 
@@ -290,3 +320,14 @@ def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
 def phase4_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
                             sel2: jax.Array, cfg: EngineConfig):
     return _phase4(index, index.token_mask(), q, cs, sel2, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def phase34_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
+                             sel1: jax.Array, cfg: EngineConfig):
+    """Fused phases 3-4 -> (scores, ids); with a fused-late-interaction
+    config this is the single megakernel launch the breakdown benchmark
+    times against the phase3_centroid_interaction + phase4_late_interaction
+    pair (which keep their unfused behavior, mirroring how phase1/phase2
+    relate to phase12_prefilter)."""
+    return _phase34(index, index.token_mask(), q, cs, sel1, cfg)

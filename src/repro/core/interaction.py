@@ -101,14 +101,22 @@ def late_interaction_pq(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
 def _lut_gather(lut: jax.Array, idx: jax.Array) -> jax.Array:
     """lut (n_q, m, K), idx (docs, cap, m) int32 -> (docs, cap, n_q).
 
-    Single gather over a transposed flat (m*K, n_q) table: each token's m
-    lookups read contiguous n_q-wide rows (1.8x over the broadcasting 5-D
-    take_along_axis form at k=1000 shapes; measured in §Perf notes)."""
+    Per-subspace gathers over a transposed flat (m*K, n_q) table, accumulated
+    in a static unrolled loop: each token's lookups read contiguous n_q-wide
+    rows and the running (docs, cap, n_q) accumulator never materializes the
+    (docs, cap, m, n_q) tensor the ``take(...).sum(-2)`` form does (~6x
+    faster at k=1000 shapes, which itself beat the broadcasting 5-D
+    take_along_axis form 1.8x; measured in §Perf notes). The s = 0..m-1
+    accumulation order is the SAME one the Pallas kernels use, so kernel
+    scores stay bitwise equal to this reference."""
     n_q, m, k = lut.shape
     flat = lut.reshape(n_q, m * k).T                       # (m*K, n_q)
     # int32 before the offset add: uint8 codes would wrap at m*K > 255
-    fidx = idx.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32) * k
-    return jnp.take(flat, fidx, axis=0).sum(-2)            # (docs, cap, n_q)
+    idx32 = idx.astype(jnp.int32)
+    out = jnp.take(flat, idx32[..., 0], axis=0)            # (docs, cap, n_q)
+    for s in range(1, m):
+        out = out + jnp.take(flat, idx32[..., s] + s * k, axis=0)
+    return out
 
 
 def late_interaction_pq_compact(cs_t: jax.Array, lut: jax.Array,

@@ -26,15 +26,26 @@ DEFAULT_BD = 128
 NEG = -1e9
 
 
+def sbar_block(cs_t: jax.Array, codes: jax.Array,
+               valid: jax.Array) -> jax.Array:
+    """S̄ for one (BD, cap) block: cs_t (n_c, n_q), valid bool -> (BD,).
+
+    Shared by this kernel and the pass-1 stream of ``pqinter.py`` — the
+    gather/mask/max/sum order here is the SAME one the jnp reference
+    (``interaction.centroid_interaction``) uses, which is what keeps kernel
+    S̄ (and therefore phase-3 selection order) bitwise equal to it. Keep the
+    three in lockstep."""
+    idx = jnp.clip(codes, 0, cs_t.shape[0] - 1)
+    pt = jnp.take(cs_t, idx, axis=0)                       # (BD, cap, n_q)
+    pt = jnp.where(valid[..., None], pt, NEG)
+    return jnp.sum(jnp.max(pt, axis=1), axis=-1)           # (BD,)
+
+
 def _cinter_kernel(cs_t_ref, codes_ref, mask_ref, out_ref):
     cs_t = cs_t_ref[...]                                   # (n_c, n_q)
     codes = codes_ref[...]                                 # (BD, cap)
-    valid = mask_ref[...]                                  # (BD, cap) int8
-    idx = jnp.clip(codes, 0, cs_t.shape[0] - 1)
-    pt = jnp.take(cs_t, idx, axis=0)                       # (BD, cap, n_q)
-    pt = jnp.where((valid != 0)[..., None], pt, NEG)
-    colmax = jnp.max(pt, axis=1)                           # (BD, n_q)
-    out_ref[...] = jnp.sum(colmax, axis=-1)[None, :]
+    valid = mask_ref[...] != 0                             # (BD, cap) int8
+    out_ref[...] = sbar_block(cs_t, codes, valid)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

@@ -13,6 +13,7 @@ import jax
 from . import bitpack as _bitpack
 from . import bitfilter as _bitfilter
 from . import cinter as _cinter
+from . import pqinter as _pqinter
 from . import pqscore as _pqscore
 from . import prefilter as _prefilter
 
@@ -44,3 +45,12 @@ def prefilter(cs: jax.Array, th: float, codes: jax.Array,
     """Fused phases 1b-2 megakernel -> (scores, doc_ids, bits)."""
     return _prefilter.prefilter(cs, th, codes, token_mask, bitmap, n_filter,
                                 interpret=interpret)
+
+
+def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+            res_codes: jax.Array, token_mask: jax.Array,
+            th_r: float | None, n_docs: int, k: int, *,
+            interpret: bool = True):
+    """Fused phases 3-4 megakernel -> (scores, pos, sel2, sbar)."""
+    return _pqinter.pqinter(cs_t, lut, codes, res_codes, token_mask, th_r,
+                            n_docs, k, interpret=interpret)

@@ -1,0 +1,213 @@
+"""Fused Pallas megakernel: centroid interaction + phase-3 selection + PQ
+late interaction with the dynamic term filter + final top-k (EMVB phases 3-4
+in ONE launch).
+
+The unfused engine runs the tail of the pipeline as two kernels with
+full-survivor intermediates and two host-side selections:
+
+    cinter(cs_t, sel1 codes)      (n_filter,) S̄ array in HBM     [§4.3]
+    top_k(S̄, n_docs)             host selection -> sel2
+    gather codes/res for sel2     second HBM gather
+    pqscore(lut, sel2 codes)      (n_docs,) score array in HBM    [§4.4]
+    top_k(scores, k)              host selection -> final
+
+This kernel does all five steps in one ``pallas_call``, as two statically
+unrolled block loops inside a single kernel invocation (the standard
+"grid over independent work, inner loop over the stream" Pallas shape —
+here the whole computation is one sequential stream, so the grid is 1):
+
+  * pass 1 walks (BD1, cap) blocks of the phase-2 survivors, gathers their
+    centroid columns from the VMEM-resident CS^T, max-reduces to the
+    column-wise centroid interaction S̄ (Eq. 2), and merges each block into
+    a running top-``n_docs`` buffer of (S̄, survivor position) pairs —
+    phase 3's selection, kept on chip.
+  * pass 2 walks that buffer in phase-3 rank order, gathers the winners'
+    token codes and PQ residual codes, applies the dynamic term filter
+    (Eq. 5 when ``th_r is None``, Eq. 6 otherwise — filtered (term, token)
+    pairs are masked to -1e9 so they never win the max, i.e. only surviving
+    terms contribute a LUT score), and merges each (BD2,) block of final
+    scores into a running top-``k``.
+
+Nothing of size ``(n_docs, cap, n_q)`` is ever materialized in HBM — the
+centroid+residual score tensor only exists one (BD2, cap, n_q) tile at a
+time, and the only outputs are the (k,) winners plus the (n_docs,) phase-3
+selection (a free byproduct kept for the phase-split API). The LUT gather
+mirrors the reference ``_lut_gather`` exactly — same static unroll, same
+subspace accumulation order — because identical reduction order is what
+keeps the final scores bitwise equal to the oracle.
+
+Bit-exactness: both running merges are plain ``lax.top_k`` over
+[buffer ++ block] concatenations. The buffer is kept sorted (score
+descending, survivor position ascending within ties) and every block's
+positions exceed everything already seen, so ``top_k``'s lowest-index
+tie-breaking reproduces the reference ``top_k`` over the full score array
+exactly — same docs, same order, including ties. The per-doc math is the
+same gather/where/max/sum sequence as the jnp reference, so scores agree
+bitwise and ties resolve identically (tests/test_kernels.py asserts this on
+tie-heavy quantized score distributions).
+
+Why not a multi-step grid with revisited accumulator blocks (the
+``prefilter.py`` pattern)? Interpret mode — the tier-1 validation target —
+lowers the grid to a ``lax.while_loop`` that re-slices EVERY input block and
+writes it back into the loop carry on EVERY step; with the (n_filter, cap,
+m) residual codes and the flattened LUT necessarily resident (pass 2
+gathers arbitrary rows), that carry traffic alone cost more than the whole
+unfused pair. A single grid step with static python-unrolled block loops
+keeps the identical running-merge algorithm but slices each input exactly
+once, and the merge carries are (n_docs,)/(k,) sized.
+
+TPU notes: VMEM contract — CS^T (per-shard slice at production scale,
+DESIGN.md §4), the flattened LUT, and the (n_filter, cap[, m]) survivor
+arrays must all be resident, ~2.5 MiB at the paper's n_filter=512, cap=48,
+m=16 shapes (uint8 residual codes). A Mosaic build would re-block the full-
+array reads into (BD, cap) VMEM tiles behind double-buffered DMA and
+replace the merge ``lax.top_k`` with a bitonic merge over the 8x128 lanes;
+the row gather by phase-3 winner position is the one dynamic-DMA op without
+an unfused analogue. Everything else is VPU gather/compare/select, same as
+the unfused ``cinter``/``pqscore`` kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cinter import sbar_block
+from .pqscore import eq56_block
+
+MAX_BD1 = 512         # pass-1 block cap (S̄ is cheap: one gather + max/sum)
+MAX_BD2 = 64          # pass-2 block cap (PQ scoring is the heavy stage)
+NEG_INF = float("-inf")  # buffer init / padding: below any real score
+
+
+def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
+                    mask_ref, sbar_ref, pos_ref, tops_ref, topp_ref, *,
+                    m: int, ksub: int, use_filter: bool, n_docs: int,
+                    k: int, bd1: int, bd2: int, nf: int, nd_pad: int):
+    cs_t = cs_t_ref[...]                                    # (n_c, n_q)
+    codes = codes_ref[...]                                  # (nfp, cap)
+    valid_all = mask_ref[...] != 0                          # (nfp, cap)
+    nfp = codes.shape[0]
+
+    # ---- pass 1: S̄ blocks + running top-n_docs (sbar, position) ----------
+    sbar_buf = jnp.full((nd_pad,), NEG_INF, jnp.float32)
+    pos_buf = jnp.zeros((nd_pad,), jnp.int32)
+    for i in range(nfp // bd1):                             # static unroll
+        start = i * bd1
+        c = jax.lax.slice_in_dim(codes, start, start + bd1)
+        v = jax.lax.slice_in_dim(valid_all, start, start + bd1)
+        sbar = sbar_block(cs_t, c, v)                       # (BD1,)
+        rows = start + jax.lax.broadcasted_iota(jnp.int32, (bd1, 1), 0)[:, 0]
+        # exact-f32 cast (bf16 CS promotes losslessly; order/ties preserved);
+        # padded rows rank below every real doc, even all-token-masked ones
+        sbar = jnp.where(rows < nf, sbar.astype(jnp.float32), NEG_INF)
+        merged_s = jnp.concatenate([sbar_buf, sbar])
+        merged_p = jnp.concatenate([pos_buf, rows])
+        sbar_buf, sel = jax.lax.top_k(merged_s, nd_pad)
+        pos_buf = jnp.take(merged_p, sel)
+    sbar_ref[...] = sbar_buf[None, :]
+    pos_ref[...] = pos_buf[None, :]
+
+    # ---- pass 2: Eq. 5/6 PQ scores in phase-3 rank order + running top-k --
+    lut2 = lut2_ref[...]                                    # (m*K, n_q)
+    res_all = res_ref[...]                                  # (nfp, cap, m)
+    tops_buf = jnp.full((k,), NEG_INF, jnp.float32)
+    topp_buf = jnp.zeros((k,), jnp.int32)
+    for j in range(nd_pad // bd2):                          # static unroll
+        start = j * bd2
+        pos = jax.lax.slice_in_dim(pos_buf, start, start + bd2)
+        lane = start + jax.lax.broadcasted_iota(jnp.int32, (bd2, 1), 0)[:, 0]
+        live = lane < n_docs                                # buffer tail is
+        posc = jnp.clip(pos, 0, nfp - 1)                    # rank > n_docs
+        c = jnp.take(codes, posc, axis=0)                   # (BD2, cap)
+        res = jnp.take(res_all, posc, axis=0)               # (BD2, cap, m)
+        valid = jnp.take(valid_all, posc, axis=0) & live[:, None]
+        score = eq56_block(cs_t, lut2, c, res, valid, thr_ref[0],
+                           m=m, ksub=ksub, use_filter=use_filter)
+        score = jnp.where(live, score, NEG_INF)
+        merged_s = jnp.concatenate([tops_buf, score])
+        merged_p = jnp.concatenate([topp_buf, pos])
+        tops_buf, sel = jax.lax.top_k(merged_s, k)
+        topp_buf = jnp.take(merged_p, sel)
+    tops_ref[...] = tops_buf[None, :]
+    topp_ref[...] = topp_buf[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("th_r", "n_docs", "k", "block_d1",
+                                    "block_d2", "interpret"))
+def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+            res_codes: jax.Array, token_mask: jax.Array,
+            th_r: float | None, n_docs: int, k: int, *,
+            block_d1: int | None = None, block_d2: int | None = None,
+            interpret: bool = True) -> tuple[jax.Array, jax.Array,
+                                             jax.Array, jax.Array]:
+    """Fused phases 3-4 for one query, over the phase-2 survivor set.
+
+    cs_t       : (n_c, n_q) centroid scores, transposed (fp32 or bf16)
+    lut        : (n_q, m, K) PQ inner-product LUT for this query
+    codes      : (n_filter, cap) int32 token centroid ids of the survivors
+    res_codes  : (n_filter, cap, m) PQ codes of the survivors' residuals
+    token_mask : (n_filter, cap) bool — True for real tokens
+    th_r       : None -> Eq. 5 (score every term); float -> Eq. 6 filter
+    n_docs     : phase-3 selection size
+    k          : final result count
+    -> (scores (k,) f32, pos (k,) i32, sel2 (n_docs,) i32, sbar (n_docs,) f32)
+
+    ``pos``/``sel2`` index the n_filter survivor axis (the caller translates
+    through its sel1). (scores, pos) == the unfused
+    ``top_k(pqscore(top_k(cinter(...), n_docs) docs), k)`` composition
+    bit-exactly, including index-order tie-breaking at both selections;
+    ``sel2``/``sbar`` are the phase-3 selection and its S̄ values.
+    """
+    nf, cap = codes.shape
+    n_c, n_q = cs_t.shape
+    _, m, ksub = lut.shape
+    assert k <= n_docs <= nf, \
+        f"need k <= n_docs <= n_filter, got {k}/{n_docs}/{nf}"
+    if block_d1 is None:
+        block_d1 = min(MAX_BD1, nf + (-nf) % 8)
+    if block_d2 is None:
+        block_d2 = min(MAX_BD2, n_docs + (-n_docs) % 8)
+    pad1 = (-nf) % block_d1
+    nd_pad = n_docs + ((-n_docs) % block_d2)
+    codesp = jnp.pad(codes, ((0, pad1), (0, 0)))
+    # residual codes stay uint8 end-to-end; the int32 offset cast happens at
+    # the in-kernel gather, exactly where the reference _lut_gather does it
+    resp = jnp.pad(res_codes, ((0, pad1), (0, 0), (0, 0)))
+    maskp = jnp.pad(token_mask.astype(jnp.int8), ((0, pad1), (0, 0)))
+    nfp = nf + pad1
+    lut2 = lut.transpose(1, 2, 0).reshape(m * ksub, n_q)
+    thr = jnp.asarray([0.0 if th_r is None else th_r], jnp.float32)
+    kern = functools.partial(
+        _pqinter_kernel, m=m, ksub=ksub, use_filter=th_r is not None,
+        n_docs=n_docs, k=k, bd1=block_d1, bd2=block_d2, nf=nf, nd_pad=nd_pad)
+    sbar, pos, tops, topp = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),              # th_r
+            pl.BlockSpec((n_c, n_q), lambda i: (0, 0)),      # CS^T
+            pl.BlockSpec((m * ksub, n_q), lambda i: (0, 0)),  # LUT
+            pl.BlockSpec((nfp, cap), lambda i: (0, 0)),      # codes
+            pl.BlockSpec((nfp, cap, m), lambda i: (0, 0, 0)),  # residual codes
+            pl.BlockSpec((nfp, cap), lambda i: (0, 0)),      # token mask
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nd_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, nd_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nd_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, nd_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, cs_t, lut2, codesp, resp, maskp)
+    return tops[0], topp[0], pos[0, :n_docs], sbar[0, :n_docs]

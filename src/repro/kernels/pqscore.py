@@ -28,33 +28,47 @@ DEFAULT_BD = 32
 NEG = -1e9
 
 
-def _pqscore_kernel(cs_t_ref, lut2_ref, codes_ref, res_ref, mask_ref, thr_ref,
-                    out_ref, *, m: int, ksub: int, use_filter: bool):
-    cs_t = cs_t_ref[...]                                    # (n_c, n_q)
-    lut2 = lut2_ref[...]                                    # (m*K, n_q)
-    codes = codes_ref[...]                                  # (BD, cap)
-    res = res_ref[...]                                      # (BD, cap, m) int32
-    valid = (mask_ref[...] != 0)                            # (BD, cap)
+def eq56_block(cs_t: jax.Array, lut2: jax.Array, codes: jax.Array,
+               res: jax.Array, valid: jax.Array, thr: jax.Array, *,
+               m: int, ksub: int, use_filter: bool) -> jax.Array:
+    """Eq. 5/6 PQ late-interaction scores for one (BD, cap) block -> (BD,).
 
+    cs_t (n_c, n_q); lut2 (m*K, n_q) flattened LUT; res (BD, cap, m) any int
+    dtype; valid (BD, cap) bool; thr scalar (ignored unless ``use_filter``).
+
+    Shared by this kernel and the pass-2 stream of ``pqinter.py``. The
+    subspace accumulation is the SAME static unroll, in the SAME s = 0..m-1
+    order, as the jnp reference ``interaction._lut_gather`` — identical
+    reduction order is what keeps kernel scores bitwise equal to the
+    reference (and the unroll keeps the intermediate one (BD, cap, n_q)
+    block instead of a 4-D tensor). The Eq. 6 threshold comparison happens
+    in the centroid dtype, matching the reference's weak-typed-scalar
+    semantics under bf16 CS. Keep the three in lockstep."""
     idx = jnp.clip(codes, 0, cs_t.shape[0] - 1)
     centroid = jnp.take(cs_t, idx, axis=0)                  # (BD, cap, n_q)
-
-    residual = jnp.zeros_like(centroid)
-    for s in range(m):                                      # static unroll
-        gidx = res[:, :, s] + s * ksub                      # (BD, cap)
-        residual = residual + jnp.take(lut2, gidx, axis=0)  # (BD, cap, n_q)
-
+    res32 = res.astype(jnp.int32)
+    residual = jnp.take(lut2, res32[..., 0], axis=0)        # (BD, cap, n_q)
+    for s in range(1, m):                                   # static unroll
+        residual = residual + jnp.take(lut2, res32[..., s] + s * ksub,
+                                       axis=0)
     full = jnp.where(valid[..., None], centroid + residual, NEG)
     if use_filter:
-        keep = (centroid > thr_ref[0]) & valid[..., None]
-        masked = jnp.where(keep, full, NEG)
-        masked_max = jnp.max(masked, axis=1)                # (BD, n_q)
+        keep = (centroid > thr.astype(centroid.dtype)) & valid[..., None]
+        masked_max = jnp.max(jnp.where(keep, full, NEG), axis=1)
         full_max = jnp.max(full, axis=1)
         any_keep = jnp.any(keep, axis=1)
-        colmax = jnp.where(any_keep, masked_max, full_max)
+        colmax = jnp.where(any_keep, masked_max, full_max)  # (BD, n_q)
     else:
         colmax = jnp.max(full, axis=1)
-    out_ref[...] = jnp.sum(colmax, axis=-1)[None, :]
+    return jnp.sum(colmax, axis=-1)
+
+
+def _pqscore_kernel(cs_t_ref, lut2_ref, codes_ref, res_ref, mask_ref, thr_ref,
+                    out_ref, *, m: int, ksub: int, use_filter: bool):
+    scores = eq56_block(cs_t_ref[...], lut2_ref[...], codes_ref[...],
+                        res_ref[...], mask_ref[...] != 0, thr_ref[0],
+                        m=m, ksub=ksub, use_filter=use_filter)
+    out_ref[...] = scores[None, :]
 
 
 @functools.partial(jax.jit,

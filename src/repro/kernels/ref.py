@@ -39,6 +39,26 @@ def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
                                    th_r)
 
 
+def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+            res_codes: jax.Array, token_mask: jax.Array,
+            th_r: float | None, n_docs: int, k: int) -> tuple[
+                jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused phases 3-4 megakernel: centroid interaction ->
+    top-n_docs -> PQ late interaction (Eq. 5/6) -> top-k, composed exactly
+    like the unfused engine. -> (scores (k,) f32, pos (k,) i32,
+    sel2 (n_docs,) i32, sbar (n_docs,) f32); positions index the survivor
+    axis, both selections in ``lax.top_k`` order (ties: lowest first)."""
+    sbar = _ia.centroid_interaction(cs_t, codes, token_mask)
+    sbar2, sel2 = jax.lax.top_k(sbar, n_docs)
+    scores = _ia.late_interaction_pq(
+        cs_t, lut, jnp.take(codes, sel2, axis=0),
+        jnp.take(res_codes, sel2, axis=0),
+        jnp.take(token_mask, sel2, axis=0), th_r)
+    top_s, top_local = jax.lax.top_k(scores, k)
+    return (top_s, jnp.take(sel2, top_local).astype(jnp.int32),
+            sel2.astype(jnp.int32), sbar2.astype(jnp.float32))
+
+
 def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
               bitmap: jax.Array, n_filter: int) -> tuple[jax.Array,
                                                          jax.Array]:

@@ -286,7 +286,6 @@ def _recsys_cell(spec, shape_name: str, mesh: Mesh) -> Tuple[Callable, tuple]:
     cell = spec.shapes[shape_name]
     cfg = _pad_recsys_cfg(spec.make_config(), mesh)
     M = _recsys_model(spec.name)
-    dax = data_axes(mesh)
     params_avals = jax.eval_shape(
         lambda: M.init_params(jax.random.PRNGKey(0), cfg))
 

@@ -14,7 +14,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import registry
 from repro.train import optimizer as opt_lib

@@ -9,12 +9,12 @@ reproduces JMPQ ("joint optimization of PQ with the fine-tuning", Fang et al.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .layers import ModelConfig, Params, rms_norm
+from .layers import ModelConfig, Params
 from .transformer import forward_hidden, init_params as _init_lm
 
 

@@ -15,7 +15,7 @@ Two execution modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -205,7 +205,7 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         q_pos = qidx * q_chunk + jnp.arange(q_chunk)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kblk, vblk, kidx = ki
             k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
             logits = jnp.einsum("bqkgd,btkd->bkgqt", qblk,
@@ -215,20 +215,20 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             m_new = jnp.maximum(m, logits.max(axis=-1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(logits - m_new[..., None])
-            l_new = l * alpha + p.sum(axis=-1)
+            lsum_new = lsum * alpha + p.sum(axis=-1)
             pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(qblk.dtype),
                             vblk).astype(jnp.float32)
             acc_new = acc * alpha[..., None] + pv
-            return (m_new, l_new, acc_new), None
+            return (m_new, lsum_new, acc_new), None
 
         m0 = jnp.full((b, kv, g, q_chunk), -1e30, jnp.float32)
-        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        lsum0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kv, g, q_chunk, dh), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
+        (m, lsum, acc), _ = jax.lax.scan(
+            kv_step, (m0, lsum0, a0),
             (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
              jnp.arange(nk, dtype=jnp.int32)))
-        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        out = (acc / jnp.maximum(lsum, 1e-30)[..., None]).astype(q.dtype)
         return None, out.transpose(0, 3, 1, 2, 4)    # (B, qc, KV, G, Dh)
 
     _, outs = jax.lax.scan(q_step, None,

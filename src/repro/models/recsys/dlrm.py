@@ -11,7 +11,7 @@ application of EMVB's C3 recorded in DESIGN.md §5.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

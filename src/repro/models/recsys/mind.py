@@ -51,12 +51,13 @@ def user_interests(params: Params, hist_items: jax.Array, hist_valid: jax.Array,
     """hist (B, L) -> interest capsules (B, K, D), L2-normalized."""
     e = jnp.take(params["item_emb"], hist_items, axis=0)      # (B, L, D)
     eh = e @ params["s"]                                       # (B, L, D)
-    b_sz, l, d = e.shape
+    b_sz, seq_len, d = e.shape
     k = cfg.n_interests
     # routing logits init: fixed (deterministic) per-position pattern — the
     # paper uses random init; a fixed hash keeps the fn jit-pure.
-    blogit = jnp.sin(jnp.arange(l)[:, None] * (1.0 + jnp.arange(k))[None, :])
-    blogit = jnp.broadcast_to(blogit, (b_sz, l, k)).astype(jnp.float32)
+    blogit = jnp.sin(jnp.arange(seq_len)[:, None]
+                     * (1.0 + jnp.arange(k))[None, :])
+    blogit = jnp.broadcast_to(blogit, (b_sz, seq_len, k)).astype(jnp.float32)
     neg = -1e9
     caps = None
     for _ in range(cfg.capsule_iters):

@@ -18,7 +18,7 @@ state.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -13,7 +13,6 @@ bf16 for the ZeRO-lean configs.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

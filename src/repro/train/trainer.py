@@ -15,7 +15,6 @@ Features (see DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import signal
 import time
 from typing import Any, Callable, NamedTuple, Optional

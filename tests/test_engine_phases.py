@@ -24,6 +24,8 @@ def _compose(idx, q, cfg):
     else:
         cs, bits, bitmap = engine.phase1_candidates(idx, q, cfg)
         sel1 = engine.phase2_prefilter(idx, bits, bitmap, cfg)
+    if cfg.use_kernels and cfg.fused_late_interaction:
+        return engine.phase34_late_interaction(idx, q, cs, sel1, cfg)
     sel2 = engine.phase3_centroid_interaction(idx, cs, sel1, cfg)
     return engine.phase4_late_interaction(idx, q, cs, sel2, cfg)
 
@@ -87,3 +89,44 @@ def test_fused_prefilter_matches_unfused_selection(small_corpus, small_index):
         _, sel_f = engine.phase12_prefilter(idx, q, fcfg)
         _, sel_u = engine.phase12_prefilter(idx, q, ucfg)
         np.testing.assert_array_equal(np.asarray(sel_f), np.asarray(sel_u))
+
+
+@pytest.mark.parametrize("mode", ["score_all", "compact"])
+def test_fused_retrieve_matches_reference_engine(small_corpus, small_index,
+                                                 mode):
+    """End-to-end: the fully fused kernel engine (prefilter + late-
+    interaction megakernels) reproduces the pure-jnp reference retrieve
+    bit-exactly — ids AND score bits — in both candidate modes."""
+    idx, _ = small_index
+    queries = jnp.asarray(small_corpus.queries[:2])
+    base = dataclasses.replace(CFG, candidate_mode=mode, cand_cap=600)
+    ref = engine.retrieve(idx, queries, base)
+    fused = engine.retrieve(idx, queries,
+                            dataclasses.replace(base, use_kernels=True))
+    np.testing.assert_array_equal(np.asarray(fused.doc_ids),
+                                  np.asarray(ref.doc_ids))
+    np.testing.assert_array_equal(np.asarray(fused.scores),
+                                  np.asarray(ref.scores))
+
+
+@pytest.mark.parametrize("th_r", [None, 0.4])
+def test_fused_late_interaction_matches_unfused(small_corpus, small_index,
+                                                th_r):
+    """The phase-3/4 megakernel's final (scores, ids) equal the
+    cinter -> top_k -> pqscore -> top_k path's bit-exactly (same docs, same
+    order, same score bits) on the real index, both Eq. 5 and Eq. 6 modes."""
+    idx, _ = small_index
+    q = jnp.asarray(small_corpus.queries[0])
+    base = dataclasses.replace(CFG, th_r=th_r, use_kernels=True)
+    fcfg = dataclasses.replace(base, fused_late_interaction=True)
+    ucfg = dataclasses.replace(base, fused_late_interaction=False)
+    cs, sel1 = engine.phase12_prefilter(idx, q, base)
+    s_f, i_f = engine.phase34_late_interaction(idx, q, cs, sel1, fcfg)
+    s_u, i_u = engine.phase34_late_interaction(idx, q, cs, sel1, ucfg)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_u))
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_u))
+    # and against the pure-jnp reference engine (no kernels at all)
+    s_r, i_r = engine.phase34_late_interaction(
+        idx, q, cs, sel1, dataclasses.replace(base, use_kernels=False))
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_r))
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_r))

@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
 in Pallas interpret mode (the CPU-validation target per the assignment)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -169,3 +168,109 @@ def test_prefilter_fused_bf16_cs():
     cs, codes, mask, _, _ = _inputs(32, 640, 100, 24, 16, 16)
     _assert_prefilter_matches_ref(cs.astype(jnp.bfloat16), codes, mask,
                                   _bitmap(100), 40, th=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Fused phase-3/4 megakernel (centroid interaction + selection + PQ late
+# interaction + final top-k in one launch)
+# ---------------------------------------------------------------------------
+
+def _tie_heavy(n_q, n_c, n_docs, cap, m, ksub, seed=0, levels=2):
+    """Inputs whose scores collide constantly: CS and LUT quantized to
+    ``levels`` distinct values, so both the phase-3 S̄ selection and the
+    final top-k are decided by tie-breaking almost everywhere."""
+    cs, codes, mask, lut, res = _inputs(n_q, n_c, n_docs, cap, m, ksub, seed)
+    cs = jnp.asarray(np.round(np.asarray(cs) * levels) / levels)
+    lut = jnp.asarray(np.round(np.asarray(lut) * levels) / levels)
+    return cs, codes, mask, lut, res
+
+
+def _assert_pqinter_matches_ref(cs, codes, mask, lut, res, th_r, n_docs, k):
+    out = ops.pqinter(cs.T, lut, codes, res, mask, th_r, n_docs, k)
+    exp = ref.pqinter(cs.T, lut, codes, res, mask, th_r, n_docs, k)
+    for got, want, name in zip(out, exp, ("scores", "pos", "sel2", "sbar")):
+        # selection AND score parity are BIT-EXACT, incl. lax.top_k tie order
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=name)
+
+
+# SHAPES[1] is exercised by test_pqinter_fused_all_terms_filtered below —
+# keeping it out of the sweep saves two compiles of the unrolled megakernel.
+@pytest.mark.parametrize("shape", [SHAPES[0], SHAPES[2], SHAPES[3]])
+@pytest.mark.parametrize("th_r", [None, 0.5])
+def test_pqinter_fused(shape, th_r):
+    """Eq. 5 (th_r=None) and Eq. 6 (th_r=0.5) across the shape sweep."""
+    cs, codes, mask, lut, res = _inputs(*shape)
+    n_docs = max(1, codes.shape[0] // 3)
+    _assert_pqinter_matches_ref(cs, codes, mask, lut, res, th_r, n_docs,
+                                max(1, n_docs // 4))
+
+
+@pytest.mark.parametrize("shape,th_r", [(SHAPES[0], 0.5), (SHAPES[3], None)])
+def test_pqinter_fused_tie_heavy(shape, th_r):
+    """Quantized score distributions: ranking is almost entirely tie-breaks,
+    which must match lax.top_k's lowest-index order at BOTH selections."""
+    cs, codes, mask, lut, res = _tie_heavy(*shape)
+    n_docs = max(1, codes.shape[0] // 2)
+    _assert_pqinter_matches_ref(cs, codes, mask, lut, res, th_r, n_docs,
+                                max(1, n_docs // 3))
+
+
+def test_pqinter_fused_selection_boundaries():
+    """n_docs == n_filter (phase 3 selects everything — order must still
+    match) with k == n_docs, and k == 1 (the final merge degenerates to an
+    argmax)."""
+    cs, codes, mask, lut, res = _inputs(*SHAPES[0], seed=5)
+    n = codes.shape[0]
+    _assert_pqinter_matches_ref(cs, codes, mask, lut, res, 0.5, n, n)
+    _assert_pqinter_matches_ref(cs, codes, mask, lut, res, 0.5, n, 1)
+
+
+def test_pqinter_fused_empty_survivors():
+    """Every survivor slot is padding (all tokens masked): scores collapse
+    to the n_q * NEG floor and the top-k must fall back to index order."""
+    cs, codes, mask, lut, res = _inputs(32, 256, 64, 16, 8, 16)
+    empty = jnp.zeros_like(mask)
+    _assert_pqinter_matches_ref(cs, codes, empty, lut, res, 0.5, 32, 10)
+    scores, pos, _, _ = ops.pqinter(cs.T, lut, codes, res, empty, 0.5, 32, 10)
+    np.testing.assert_array_equal(np.asarray(pos), np.arange(10))
+
+
+def test_pqinter_fused_all_terms_filtered():
+    """th_r above every centroid score: every J̄_i is empty, so Eq. 6 must
+    fall back to Eq. 5 for every term — and still match the ref bitwise."""
+    cs, codes, mask, lut, res = _inputs(32, 640, 100, 24, 16, 16)
+    _assert_pqinter_matches_ref(cs, codes, mask, lut, res, 1e9, 40, 10)
+    s_eq6, p_eq6, _, _ = ops.pqinter(cs.T, lut, codes, res, mask, 1e9, 40, 10)
+    s_eq5, p_eq5, _, _ = ops.pqinter(cs.T, lut, codes, res, mask, None, 40, 10)
+    np.testing.assert_array_equal(np.asarray(p_eq6), np.asarray(p_eq5))
+    np.testing.assert_array_equal(np.asarray(s_eq6), np.asarray(s_eq5))
+
+
+def test_pqinter_fused_bf16_cs():
+    """bf16 centroid scores: S̄ rides bf16 exactly like the reference (the
+    f32 cast in the merge is lossless and order-preserving), and the Eq. 6
+    threshold comparison happens in the CS dtype on both sides — parity
+    stays bit-exact, selections and score bits included."""
+    cs, codes, mask, lut, res = _inputs(32, 640, 100, 24, 16, 16)
+    cs16 = cs.astype(jnp.bfloat16)
+    _assert_pqinter_matches_ref(cs16, codes, mask, lut, res, 0.5, 40, 10)
+    _assert_pqinter_matches_ref(cs16, codes, mask, lut, res, None, 40, 10)
+
+
+def test_pqinter_fused_block_boundaries():
+    """Survivor counts straddling the pass-1 block and n_docs straddling the
+    pass-2 block (explicit small blocks so both loops run >1 iteration with
+    a ragged tail): padded rows / dead buffer lanes must never be selected."""
+    from repro.kernels.pqinter import pqinter
+
+    for n_docs, nd in ((95, 33), (97, 31)):
+        cs, codes, mask, lut, res = _inputs(32, 256, n_docs, 16, 8, 16,
+                                            seed=7)
+        out = pqinter(cs.T, lut, codes, res, mask, 0.3, nd, 9,
+                      block_d1=32, block_d2=16)
+        exp = ref.pqinter(cs.T, lut, codes, res, mask, 0.3, nd, 9)
+        for got, want, name in zip(out, exp, ("scores", "pos", "sel2",
+                                              "sbar")):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=name)

@@ -1,5 +1,4 @@
 """Hypothesis property tests on the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -136,7 +135,6 @@ def test_residual_codec_error_bounded_by_buckets(seed, b):
     dec = np.asarray(residual.decode_residual(
         residual.encode_residual(jnp.asarray(r), codec), codec, 16))
     # reconstruction is within the spread of adjacent bucket weights
-    w = np.asarray(codec.bucket_weights)
     max_gap = np.max(np.abs(r - dec))
     assert max_gap <= np.abs(r).max() + 1e-6
     # quantizing the decoded values again is a fixed point

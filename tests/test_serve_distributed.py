@@ -24,6 +24,27 @@ def test_shardmap_matches_global_single_device(small_corpus, small_index):
                                np.asarray(out.scores), rtol=1e-5)
 
 
+def test_shardmap_runs_fused_megakernels(small_corpus, small_index):
+    """The fully fused kernel engine (prefilter + late-interaction
+    megakernels) runs inside shard_map against the local shard and matches
+    the jnp-reference shard_map plan bit-exactly."""
+    import dataclasses
+
+    idx, _ = small_index
+    q = jnp.asarray(small_corpus.queries[:4])
+    kcfg = dataclasses.replace(CFG, use_kernels=True, fused_prefilter=True,
+                               fused_late_interaction=True)
+    ref = engine.retrieve(idx, q, kcfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    step = make_shardmap_retriever(mesh, kcfg)
+    with mesh:
+        out = step(shard_index(idx, 1), q)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(out.scores))
+
+
 def test_shard_index_partitions_consistently(small_index):
     idx, meta = small_index
     n_shards = 4

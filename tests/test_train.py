@@ -110,8 +110,6 @@ def test_compressed_grads_still_descend(params):
 
 
 def test_sigterm_saves_and_stops(params):
-    import os
-    import signal
     with tempfile.TemporaryDirectory() as d:
         opt = O.make("adamw")
         cfg = TrainerConfig(ckpt_dir=d, ckpt_every=1000, log_every=1)
