@@ -1,0 +1,55 @@
+"""Query-embedding pruning sweep (Tonellotto & Macdonald, 2021) — the speed
+knob end-to-end query-term masking unlocks on top of EMVB's pipeline (PLAID
+has no analogue).
+
+``prune_queries(q, keep)`` drops the least-important query terms and returns
+the physically smaller (B, keep, d) query plus its term mask; every per-term
+tensor in all four phases shrinks with it (CS rows, stacked bit-vector bits,
+S̄ rows, LUT rows). Rows report batch retrieval latency AND MRR@10 per
+``keep`` level, so the CI artifact tracks the latency/quality trade-off:
+
+    fig6,prune,keep=<K>,retrieve,<us_per_query>,mrr=<m>,speedup=x<s>
+
+keep = n_q (32) is the unpruned baseline the speedups are measured against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, prune_queries
+from repro.core import engine as emvb
+from repro.data.synthetic import mrr_at_k
+
+from .common import TH, TH_R, bench_corpus, bench_index, row, time_fn
+
+KEEP_LEVELS = (32, 24, 16, 8)
+
+
+def run() -> list[str]:
+    corpus = bench_corpus("msmarco")
+    queries = jnp.asarray(corpus.queries)                # (B, 32, d)
+    idx, _ = bench_index("msmarco", m=16)
+    cfg = EngineConfig(k=10, n_filter=512, n_docs=64, th=TH, th_r=TH_R)
+    b = queries.shape[0]
+
+    rows = []
+    base_t = None
+    for keep in KEEP_LEVELS:
+        qp, qm = prune_queries(queries, keep)
+        t = time_fn(lambda qp=qp, qm=qm: emvb.retrieve(idx, qp, cfg, qm))
+        ids = np.asarray(emvb.retrieve(idx, qp, cfg, qm).doc_ids)
+        mrr = mrr_at_k(ids, corpus.gt_doc)
+        if base_t is None:
+            base_t = t                                   # keep == n_q
+        rows.append(row(f"fig6,prune,keep={keep},retrieve", t / b * 1e6,
+                        f"mrr={mrr:.3f},speedup=x{base_t / t:.2f}"))
+    return rows
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

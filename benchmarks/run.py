@@ -5,10 +5,11 @@ Emits ``name,us_per_call,derived`` CSV rows (absolute times are single-core
 CPU; the EMVB/PLAID *ratios* are the reproduction target).
 
 ``--smoke`` runs the fast default subset (fig1: the phase breakdown plus the
-fused-vs-unfused megakernel rows) and writes the rows to ``BENCH_smoke.json``
-so CI can upload the perf trajectory as a per-push artifact; ``--json PATH``
-does the same for any suite selection. BENCH_*.json is gitignored by design —
-machine-dependent numbers belong in artifacts, not history.
+fused-vs-unfused megakernel rows; fig6: the query-pruning latency/MRR sweep)
+and writes the rows to ``BENCH_smoke.json`` so CI can upload the perf
+trajectory as a per-push artifact; ``--json PATH`` does the same for any
+suite selection. BENCH_*.json is gitignored by design — machine-dependent
+numbers belong in artifacts, not history.
 """
 
 import argparse
@@ -18,7 +19,8 @@ import sys
 import time
 
 from . import (fig1_breakdown, fig2_threshold, fig4_membership,
-               fig5_termfilter, roofline, table1_msmarco, table2_ood)
+               fig5_termfilter, fig6_pruning, roofline, table1_msmarco,
+               table2_ood)
 
 SUITES = {
     "table1": table1_msmarco,
@@ -27,9 +29,10 @@ SUITES = {
     "fig2": fig2_threshold,
     "fig4": fig4_membership,
     "fig5": fig5_termfilter,
+    "fig6": fig6_pruning,
     "roofline": roofline,
 }
-SMOKE_SUITES = ["fig1"]
+SMOKE_SUITES = ["fig1", "fig6"]
 
 
 def main() -> None:

@@ -15,6 +15,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import time  # noqa: E402
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
@@ -38,8 +39,11 @@ def main() -> None:
     stacked = shard_index(index, n_dev)
     retriever = make_shardmap_retriever(mesh, cfg)
 
-    queries = np.asarray(corpus.queries)
-    res = retriever(stacked, queries)                     # compile
+    # device-resident queries ONCE, outside the loop: timing host numpy
+    # arrays re-transfers them every iteration, so the loop would measure
+    # H2D copies instead of the retrieval plan
+    queries = jnp.asarray(corpus.queries)
+    jax.block_until_ready(retriever(stacked, queries))    # compile
     lat = []
     for _ in range(5):
         t0 = time.perf_counter()

@@ -1,5 +1,5 @@
 """EMVB core — the paper's contribution as composable JAX modules."""
 from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual  # noqa: F401
-from .engine import EngineConfig, retrieve  # noqa: F401
+from .engine import EngineConfig, prune_queries, retrieve  # noqa: F401
 from .index import PackedIndex, IndexMeta, build_index, bytes_per_embedding  # noqa: F401
 from .plaid import PlaidConfig  # noqa: F401

@@ -18,19 +18,28 @@ are the Pallas versions.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 
-def build_bitvectors(cs: jax.Array, th: float) -> jax.Array:
+def build_bitvectors(cs: jax.Array, th: float,
+                     q_mask: Optional[jax.Array] = None) -> jax.Array:
     """Pack per-term threshold masks into stacked bit vectors.
 
-    cs : (..., n_q, n_c) centroid score matrix (n_q <= 32)
+    cs     : (..., n_q, n_c) centroid score matrix (n_q <= 32)
+    q_mask : optional (..., n_q) bool — True for live query terms. Masked
+             (padded / pruned) terms pack a 0 bit for EVERY centroid, so
+             Eq. 4's popcount can never count them.
     -> (..., n_c) uint32 ; bit i of word c == (cs[..., i, c] > th)
     """
     n_q = cs.shape[-2]
     assert n_q <= 32, "stacked bitvector packs one query term per bit of uint32"
-    mask = (cs > th).astype(jnp.uint32)
+    mask = (cs > th)
+    if q_mask is not None:
+        mask = mask & q_mask[..., :, None]
+    mask = mask.astype(jnp.uint32)
     shifts = jnp.arange(n_q, dtype=jnp.uint32)
     # Disjoint bit fields: sum == bitwise OR.
     return jnp.sum(mask << shifts[..., :, None], axis=-2).astype(jnp.uint32)
@@ -63,16 +72,33 @@ def filter_score_batch(bits: jax.Array, codes: jax.Array,
     return jax.vmap(filter_score, in_axes=(0, None, None))(bits, codes, token_mask)
 
 
-def masked_topk_centroids(cs: jax.Array, th: float, nprobe: int) -> jax.Array:
+def masked_topk_centroids(cs: jax.Array, th: float, nprobe: int,
+                          q_mask: Optional[jax.Array] = None) -> jax.Array:
     """Top-nprobe centroid ids per query term, restricted to the survivors of
     the threshold (paper §4.1: the pre-filter 'tears down' the number of
     evaluated elements; the TPU-native equivalent masks non-survivors to -inf
     so top_k never ranks them above any survivor).
 
-    cs -> (..., n_q, nprobe) int32. If a term has fewer than nprobe survivors
-    the remaining slots fall back to the best non-survivors (harmless: their
-    inverted lists are unioned with higher-scoring ones).
+    The ranking runs in f32 regardless of the CS dtype: the old code
+    computed ``cs - 1e6`` in the CS dtype, and under reduced-precision CS
+    (bf16 ulp at 1e6 is 2048) that offset collapsed all non-survivor scores
+    onto a handful of values, so the bf16 probe selection silently diverged
+    from the f32 one. Casting to f32 first is the dtype-safe fix that
+    PRESERVES the fallback ordering: if a term has fewer than nprobe
+    survivors the remaining slots still fall back to the best-scoring
+    non-survivors (harmless: their inverted lists are unioned with
+    higher-scoring ones). For f32 CS this is bit-identical to the old
+    behavior.
+
+    q_mask : optional (..., n_q) bool — masked terms probe NOTHING: their
+             rows are returned as the one-past-end sentinel ``n_c``, which
+             ``candidate_bitmap`` treats as an empty list.
+    cs -> (..., n_q, nprobe) int32.
     """
-    masked = jnp.where(cs > th, cs, cs - 1e6)
+    cs32 = cs.astype(jnp.float32)
+    masked = jnp.where(cs > th, cs32, cs32 - 1e6)
     _, idx = jax.lax.top_k(masked, nprobe)
-    return idx.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+    if q_mask is not None:
+        idx = jnp.where(q_mask[..., :, None], idx, jnp.int32(cs.shape[-1]))
+    return idx

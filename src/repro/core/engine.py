@@ -11,6 +11,14 @@ Every phase has fixed shapes. ``EngineConfig`` is hashable and passed as a
 static jit argument. The same functions run single-device (benchmarks/tests)
 and under shard_map with per-shard local indices (launch/serve.py).
 
+Query-term masking: every entry point takes an optional per-term mask
+(``q_masks (B, n_q)`` / ``q_mask (n_q,)`` bool, True = live). Masked
+(zero-padded or pruned) terms are excluded end-to-end — no bit in the
+Eq. 4 bit vectors, no IVF probes, no row in S̄, no MaxSim term in Eq. 5/6 —
+so retrieval of a padded query with its mask is bit-exact to retrieval of
+the unpadded prefix (tests/test_query_masking.py), and ``prune_queries``
+turns the mask into a latency knob (smaller static n_q).
+
 The public phase-split entry points (``phase1_candidates`` …
 ``phase4_late_interaction``, plus the fused ``phase12_prefilter`` and
 ``phase34_late_interaction``) and ``retrieve`` share the SAME internal
@@ -78,6 +86,49 @@ class EngineConfig:
     # matrix HBM traffic — the memory bound of the sharded serving plan.
     cs_dtype: str = "float32"
 
+    def __post_init__(self):
+        """Fail fast with actionable messages on the configs that otherwise
+        die deep inside ``top_k``/the bit pack (or worse, run silently
+        wrong)."""
+        if self.n_q > 32:
+            raise ValueError(
+                f"n_q={self.n_q} > 32: the stacked bit vector packs one "
+                "query term per bit of a uint32 word (paper Fig. 3); split "
+                "the query or widen the word type first")
+        if self.k > self.n_docs:
+            raise ValueError(
+                f"k={self.k} > n_docs={self.n_docs}: phase 4 can only rank "
+                "the n_docs survivors of phase 3; raise n_docs (paper uses "
+                "n_docs >= 4*k) or lower k")
+        if self.n_docs > self.n_filter:
+            raise ValueError(
+                f"n_docs={self.n_docs} > n_filter={self.n_filter}: phase 3 "
+                "selects from the n_filter bit-vector survivors; raise "
+                "n_filter or lower n_docs")
+        if self.candidate_mode not in ("score_all", "compact"):
+            raise ValueError(
+                f"unknown candidate_mode={self.candidate_mode!r}: expected "
+                "'score_all' (mask the whole corpus by the candidate "
+                "bitmap) or 'compact' (gather candidates into a cand_cap "
+                "buffer)")
+        # cand_cap only bounds the compact-mode candidate buffer; score_all
+        # configs never touch it, so don't reject them over its default.
+        if self.candidate_mode == "compact" and self.cand_cap < self.n_filter:
+            raise ValueError(
+                f"cand_cap={self.cand_cap} < n_filter={self.n_filter}: in "
+                "candidate_mode='compact' the top-n_filter selection runs "
+                "over the cand_cap candidate buffer; raise cand_cap to at "
+                "least n_filter")
+        if self.compact_cap is not None and self.th_r is None:
+            raise ValueError(
+                f"compact_cap={self.compact_cap} requires th_r: per-token "
+                "compaction keeps tokens whose centroid beats the Eq. 6 "
+                "threshold — set th_r or drop compact_cap")
+        if self.cs_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"unknown cs_dtype={self.cs_dtype!r}: expected 'float32' or "
+                "'bfloat16'")
+
 
 class RetrievalResult(NamedTuple):
     scores: jax.Array   # (B, k)
@@ -105,9 +156,16 @@ def centroid_scores(q: jax.Array, centroids: jax.Array,
 
 def candidate_bitmap(ivf: jax.Array, ivf_lens: jax.Array, probe_ids: jax.Array,
                      n_docs: int) -> jax.Array:
-    """Union of the IVF lists of the probed centroids -> (n_docs,) bool."""
-    lists = jnp.take(ivf, probe_ids.reshape(-1), axis=0)        # (P, list_cap)
-    lens = jnp.take(ivf_lens, probe_ids.reshape(-1), axis=0)    # (P,)
+    """Union of the IVF lists of the probed centroids -> (n_docs,) bool.
+
+    Probe ids >= n_c (the one-past-end sentinel ``masked_topk_centroids``
+    emits for masked query terms) contribute NOTHING: their list length is
+    forced to 0, so a padded/pruned term cannot add candidates."""
+    n_c = ivf.shape[0]
+    flat = probe_ids.reshape(-1)
+    safe = jnp.clip(flat, 0, n_c - 1)
+    lists = jnp.take(ivf, safe, axis=0)                          # (P, list_cap)
+    lens = jnp.where(flat < n_c, jnp.take(ivf_lens, safe), 0)    # (P,)
     valid = jnp.arange(ivf.shape[1])[None, :] < lens[:, None]
     ids = jnp.where(valid, lists, n_docs)                        # sentinel
     bitmap = jnp.zeros((n_docs,), jnp.bool_)
@@ -119,15 +177,19 @@ def candidate_bitmap(ivf: jax.Array, ivf_lens: jax.Array, probe_ids: jax.Array,
 # public phase-split entry points.
 # ---------------------------------------------------------------------------
 
-def _phase1(q: jax.Array, index: PackedIndex, cfg: EngineConfig):
-    """-> (cs (n_q, n_c), bits (n_c,) u32, bitmap (n_docs,) bool)."""
+def _phase1(q: jax.Array, index: PackedIndex, cfg: EngineConfig,
+            q_mask: Optional[jax.Array] = None):
+    """-> (cs (n_q, n_c), bits (n_c,) u32, bitmap (n_docs,) bool).
+
+    q_mask (n_q,) bool: masked terms pack a 0 bit AND probe no IVF lists."""
     kops = _kops(cfg)
     cs = centroid_scores(q, index.centroids, cfg.cs_dtype)
     if kops is not None:
-        bits = kops.bitpack(cs, cfg.th, interpret=cfg.kernel_interpret)
+        bits = kops.bitpack(cs, cfg.th, q_mask, interpret=cfg.kernel_interpret)
     else:
-        bits = bitvector.build_bitvectors(cs, cfg.th)
-    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
+        bits = bitvector.build_bitvectors(cs, cfg.th, q_mask)
+    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe,
+                                                q_mask)
     bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
                               index.codes.shape[0])
     return cs, bits, bitmap
@@ -169,16 +231,17 @@ def _phase2(index: PackedIndex, token_mask: jax.Array, bits: jax.Array,
 
 
 def _phase12(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
-             cfg: EngineConfig):
+             cfg: EngineConfig, q_mask: Optional[jax.Array] = None):
     """Phases 1-2 -> (cs, sel1). Dispatches to the fused megakernel when
     configured; otherwise composes _phase1 + _phase2."""
     kops = _kops(cfg)
     if kops is None or not cfg.fused_prefilter:
-        cs, bits, bitmap = _phase1(q, index, cfg)
+        cs, bits, bitmap = _phase1(q, index, cfg, q_mask)
         return cs, _phase2(index, token_mask, bits, bitmap, cfg)
     # Fused path: the bit table never leaves the kernel; no full-corpus f.
     cs = centroid_scores(q, index.centroids, cfg.cs_dtype)
-    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe)
+    probe_ids = bitvector.masked_topk_centroids(cs, cfg.th, cfg.nprobe,
+                                                q_mask)
     bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
                               index.codes.shape[0])
     if cfg.candidate_mode == "compact":
@@ -186,34 +249,37 @@ def _phase12(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
         c_codes = jnp.take(index.codes, cand_ids, axis=0)
         c_mask = jnp.take(token_mask, cand_ids, axis=0)
         _, sel1_local, _ = kops.prefilter(cs, cfg.th, c_codes, c_mask,
-                                          cand_valid, cfg.n_filter,
+                                          cand_valid, cfg.n_filter, q_mask,
                                           interpret=cfg.kernel_interpret)
         sel1 = jnp.take(cand_ids, sel1_local)
     else:
         _, sel1, _ = kops.prefilter(cs, cfg.th, index.codes, token_mask,
-                                    bitmap, cfg.n_filter,
+                                    bitmap, cfg.n_filter, q_mask,
                                     interpret=cfg.kernel_interpret)
     return cs, sel1.astype(jnp.int32)
 
 
 def _phase3(index: PackedIndex, token_mask: jax.Array, cs: jax.Array,
-            sel1: jax.Array, cfg: EngineConfig) -> jax.Array:
+            sel1: jax.Array, cfg: EngineConfig,
+            q_mask: Optional[jax.Array] = None) -> jax.Array:
     """Centroid interaction on survivors -> sel2 (n_docs,) int32."""
     kops = _kops(cfg)
     cs_t = cs.T                                                  # (n_c, n_q)
     s1_codes = jnp.take(index.codes, sel1, axis=0)               # (nf, cap)
     s1_mask = jnp.take(token_mask, sel1, axis=0)
     if kops is not None:
-        sbar = kops.cinter(cs_t, s1_codes, s1_mask,
+        sbar = kops.cinter(cs_t, s1_codes, s1_mask, q_mask,
                            interpret=cfg.kernel_interpret)
     else:
-        sbar = interaction.centroid_interaction(cs_t, s1_codes, s1_mask)
+        sbar = interaction.centroid_interaction(cs_t, s1_codes, s1_mask,
+                                                q_mask)
     _, sel2_local = jax.lax.top_k(sbar, cfg.n_docs)
     return jnp.take(sel1, sel2_local)                            # (nd,)
 
 
 def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
-            cs: jax.Array, sel2: jax.Array, cfg: EngineConfig):
+            cs: jax.Array, sel2: jax.Array, cfg: EngineConfig,
+            q_mask: Optional[jax.Array] = None):
     """PQ late interaction (+ Eq. 6 term filter) -> (scores, ids), (k,)."""
     kops = _kops(cfg)
     n_c = index.centroids.shape[0]
@@ -226,10 +292,11 @@ def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
     s2_mask = jnp.take(token_mask, sel2, axis=0)
     if kops is not None:
         scores = kops.pqscore(cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r,
-                              interpret=cfg.kernel_interpret)
+                              q_mask, interpret=cfg.kernel_interpret)
     elif cfg.compact_cap is not None and cfg.th_r is not None:
         scores = interaction.late_interaction_pq_compact(
-            cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, cfg.compact_cap)
+            cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, cfg.compact_cap,
+            q_mask=q_mask)
     else:
         centroid = None
         if cfg.cs_dtype != "float32":
@@ -240,19 +307,21 @@ def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
                                  jnp.clip(s2_codes, 0, n_c - 1), axis=0)
             centroid = jnp.einsum("ntd,qd->ntq", cent_vecs, q)
         scores = interaction.late_interaction_pq(
-            cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, centroid=centroid)
+            cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, centroid=centroid,
+            q_mask=q_mask)
     top_scores, top_local = jax.lax.top_k(scores, cfg.k)
     return top_scores, jnp.take(sel2, top_local)
 
 
 def _phase34(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
-             cs: jax.Array, sel1: jax.Array, cfg: EngineConfig):
+             cs: jax.Array, sel1: jax.Array, cfg: EngineConfig,
+             q_mask: Optional[jax.Array] = None):
     """Phases 3-4 -> (scores, ids), both (k,). Dispatches to the fused
     megakernel when configured; otherwise composes _phase3 + _phase4."""
     kops = _kops(cfg)
     if kops is None or not cfg.fused_late_interaction:
-        sel2 = _phase3(index, token_mask, cs, sel1, cfg)
-        return _phase4(index, token_mask, q, cs, sel2, cfg)
+        sel2 = _phase3(index, token_mask, cs, sel1, cfg, q_mask)
+        return _phase4(index, token_mask, q, cs, sel2, cfg, q_mask)
     # Fused path: S̄, the phase-3 selection, the Eq. 5/6 PQ scores and the
     # final top-k never leave the kernel; codes/residuals are gathered ONCE
     # for the phase-2 survivors instead of once per phase.
@@ -263,7 +332,7 @@ def _phase34(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
     s1_mask = jnp.take(token_mask, sel1, axis=0)
     top_scores, top_pos, _, _ = kops.pqinter(
         cs.T, lut, s1_codes, s1_res, s1_mask, cfg.th_r, cfg.n_docs, cfg.k,
-        interpret=cfg.kernel_interpret)
+        q_mask, interpret=cfg.kernel_interpret)
     return top_scores, jnp.take(sel1, top_pos)
 
 
@@ -272,18 +341,33 @@ def _phase34(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
-                  cfg: EngineConfig) -> RetrievalResult:
-    cs, sel1 = _phase12(q, index, token_mask, cfg)
-    top_scores, top_ids = _phase34(index, token_mask, q, cs, sel1, cfg)
+                  cfg: EngineConfig,
+                  q_mask: Optional[jax.Array] = None) -> RetrievalResult:
+    cs, sel1 = _phase12(q, index, token_mask, cfg, q_mask)
+    top_scores, top_ids = _phase34(index, token_mask, q, cs, sel1, cfg,
+                                   q_mask)
     return RetrievalResult(top_scores, top_ids)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def retrieve(index: PackedIndex, queries: jax.Array,
-             cfg: EngineConfig) -> RetrievalResult:
-    """queries (B, n_q, d) -> top-k (scores, ids) per query."""
+def retrieve(index: PackedIndex, queries: jax.Array, cfg: EngineConfig,
+             q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+    """queries (B, n_q, d) -> top-k (scores, ids) per query.
+
+    q_masks : optional (B, n_q) bool — True for live query terms. Masked
+    (zero-padded / pruned) terms are excluded from every phase: they pack no
+    bit into the Eq. 4 bit vectors, probe no IVF lists, contribute no row to
+    S̄ and no MaxSim term to Eq. 5/6. Retrieval of a padded query with its
+    mask is bit-exact to retrieval of the unpadded prefix; omitting the mask
+    (or passing all-True) reproduces the unmasked pipeline bit for bit.
+    """
     token_mask = index.token_mask()
-    return jax.vmap(lambda q: _retrieve_one(q, index, token_mask, cfg))(queries)
+    if q_masks is None:
+        return jax.vmap(
+            lambda q: _retrieve_one(q, index, token_mask, cfg))(queries)
+    return jax.vmap(
+        lambda q, m: _retrieve_one(q, index, token_mask, cfg, m)
+    )(queries, q_masks)
 
 
 # ---------------------------------------------------------------------------
@@ -292,42 +376,89 @@ def retrieve(index: PackedIndex, queries: jax.Array,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase1_candidates(index: PackedIndex, q: jax.Array, cfg: EngineConfig):
-    return _phase1(q, index, cfg)
+def phase1_candidates(index: PackedIndex, q: jax.Array, cfg: EngineConfig,
+                      q_mask: Optional[jax.Array] = None):
+    return _phase1(q, index, cfg, q_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase2_prefilter(index: PackedIndex, bits: jax.Array, bitmap: jax.Array,
                      cfg: EngineConfig):
+    # No q_mask: masked terms are already 0 bits in ``bits`` (phase 1), so
+    # Eq. 4's popcount structurally cannot count them.
     return _phase2(index, index.token_mask(), bits, bitmap, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase12_prefilter(index: PackedIndex, q: jax.Array, cfg: EngineConfig):
+def phase12_prefilter(index: PackedIndex, q: jax.Array, cfg: EngineConfig,
+                      q_mask: Optional[jax.Array] = None):
     """Fused phases 1-2 -> (cs, sel1); with a fused-prefilter config this is
     the single megakernel launch the breakdown benchmark times against the
     phase1_candidates + phase2_prefilter pair."""
-    return _phase12(q, index, index.token_mask(), cfg)
+    return _phase12(q, index, index.token_mask(), cfg, q_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
-                                sel1: jax.Array, cfg: EngineConfig):
-    return _phase3(index, index.token_mask(), cs, sel1, cfg)
+                                sel1: jax.Array, cfg: EngineConfig,
+                                q_mask: Optional[jax.Array] = None):
+    return _phase3(index, index.token_mask(), cs, sel1, cfg, q_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase4_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
-                            sel2: jax.Array, cfg: EngineConfig):
-    return _phase4(index, index.token_mask(), q, cs, sel2, cfg)
+                            sel2: jax.Array, cfg: EngineConfig,
+                            q_mask: Optional[jax.Array] = None):
+    return _phase4(index, index.token_mask(), q, cs, sel2, cfg, q_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase34_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
-                             sel1: jax.Array, cfg: EngineConfig):
+                             sel1: jax.Array, cfg: EngineConfig,
+                             q_mask: Optional[jax.Array] = None):
     """Fused phases 3-4 -> (scores, ids); with a fused-late-interaction
     config this is the single megakernel launch the breakdown benchmark
     times against the phase3_centroid_interaction + phase4_late_interaction
     pair (which keep their unfused behavior, mirroring how phase1/phase2
     relate to phase12_prefilter)."""
-    return _phase34(index, index.token_mask(), q, cs, sel1, cfg)
+    return _phase34(index, index.token_mask(), q, cs, sel1, cfg, q_mask)
+
+
+# ---------------------------------------------------------------------------
+# Query-embedding pruning (Tonellotto & Macdonald, 2021) — the speed knob
+# query masking unlocks on top of EMVB's pipeline.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("keep",))
+def prune_queries(q: jax.Array, keep: int,
+                  importance: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Keep the ``keep`` most important terms of each query.
+
+    q          : (..., n_q, d) query term embeddings
+    keep       : static number of terms to retain (keep <= n_q)
+    importance : optional (..., n_q) per-term importance. Defaults to the
+                 term's L2 norm — zero-padded terms rank last, so pruning
+                 doubles as pad-stripping; callers with model-derived
+                 importance (e.g. encoder attention mass) pass it here.
+    -> (q_pruned (..., keep, d), q_mask (..., keep) bool)
+
+    The selected terms keep their original relative order (so a keep == n_q
+    prune is the identity), and ``q_mask`` is False exactly where the kept
+    slot holds a zero EMBEDDING (padding) — detected from the term's norm,
+    never from the sign of the caller's importance, so zero/negative
+    importance scores (attention logits, IDF deltas) on real terms cannot
+    silently mask them. Feed both to ``retrieve``: the smaller static n_q
+    shrinks every per-term tensor in all four phases — CS rows, bit-vector
+    bits, S̄ rows, LUT rows — which is where the latency saving comes from
+    (masking alone keeps shapes fixed).
+    """
+    n_q = q.shape[-2]
+    assert keep <= n_q, f"keep={keep} exceeds n_q={n_q}"
+    if importance is None:
+        importance = jnp.linalg.norm(q, axis=-1)
+    _, sel = jax.lax.top_k(importance, keep)
+    sel = jnp.sort(sel, axis=-1)                       # original term order
+    q_pruned = jnp.take_along_axis(q, sel[..., None], axis=-2)
+    q_mask = jnp.linalg.norm(q_pruned, axis=-1) > 0
+    return q_pruned, q_mask

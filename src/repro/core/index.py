@@ -12,6 +12,7 @@ The builder runs once per corpus (eager), everything downstream is jit-able.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -33,6 +34,11 @@ class IndexMeta:
     nbits: int         # PQ bits per subspace
     plaid_b: int       # PLAID residual bits/dim
     list_cap: int      # padded IVF list length
+    # doc-id entries silently truncated from IVF lists that overflowed
+    # list_cap (0 when list_cap was auto-sized). Non-zero means phase 1
+    # cannot reach the dropped docs through the overflowed centroid — size
+    # list_cap up if retrieval quality matters more than IVF memory.
+    n_dropped: int = 0
 
 
 class PackedIndex(NamedTuple):
@@ -147,13 +153,27 @@ def build_index(key: jax.Array,
         list_cap = max(8, int(max_len))
     ivf = np.full((n_centroids, list_cap), n_docs, dtype=np.int32)  # sentinel
     ivf_lens = np.zeros((n_centroids,), dtype=np.int32)
+    n_dropped = 0
+    n_overflowed = 0
     for c, docs in enumerate(lists):
         ln = min(len(docs), list_cap)
+        if len(docs) > ln:
+            n_dropped += len(docs) - ln
+            n_overflowed += 1
         ivf[c, :ln] = docs[:ln]
         ivf_lens[c] = ln
+    if n_dropped:
+        warnings.warn(
+            f"build_index: {n_overflowed} IVF list(s) overflowed "
+            f"list_cap={list_cap}; {n_dropped} doc-id entries dropped "
+            f"(longest list: {max_len}). Dropped docs are unreachable "
+            "through the overflowed centroids in phase 1 — raise list_cap "
+            "(or leave it None to auto-size) if recall matters.",
+            stacklevel=2)
 
     meta = IndexMeta(n_docs=n_docs, n_centroids=n_centroids, d=d, cap=cap,
-                     m=m, nbits=nbits, plaid_b=plaid_b, list_cap=list_cap)
+                     m=m, nbits=nbits, plaid_b=plaid_b, list_cap=list_cap,
+                     n_dropped=n_dropped)
     idx = PackedIndex(
         centroids=centroids,
         codes=jnp.asarray(codes),

@@ -20,6 +20,34 @@ import jax.numpy as jnp
 NEG = -1e9
 
 
+def term_sum(colmax: jax.Array) -> jax.Array:
+    """Sum (..., n_q) per-term maxima over the query-term axis in a FIXED
+    left-to-right order (statically unrolled chain; n_q <= 32).
+
+    Why not ``jnp.sum``: XLA is free to pick the reduction tree per shape,
+    so a padded query (n_q=32, masked tail zeroed) and its unpadded prefix
+    (n_q=20) could parenthesize the SAME live terms differently — a 1-ulp
+    drift that breaks the padded == prefix bit-exactness contract. A fixed
+    chain makes the contract a mathematical identity: adding 0.0 to any
+    partial sum is exact, so zeroed (masked) slots are no-ops wherever they
+    sit. Used by the jnp reference AND every kernel (sbar_block /
+    eq56_block) — identical order is what keeps them bitwise equal; keep
+    them in lockstep.
+
+    Half-precision inputs accumulate in f32 and round ONCE at the end —
+    the same semantics ``jnp.sum`` gives bf16 (upcast-for-computation),
+    and the only ordering that stays deterministic under Pallas interpret
+    mode, which computes bf16 chains at f32 precision without per-add
+    rounding."""
+    acc = colmax
+    if colmax.dtype in (jnp.bfloat16, jnp.float16):
+        acc = colmax.astype(jnp.float32)
+    out = acc[..., 0]
+    for i in range(1, acc.shape[-1]):
+        out = out + acc[..., i]
+    return out.astype(colmax.dtype)
+
+
 def gather_centroid_scores(cs_t: jax.Array, codes: jax.Array) -> jax.Array:
     """Build P̃^T for a batch of docs by gathering rows of CS^T (paper §4.3).
 
@@ -31,15 +59,22 @@ def gather_centroid_scores(cs_t: jax.Array, codes: jax.Array) -> jax.Array:
 
 
 def centroid_interaction(cs_t: jax.Array, codes: jax.Array,
-                         token_mask: jax.Array) -> jax.Array:
+                         token_mask: jax.Array,
+                         q_mask: jax.Array | None = None) -> jax.Array:
     """Approximate passage score S̄ (paper Eq. 2) via column-wise max-reduce.
 
     cs_t (n_c, n_q); codes/token_mask (docs, cap) -> (docs,)
+    q_mask optional (n_q,) bool — masked (padded / pruned) query terms
+    contribute 0 to the sum instead of a spurious per-term max. Zeroing
+    (rather than dropping) keeps the shape static; adding 0.0 is exact in
+    fp, so a masked score equals the unpadded-prefix score bit for bit.
     """
     pt = gather_centroid_scores(cs_t, codes)             # (docs, cap, n_q)
     pt = jnp.where(token_mask[..., None], pt, NEG)
     colmax = jnp.max(pt, axis=-2)                        # (docs, n_q)
-    return jnp.sum(colmax, axis=-1)
+    if q_mask is not None:
+        colmax = jnp.where(q_mask, colmax, 0.0)
+    return term_sum(colmax)
 
 
 def centroid_interaction_batch(cs_t: jax.Array, codes: jax.Array,
@@ -61,7 +96,8 @@ def maxsim(q: jax.Array, doc_emb: jax.Array, token_mask: jax.Array) -> jax.Array
 def late_interaction_pq(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
                         res_codes: jax.Array, token_mask: jax.Array,
                         th_r: float | None,
-                        centroid: jax.Array | None = None) -> jax.Array:
+                        centroid: jax.Array | None = None,
+                        q_mask: jax.Array | None = None) -> jax.Array:
     """PQ late interaction with optional dynamic term filter (Eq. 5 / Eq. 6).
 
     cs_t       : (n_c, n_q)       centroid scores, transposed (one query)
@@ -76,6 +112,9 @@ def late_interaction_pq(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     centroid   : optional precomputed exact centroid term (docs, cap, n_q) —
                  used when cs_t is reduced-precision (cs_dtype=bf16) so the
                  FINAL scores stay exact while phases 1-3 ride the cheap CS.
+    q_mask     : optional (n_q,) bool — masked (padded / pruned) terms are
+                 excluded from the MaxSim sum entirely: no per-term max, no
+                 Eq. 6 fallback. Zeroing keeps shapes static and fp-exact.
     -> (docs,) final scores
     """
     if centroid is None:
@@ -88,14 +127,17 @@ def late_interaction_pq(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     full = jnp.where(token_mask[..., None], full, NEG)
 
     if th_r is None:
-        return jnp.max(full, axis=-2).sum(axis=-1)
-
-    keep = (centroid > th_r) & token_mask[..., None]               # (docs, cap, n_q)
-    masked = jnp.where(keep, full, NEG)
-    masked_max = jnp.max(masked, axis=-2)                          # (docs, n_q)
-    full_max = jnp.max(full, axis=-2)
-    any_keep = jnp.any(keep, axis=-2)
-    return jnp.where(any_keep, masked_max, full_max).sum(axis=-1)
+        colmax = jnp.max(full, axis=-2)
+    else:
+        keep = (centroid > th_r) & token_mask[..., None]           # (docs, cap, n_q)
+        masked = jnp.where(keep, full, NEG)
+        masked_max = jnp.max(masked, axis=-2)                      # (docs, n_q)
+        full_max = jnp.max(full, axis=-2)
+        any_keep = jnp.any(keep, axis=-2)
+        colmax = jnp.where(any_keep, masked_max, full_max)
+    if q_mask is not None:
+        colmax = jnp.where(q_mask, colmax, 0.0)
+    return term_sum(colmax)
 
 
 def _lut_gather(lut: jax.Array, idx: jax.Array) -> jax.Array:
@@ -122,7 +164,8 @@ def _lut_gather(lut: jax.Array, idx: jax.Array) -> jax.Array:
 def late_interaction_pq_compact(cs_t: jax.Array, lut: jax.Array,
                                 codes: jax.Array, res_codes: jax.Array,
                                 token_mask: jax.Array, th_r: float,
-                                cap_c: int) -> jax.Array:
+                                cap_c: int,
+                                q_mask: jax.Array | None = None) -> jax.Array:
     """TPU-adapted Eq. 6 (DESIGN.md §2 mode (b)): per-token compaction.
 
     A token is *kept* when ANY query term finds its centroid close
@@ -135,9 +178,15 @@ def late_interaction_pq_compact(cs_t: jax.Array, lut: jax.Array,
     achieving a term's true max ranks high under keymax and is (almost
     always) buffered; the paper's own observation that q·C̄ leads the max
     makes the residual tail of the fallback benign.
+
+    q_mask (optional (n_q,) bool): masked terms are excluded from keymax
+    (so they cannot keep tokens alive) AND from the final sum.
     """
     n_c = cs_t.shape[0]
-    row_max = jnp.max(cs_t, axis=1)                        # (n_c,)
+    if q_mask is not None:
+        row_max = jnp.max(jnp.where(q_mask[None, :], cs_t, NEG), axis=1)
+    else:
+        row_max = jnp.max(cs_t, axis=1)                    # (n_c,)
     keymax = jnp.take(row_max, jnp.clip(codes, 0, n_c - 1))
     keep = (keymax > th_r) & token_mask                    # (docs, cap)
     # rank: kept tokens first, best-centroid ordering inside each class
@@ -155,17 +204,27 @@ def late_interaction_pq_compact(cs_t: jax.Array, lut: jax.Array,
     masked_max = jnp.max(jnp.where(keep_t, full, NEG), axis=-2)
     comp_max = jnp.max(full, axis=-2)
     any_keep = jnp.any(keep_t, axis=-2)
-    return jnp.where(any_keep, masked_max, comp_max).sum(axis=-1)
+    colmax = jnp.where(any_keep, masked_max, comp_max)
+    if q_mask is not None:
+        colmax = jnp.where(q_mask, colmax, 0.0)
+    return term_sum(colmax)
 
 
 def scored_term_fraction(cs_t: jax.Array, codes: jax.Array,
-                         token_mask: jax.Array, th_r: float) -> jax.Array:
+                         token_mask: jax.Array, th_r: float,
+                         q_mask: jax.Array | None = None) -> jax.Array:
     """Fraction of (term, token) residual evaluations kept by the Eq. 6 filter
-    (paper Fig. 5, right). Returns a scalar in [0, 1]."""
+    (paper Fig. 5, right). Returns a scalar in [0, 1]. Masked query terms
+    (q_mask False) count in NEITHER the numerator NOR the denominator — the
+    ratio is over live (term, token) pairs only."""
     centroid = gather_centroid_scores(cs_t, codes)
-    valid = token_mask[..., None]
-    keep = (centroid > th_r) & valid
-    return jnp.sum(keep) / jnp.maximum(jnp.sum(valid * jnp.ones_like(keep)), 1)
+    keep = (centroid > th_r) & token_mask[..., None]
+    n_terms = cs_t.shape[1]
+    if q_mask is not None:
+        keep = keep & q_mask
+        n_terms = jnp.sum(q_mask)
+    # denominator is separable: (# valid tokens) x (# live terms)
+    return jnp.sum(keep) / jnp.maximum(jnp.sum(token_mask) * n_terms, 1)
 
 
 def token_compaction_mask(cs_t: jax.Array, codes: jax.Array,

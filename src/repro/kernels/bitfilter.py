@@ -3,6 +3,11 @@
 bits (n_c,) uint32, codes (n_docs, cap) int32 -> F (n_docs,) int32
     F[p] = popcount( OR_t bits[codes[p, t]] )
 
+Query-term masking: this kernel needs NO q_mask operand — masked (padded /
+pruned) query terms are already packed as 0 bits by ``bitpack``/the fused
+prefilter, so the popcount structurally cannot count them. The mask enters
+the pipeline exactly once, at bit-pack time.
+
 TPU schedule: the packed word table is tiny (n_c=2^18 -> 1 MiB) and stays
 resident in VMEM for the whole sweep; documents are tiled (BD, cap) per grid
 step. Per tile: one uint32 gather per token, a bitwise-OR reduction along the

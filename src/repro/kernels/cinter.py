@@ -22,13 +22,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.interaction import term_sum
+
 DEFAULT_BD = 128
 NEG = -1e9
 
 
-def sbar_block(cs_t: jax.Array, codes: jax.Array,
-               valid: jax.Array) -> jax.Array:
+def sbar_block(cs_t: jax.Array, codes: jax.Array, valid: jax.Array,
+               qlive: jax.Array | None = None) -> jax.Array:
     """S̄ for one (BD, cap) block: cs_t (n_c, n_q), valid bool -> (BD,).
+
+    qlive optional (n_q,) bool: masked (padded / pruned) query terms
+    contribute 0 to the sum instead of a spurious per-term max (exactly the
+    jnp reference's zeroing — adding 0.0 is fp-exact, so the all-live mask
+    is the identity).
 
     Shared by this kernel and the pass-1 stream of ``pqinter.py`` — the
     gather/mask/max/sum order here is the SAME one the jnp reference
@@ -38,26 +45,34 @@ def sbar_block(cs_t: jax.Array, codes: jax.Array,
     idx = jnp.clip(codes, 0, cs_t.shape[0] - 1)
     pt = jnp.take(cs_t, idx, axis=0)                       # (BD, cap, n_q)
     pt = jnp.where(valid[..., None], pt, NEG)
-    return jnp.sum(jnp.max(pt, axis=1), axis=-1)           # (BD,)
+    colmax = jnp.max(pt, axis=1)                           # (BD, n_q)
+    if qlive is not None:
+        colmax = jnp.where(qlive, colmax, 0.0)
+    return term_sum(colmax)                                # (BD,)
 
 
-def _cinter_kernel(cs_t_ref, codes_ref, mask_ref, out_ref):
+def _cinter_kernel(cs_t_ref, codes_ref, mask_ref, qm_ref, out_ref):
     cs_t = cs_t_ref[...]                                   # (n_c, n_q)
     codes = codes_ref[...]                                 # (BD, cap)
     valid = mask_ref[...] != 0                             # (BD, cap) int8
-    out_ref[...] = sbar_block(cs_t, codes, valid)[None, :]
+    qlive = qm_ref[0, :] != 0                              # (n_q,)
+    out_ref[...] = sbar_block(cs_t, codes, valid, qlive)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
+def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array,
+           q_mask: jax.Array | None = None, *,
            block_d: int = DEFAULT_BD, interpret: bool = True) -> jax.Array:
-    """cs_t (n_c, n_q); codes/token_mask (docs, cap) -> (docs,) fp32."""
+    """cs_t (n_c, n_q); codes/token_mask (docs, cap) -> (docs,) fp32.
+    q_mask optional (n_q,) bool — masked terms are excluded from S̄."""
     n_docs, cap = codes.shape
     n_c, n_q = cs_t.shape
     pad = (-n_docs) % block_d
     codesp = jnp.pad(codes, ((0, pad), (0, 0)))
     maskp = jnp.pad(token_mask.astype(jnp.int8), ((0, pad), (0, 0)))
     ndp = n_docs + pad
+    qm = (jnp.ones((1, n_q), jnp.int8) if q_mask is None
+          else q_mask.astype(jnp.int8).reshape(1, n_q))
     out = pl.pallas_call(
         _cinter_kernel,
         grid=(ndp // block_d,),
@@ -65,9 +80,10 @@ def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
             pl.BlockSpec((n_c, n_q), lambda i: (0, 0)),          # resident
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_q), lambda i: (0, 0)),            # q_mask
         ],
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, ndp), jnp.float32),
         interpret=interpret,
-    )(cs_t, codesp, maskp)
+    )(cs_t, codesp, maskp, qm)
     return out[0, :n_docs]

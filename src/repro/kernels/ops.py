@@ -5,6 +5,12 @@ this container) vs compiled Mosaic on real TPU hardware.  It is a plain
 keyword argument plumbed from ``EngineConfig.kernel_interpret`` — there is no
 module-level mutable state (the former ``INTERPRET`` global leaked one
 process-wide choice into every caller and could not be jit-cached per mode).
+
+``q_mask`` (optional (n_q,) bool, True = live term) threads the query-term
+mask through every kernel that consumes the query-term axis: ``bitpack`` and
+``prefilter`` pack a 0 bit for masked terms, ``cinter``/``pqscore``/
+``pqinter`` exclude masked rows from the per-term max sums. ``bitfilter``
+takes no mask — it only sees the already-masked packed words.
 """
 from __future__ import annotations
 
@@ -18,8 +24,9 @@ from . import pqscore as _pqscore
 from . import prefilter as _prefilter
 
 
-def bitpack(cs: jax.Array, th: float, *, interpret: bool = True) -> jax.Array:
-    return _bitpack.bitpack(cs, th, interpret=interpret)
+def bitpack(cs: jax.Array, th: float, q_mask: jax.Array | None = None, *,
+            interpret: bool = True) -> jax.Array:
+    return _bitpack.bitpack(cs, th, q_mask, interpret=interpret)
 
 
 def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
@@ -27,30 +34,35 @@ def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
     return _bitfilter.bitfilter(bits, codes, token_mask, interpret=interpret)
 
 
-def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
+def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array,
+           q_mask: jax.Array | None = None, *,
            interpret: bool = True) -> jax.Array:
-    return _cinter.cinter(cs_t, codes, token_mask, interpret=interpret)
+    return _cinter.cinter(cs_t, codes, token_mask, q_mask,
+                          interpret=interpret)
 
 
 def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None, *, interpret: bool = True) -> jax.Array:
+            th_r: float | None, q_mask: jax.Array | None = None, *,
+            interpret: bool = True) -> jax.Array:
     return _pqscore.pqscore(cs_t, lut, codes, res_codes, token_mask, th_r,
-                            interpret=interpret)
+                            q_mask, interpret=interpret)
 
 
 def prefilter(cs: jax.Array, th: float, codes: jax.Array,
-              token_mask: jax.Array, bitmap: jax.Array, n_filter: int, *,
+              token_mask: jax.Array, bitmap: jax.Array, n_filter: int,
+              q_mask: jax.Array | None = None, *,
               interpret: bool = True):
     """Fused phases 1b-2 megakernel -> (scores, doc_ids, bits)."""
     return _prefilter.prefilter(cs, th, codes, token_mask, bitmap, n_filter,
-                                interpret=interpret)
+                                q_mask, interpret=interpret)
 
 
 def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None, n_docs: int, k: int, *,
+            th_r: float | None, n_docs: int, k: int,
+            q_mask: jax.Array | None = None, *,
             interpret: bool = True):
     """Fused phases 3-4 megakernel -> (scores, pos, sel2, sbar)."""
     return _pqinter.pqinter(cs_t, lut, codes, res_codes, token_mask, th_r,
-                            n_docs, k, interpret=interpret)
+                            n_docs, k, q_mask, interpret=interpret)

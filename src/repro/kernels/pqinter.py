@@ -84,12 +84,13 @@ NEG_INF = float("-inf")  # buffer init / padding: below any real score
 
 
 def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
-                    mask_ref, sbar_ref, pos_ref, tops_ref, topp_ref, *,
-                    m: int, ksub: int, use_filter: bool, n_docs: int,
+                    mask_ref, qm_ref, sbar_ref, pos_ref, tops_ref, topp_ref,
+                    *, m: int, ksub: int, use_filter: bool, n_docs: int,
                     k: int, bd1: int, bd2: int, nf: int, nd_pad: int):
     cs_t = cs_t_ref[...]                                    # (n_c, n_q)
     codes = codes_ref[...]                                  # (nfp, cap)
     valid_all = mask_ref[...] != 0                          # (nfp, cap)
+    qlive = qm_ref[0, :] != 0                               # (n_q,)
     nfp = codes.shape[0]
 
     # ---- pass 1: S̄ blocks + running top-n_docs (sbar, position) ----------
@@ -99,7 +100,7 @@ def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
         start = i * bd1
         c = jax.lax.slice_in_dim(codes, start, start + bd1)
         v = jax.lax.slice_in_dim(valid_all, start, start + bd1)
-        sbar = sbar_block(cs_t, c, v)                       # (BD1,)
+        sbar = sbar_block(cs_t, c, v, qlive)                # (BD1,)
         rows = start + jax.lax.broadcasted_iota(jnp.int32, (bd1, 1), 0)[:, 0]
         # exact-f32 cast (bf16 CS promotes losslessly; order/ties preserved);
         # padded rows rank below every real doc, even all-token-masked ones
@@ -126,7 +127,8 @@ def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
         res = jnp.take(res_all, posc, axis=0)               # (BD2, cap, m)
         valid = jnp.take(valid_all, posc, axis=0) & live[:, None]
         score = eq56_block(cs_t, lut2, c, res, valid, thr_ref[0],
-                           m=m, ksub=ksub, use_filter=use_filter)
+                           m=m, ksub=ksub, use_filter=use_filter,
+                           qlive=qlive)
         score = jnp.where(live, score, NEG_INF)
         merged_s = jnp.concatenate([tops_buf, score])
         merged_p = jnp.concatenate([topp_buf, pos])
@@ -141,7 +143,8 @@ def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
                                     "block_d2", "interpret"))
 def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None, n_docs: int, k: int, *,
+            th_r: float | None, n_docs: int, k: int,
+            q_mask: jax.Array | None = None, *,
             block_d1: int | None = None, block_d2: int | None = None,
             interpret: bool = True) -> tuple[jax.Array, jax.Array,
                                              jax.Array, jax.Array]:
@@ -155,6 +158,9 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     th_r       : None -> Eq. 5 (score every term); float -> Eq. 6 filter
     n_docs     : phase-3 selection size
     k          : final result count
+    q_mask     : optional (n_q,) bool — masked (padded / pruned) terms are
+                 excluded from BOTH passes: no row in S̄'s sum, no MaxSim
+                 term in Eq. 5/6 (all-ones == no mask, bit for bit)
     -> (scores (k,) f32, pos (k,) i32, sel2 (n_docs,) i32, sbar (n_docs,) f32)
 
     ``pos``/``sel2`` index the n_filter survivor axis (the caller translates
@@ -182,6 +188,8 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     nfp = nf + pad1
     lut2 = lut.transpose(1, 2, 0).reshape(m * ksub, n_q)
     thr = jnp.asarray([0.0 if th_r is None else th_r], jnp.float32)
+    qm = (jnp.ones((1, n_q), jnp.int8) if q_mask is None
+          else q_mask.astype(jnp.int8).reshape(1, n_q))
     kern = functools.partial(
         _pqinter_kernel, m=m, ksub=ksub, use_filter=th_r is not None,
         n_docs=n_docs, k=k, bd1=block_d1, bd2=block_d2, nf=nf, nd_pad=nd_pad)
@@ -195,6 +203,7 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             pl.BlockSpec((nfp, cap), lambda i: (0, 0)),      # codes
             pl.BlockSpec((nfp, cap, m), lambda i: (0, 0, 0)),  # residual codes
             pl.BlockSpec((nfp, cap), lambda i: (0, 0)),      # token mask
+            pl.BlockSpec((1, n_q), lambda i: (0, 0)),        # q_mask
         ],
         out_specs=[
             pl.BlockSpec((1, nd_pad), lambda i: (0, 0)),
@@ -209,5 +218,5 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             jax.ShapeDtypeStruct((1, k), jnp.int32),
         ],
         interpret=interpret,
-    )(thr, cs_t, lut2, codesp, resp, maskp)
+    )(thr, cs_t, lut2, codesp, resp, maskp, qm)
     return tops[0], topp[0], pos[0, :n_docs], sbar[0, :n_docs]

@@ -24,17 +24,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.interaction import term_sum
+
 DEFAULT_BD = 32
 NEG = -1e9
 
 
 def eq56_block(cs_t: jax.Array, lut2: jax.Array, codes: jax.Array,
                res: jax.Array, valid: jax.Array, thr: jax.Array, *,
-               m: int, ksub: int, use_filter: bool) -> jax.Array:
+               m: int, ksub: int, use_filter: bool,
+               qlive: jax.Array | None = None) -> jax.Array:
     """Eq. 5/6 PQ late-interaction scores for one (BD, cap) block -> (BD,).
 
     cs_t (n_c, n_q); lut2 (m*K, n_q) flattened LUT; res (BD, cap, m) any int
     dtype; valid (BD, cap) bool; thr scalar (ignored unless ``use_filter``).
+    qlive optional (n_q,) bool: masked (padded / pruned) query terms
+    contribute 0 to the final sum — no per-term max, no Eq. 6 fallback —
+    mirroring the reference's zeroing (fp-exact; all-live is the identity).
 
     Shared by this kernel and the pass-2 stream of ``pqinter.py``. The
     subspace accumulation is the SAME static unroll, in the SAME s = 0..m-1
@@ -60,14 +66,17 @@ def eq56_block(cs_t: jax.Array, lut2: jax.Array, codes: jax.Array,
         colmax = jnp.where(any_keep, masked_max, full_max)  # (BD, n_q)
     else:
         colmax = jnp.max(full, axis=1)
-    return jnp.sum(colmax, axis=-1)
+    if qlive is not None:
+        colmax = jnp.where(qlive, colmax, 0.0)
+    return term_sum(colmax)
 
 
 def _pqscore_kernel(cs_t_ref, lut2_ref, codes_ref, res_ref, mask_ref, thr_ref,
-                    out_ref, *, m: int, ksub: int, use_filter: bool):
+                    qm_ref, out_ref, *, m: int, ksub: int, use_filter: bool):
     scores = eq56_block(cs_t_ref[...], lut2_ref[...], codes_ref[...],
                         res_ref[...], mask_ref[...] != 0, thr_ref[0],
-                        m=m, ksub=ksub, use_filter=use_filter)
+                        m=m, ksub=ksub, use_filter=use_filter,
+                        qlive=qm_ref[0, :] != 0)
     out_ref[...] = scores[None, :]
 
 
@@ -75,10 +84,11 @@ def _pqscore_kernel(cs_t_ref, lut2_ref, codes_ref, res_ref, mask_ref, thr_ref,
                    static_argnames=("th_r", "block_d", "interpret"))
 def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None, *, block_d: int = DEFAULT_BD,
-            interpret: bool = True) -> jax.Array:
+            th_r: float | None, q_mask: jax.Array | None = None, *,
+            block_d: int = DEFAULT_BD, interpret: bool = True) -> jax.Array:
     """cs_t (n_c, n_q); lut (n_q, m, K); codes (docs, cap);
-    res_codes (docs, cap, m) uint8 -> (docs,) fp32 final scores."""
+    res_codes (docs, cap, m) uint8 -> (docs,) fp32 final scores.
+    q_mask optional (n_q,) bool — masked terms contribute nothing."""
     n_docs, cap = codes.shape
     n_c, n_q = cs_t.shape
     _, m, ksub = lut.shape
@@ -89,6 +99,8 @@ def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     ndp = n_docs + pad
     lut2 = lut.transpose(1, 2, 0).reshape(m * ksub, n_q)
     thr = jnp.asarray([0.0 if th_r is None else th_r], jnp.float32)
+    qm = (jnp.ones((1, n_q), jnp.int8) if q_mask is None
+          else q_mask.astype(jnp.int8).reshape(1, n_q))
 
     kern = functools.partial(_pqscore_kernel, m=m, ksub=ksub,
                              use_filter=th_r is not None)
@@ -102,9 +114,10 @@ def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             pl.BlockSpec((block_d, cap, m), lambda i: (i, 0, 0)),
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, n_q), lambda i: (0, 0)),            # q_mask
         ],
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, ndp), jnp.float32),
         interpret=interpret,
-    )(cs_t, lut2, codesp, resp, maskp, thr)
+    )(cs_t, lut2, codesp, resp, maskp, thr, qm)
     return out[0, :n_docs]

@@ -47,7 +47,7 @@ MAX_ID = (1 << ID_BITS) - 1
 KEY_INIT = -(2 ** 31)  # python int: jnp scalars would be captured as consts
 
 
-def _prefilter_kernel(th_ref, cs_ref, codes_ref, mask_ref, bitmap_ref,
+def _prefilter_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref, bitmap_ref,
                       bits_ref, keys_ref, *, n_filter: int):
     i = pl.program_id(0)
 
@@ -57,7 +57,10 @@ def _prefilter_kernel(th_ref, cs_ref, codes_ref, mask_ref, bitmap_ref,
         # Compare in the CS dtype (weak-typed-scalar semantics): for bf16 CS
         # the reference rounds th to bf16 before comparing; do the same here
         # so boundary values cannot flip bits between kernel and oracle.
-        m = (cs > th_ref[0].astype(cs.dtype)).astype(jnp.uint32)
+        # Masked (padded / pruned) query terms pack a 0 bit for every
+        # centroid, so the popcount below structurally cannot count them.
+        live = qm_ref[...] != 0                             # (n_q, 1)
+        m = ((cs > th_ref[0].astype(cs.dtype)) & live).astype(jnp.uint32)
         shifts = jax.lax.broadcasted_iota(jnp.uint32, (cs.shape[0], 1), 0)
         # Disjoint bit positions: sum == OR (same pack as kernels/bitpack.py).
         bits_ref[...] = jnp.sum(m << shifts, axis=0, keepdims=True)
@@ -86,7 +89,8 @@ def _prefilter_kernel(th_ref, cs_ref, codes_ref, mask_ref, bitmap_ref,
 @functools.partial(jax.jit,
                    static_argnames=("n_filter", "block_d", "interpret"))
 def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
-              bitmap: jax.Array, n_filter: int, *,
+              bitmap: jax.Array, n_filter: int,
+              q_mask: jax.Array | None = None, *,
               block_d: int = DEFAULT_BD,
               interpret: bool = True) -> tuple[jax.Array, jax.Array,
                                                jax.Array]:
@@ -97,6 +101,9 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
     codes      : (n_docs, cap) int32 centroid id per token (padded)
     token_mask : (n_docs, cap) bool — True for real tokens
     bitmap     : (n_docs,) bool — candidate docs (IVF union)
+    q_mask     : optional (n_q,) bool — masked (padded / pruned) query terms
+                 pack a 0 bit, so F(P, q) never counts them (all-ones == no
+                 mask, bit for bit)
     -> (scores (n_filter,) int32, doc_ids (n_filter,) int32,
         bits (n_c,) uint32)
 
@@ -116,6 +123,8 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
     bmp = jnp.pad(bitmap.astype(jnp.int8), (0, pad))[None, :]
     ndp = n_docs + pad
     th_arr = jnp.asarray([th], jnp.float32)
+    qm = (jnp.ones((n_q, 1), jnp.int8) if q_mask is None
+          else q_mask.astype(jnp.int8).reshape(n_q, 1))
     kern = functools.partial(_prefilter_kernel, n_filter=n_filter)
     bits, keys = pl.pallas_call(
         kern,
@@ -123,6 +132,7 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),              # th
             pl.BlockSpec((n_q, n_c), lambda i: (0, 0)),      # CS resident
+            pl.BlockSpec((n_q, 1), lambda i: (0, 0)),        # q_mask
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
             pl.BlockSpec((1, block_d), lambda i: (0, i)),
@@ -136,7 +146,7 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
             jax.ShapeDtypeStruct((1, n_filter), jnp.int32),
         ],
         interpret=interpret,
-    )(th_arr, cs, codesp, maskp, bmp)
+    )(th_arr, cs, qm, codesp, maskp, bmp)
     keys = keys[0]
     scores = (keys >> ID_BITS) - 1
     doc_ids = MAX_ID - (keys & MAX_ID)

@@ -2,7 +2,9 @@
 
 These delegate to the reference math in ``repro.core`` (which is itself pure
 jnp and tested end-to-end), so kernels and engine are checked against one
-single source of truth.
+single source of truth. Every oracle mirrors its kernel's optional
+``q_mask`` (query-term mask; True = live term) so masked sweeps check the
+same contract.
 """
 from __future__ import annotations
 
@@ -14,58 +16,63 @@ from repro.core import interaction as _ia
 from repro.core.pq import PQCodebooks, build_lut  # noqa: F401  (test helper)
 
 
-def bitpack(cs: jax.Array, th: float) -> jax.Array:
+def bitpack(cs: jax.Array, th: float,
+            q_mask: jax.Array | None = None) -> jax.Array:
     """cs (n_q, n_c), th -> (n_c,) uint32."""
-    return _bv.build_bitvectors(cs, th)
+    return _bv.build_bitvectors(cs, th, q_mask)
 
 
 def bitfilter(bits: jax.Array, codes: jax.Array,
               token_mask: jax.Array) -> jax.Array:
-    """bits (n_c,) u32; codes/mask (docs, cap) -> (docs,) int32."""
+    """bits (n_c,) u32; codes/mask (docs, cap) -> (docs,) int32.
+    No q_mask: masked terms are already 0 bits in ``bits``."""
     return _bv.filter_score(bits, codes, token_mask)
 
 
-def cinter(cs_t: jax.Array, codes: jax.Array,
-           token_mask: jax.Array) -> jax.Array:
+def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array,
+           q_mask: jax.Array | None = None) -> jax.Array:
     """cs_t (n_c, n_q); codes/mask (docs, cap) -> (docs,) fp32."""
-    return _ia.centroid_interaction(cs_t, codes, token_mask)
+    return _ia.centroid_interaction(cs_t, codes, token_mask, q_mask)
 
 
 def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None) -> jax.Array:
+            th_r: float | None,
+            q_mask: jax.Array | None = None) -> jax.Array:
     """Fused PQ late interaction oracle -> (docs,) fp32."""
     return _ia.late_interaction_pq(cs_t, lut, codes, res_codes, token_mask,
-                                   th_r)
+                                   th_r, q_mask=q_mask)
 
 
 def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
-            th_r: float | None, n_docs: int, k: int) -> tuple[
+            th_r: float | None, n_docs: int, k: int,
+            q_mask: jax.Array | None = None) -> tuple[
                 jax.Array, jax.Array, jax.Array, jax.Array]:
     """Oracle for the fused phases 3-4 megakernel: centroid interaction ->
     top-n_docs -> PQ late interaction (Eq. 5/6) -> top-k, composed exactly
     like the unfused engine. -> (scores (k,) f32, pos (k,) i32,
     sel2 (n_docs,) i32, sbar (n_docs,) f32); positions index the survivor
     axis, both selections in ``lax.top_k`` order (ties: lowest first)."""
-    sbar = _ia.centroid_interaction(cs_t, codes, token_mask)
+    sbar = _ia.centroid_interaction(cs_t, codes, token_mask, q_mask)
     sbar2, sel2 = jax.lax.top_k(sbar, n_docs)
     scores = _ia.late_interaction_pq(
         cs_t, lut, jnp.take(codes, sel2, axis=0),
         jnp.take(res_codes, sel2, axis=0),
-        jnp.take(token_mask, sel2, axis=0), th_r)
+        jnp.take(token_mask, sel2, axis=0), th_r, q_mask=q_mask)
     top_s, top_local = jax.lax.top_k(scores, k)
     return (top_s, jnp.take(sel2, top_local).astype(jnp.int32),
             sel2.astype(jnp.int32), sbar2.astype(jnp.float32))
 
 
 def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
-              bitmap: jax.Array, n_filter: int) -> tuple[jax.Array,
-                                                         jax.Array]:
+              bitmap: jax.Array, n_filter: int,
+              q_mask: jax.Array | None = None) -> tuple[jax.Array,
+                                                        jax.Array]:
     """Oracle for the fused phases 1b-2 megakernel: bitpack -> Eq. 4 filter
     -> candidate masking -> top-n_filter.  -> (scores, doc_ids), both
     (n_filter,) int32, in ``lax.top_k`` order (ties: lowest doc id first)."""
-    bits = _bv.build_bitvectors(cs, th)
+    bits = _bv.build_bitvectors(cs, th, q_mask)
     f = _bv.filter_score(bits, codes, token_mask)
     f = jnp.where(bitmap, f, -1)
     scores, ids = jax.lax.top_k(f, n_filter)

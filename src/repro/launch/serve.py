@@ -53,12 +53,13 @@ def retrieve_pjit(mesh: Mesh, index: PackedIndex, queries: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _local_retrieve(index_local: PackedIndex, queries: jax.Array,
-                    cfg: EngineConfig, axes: Tuple[str, ...]
-                    ) -> RetrievalResult:
-    """Runs on ONE device's doc shard; queries are replicated."""
+                    q_masks: jax.Array, cfg: EngineConfig,
+                    axes: Tuple[str, ...]) -> RetrievalResult:
+    """Runs on ONE device's doc shard; queries AND q_masks are replicated."""
     token_mask = index_local.token_mask()
     local = jax.vmap(
-        lambda q: _retrieve_one(q, index_local, token_mask, cfg))(queries)
+        lambda q, m: _retrieve_one(q, index_local, token_mask, cfg, m)
+    )(queries, q_masks)
 
     # translate local doc ids -> global ids with the shard offset
     shard_id = jnp.int32(0)
@@ -79,11 +80,17 @@ def _local_retrieve(index_local: PackedIndex, queries: jax.Array,
 
 
 def make_shardmap_retriever(mesh: Mesh, cfg: EngineConfig):
-    """Returns a jit'd fn(index_stacked, queries) -> RetrievalResult.
+    """Returns a fn(index_stacked, queries, q_masks=None) -> RetrievalResult.
 
     ``index_stacked`` leaves carry a leading shard axis (S, ...) where S =
     number of devices; leaf [s] is device s's local index (local doc ids,
     local IVF). Build with ``shard_index``.
+
+    ``q_masks`` (optional (B, n_q) bool) is replicated across shards exactly
+    like ``queries`` — every shard applies the same per-term mask to its
+    local four-phase pipeline, so the two-level top-k merges shard results
+    computed under identical masking. ``None`` fills in an all-True mask,
+    which is the bitwise identity.
     """
     axes = tuple(mesh.axis_names)
     n_shards = 1
@@ -91,17 +98,22 @@ def make_shardmap_retriever(mesh: Mesh, cfg: EngineConfig):
         n_shards *= mesh.shape[a]
 
     in_specs = (jax.tree.map(lambda _: P(axes), _index_struct()),
-                P(*([None])))
+                P(*([None])), P(*([None])))
     out_specs = RetrievalResult(P(None), P(None))
 
     @functools.partial(jax.jit)
     @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, **_SM_KW)
-    def step(index_stacked, queries):
+    def step(index_stacked, queries, q_masks):
         index_local = jax.tree.map(lambda x: x[0], index_stacked)
-        return _local_retrieve(index_local, queries, cfg, axes)
+        return _local_retrieve(index_local, queries, q_masks, cfg, axes)
 
-    return step
+    def run(index_stacked, queries, q_masks=None):
+        if q_masks is None:
+            q_masks = jnp.ones(queries.shape[:2], jnp.bool_)
+        return step(index_stacked, queries, q_masks)
+
+    return run
 
 
 def _index_struct():
@@ -112,7 +124,12 @@ def _index_struct():
 def shard_index(index: PackedIndex, n_shards: int) -> PackedIndex:
     """Split a global index into per-shard local indices, stacked on a new
     leading axis. Docs are block-partitioned; each shard's IVF is rebuilt
-    with local doc ids. (Host-side, numpy.)"""
+    with local doc ids. (Host-side, numpy.) If a rebuilt local list exceeds
+    the global list_cap a warning reports how many doc-id entries were
+    dropped (those docs become unreachable through that centroid on that
+    shard)."""
+    import warnings
+
     import numpy as np
 
     n_docs = int(index.codes.shape[0])
@@ -135,13 +152,25 @@ def shard_index(index: PackedIndex, n_shards: int) -> PackedIndex:
     ivf_lens_g = np.asarray(index.ivf_lens)
     local_ivf = np.full((n_shards, n_c, list_cap), per, dtype=np.int32)
     local_lens = np.zeros((n_shards, n_c), dtype=np.int32)
+    n_dropped = 0
+    n_overflowed = 0
     for c in range(n_c):
         docs = ivf[c, :ivf_lens_g[c]]
         for s in range(n_shards):
             mine = docs[(docs >= s * per) & (docs < (s + 1) * per)] - s * per
             ln = min(len(mine), list_cap)
+            if len(mine) > ln:
+                n_dropped += len(mine) - ln
+                n_overflowed += 1
             local_ivf[s, c, :ln] = mine[:ln]
             local_lens[s, c] = ln
+    if n_dropped:
+        warnings.warn(
+            f"shard_index: {n_overflowed} local IVF list(s) overflowed "
+            f"list_cap={list_cap}; {n_dropped} doc-id entries dropped — "
+            "those docs are unreachable through the overflowed centroid on "
+            "their shard. Rebuild with a larger list_cap.",
+            stacklevel=2)
 
     def rep(x):
         return np.broadcast_to(np.asarray(x), (n_shards, *np.shape(x))).copy()

@@ -1,0 +1,77 @@
+"""EngineConfig.__post_init__ validation: the configs that used to crash
+deep inside ``top_k``/the bit pack (or run silently wrong) now raise
+ValueError with actionable messages at construction time. Plus the IVF
+truncation warning from ``build_index``."""
+import dataclasses
+import re
+import warnings
+
+import jax
+import pytest
+
+from repro.core import EngineConfig, build_index
+from repro.data.synthetic import make_corpus
+
+
+@pytest.mark.parametrize("kwargs,fragment", [
+    (dict(n_q=33), "n_q=33 > 32"),
+    (dict(k=100, n_docs=50), "k=100 > n_docs=50"),
+    (dict(n_docs=600, n_filter=500), "n_docs=600 > n_filter=500"),
+    (dict(cand_cap=100, n_filter=512, candidate_mode="compact"),
+     "cand_cap=100 < n_filter=512"),
+    (dict(compact_cap=16, th_r=None), "compact_cap=16 requires th_r"),
+    (dict(candidate_mode="bogus"), "unknown candidate_mode='bogus'"),
+    (dict(cs_dtype="fp8"), "unknown cs_dtype='fp8'"),
+])
+def test_engine_config_rejects_silent_crash_configs(kwargs, fragment):
+    with pytest.raises(ValueError, match=re.escape(fragment)):
+        EngineConfig(**kwargs)
+
+
+def test_engine_config_default_is_valid():
+    cfg = EngineConfig()
+    assert cfg.n_q == 32
+
+
+def test_engine_config_replace_revalidates():
+    """dataclasses.replace re-runs __post_init__, so a valid base cannot be
+    mutated into a silent-crash config."""
+    cfg = EngineConfig()
+    with pytest.raises(ValueError, match="n_docs"):
+        dataclasses.replace(cfg, n_docs=cfg.n_filter + 1)
+
+
+def test_engine_config_boundaries_allowed():
+    """Equality at every boundary is legal (k == n_docs == n_filter ==
+    cand_cap)."""
+    EngineConfig(k=64, n_docs=64, n_filter=64, cand_cap=64,
+                 candidate_mode="compact")
+
+
+def test_engine_config_cand_cap_ignored_in_score_all():
+    """cand_cap only bounds the compact-mode buffer; a score_all config
+    with n_filter above the (unused) cand_cap default must construct."""
+    EngineConfig(candidate_mode="score_all", n_filter=8192, n_docs=64)
+
+
+def test_build_index_warns_on_ivf_truncation():
+    """A too-small list_cap drops doc ids; the builder must say so and
+    surface the count instead of truncating silently."""
+    corpus = make_corpus(3, n_docs=64, cap=8, min_len=4, n_queries=2,
+                         n_topics=2)
+    with pytest.warns(UserWarning, match=r"doc-id entries dropped"):
+        _, meta = build_index(jax.random.PRNGKey(0), corpus.doc_embs,
+                              corpus.doc_lens, n_centroids=4, m=8, nbits=4,
+                              list_cap=2, kmeans_iters=2)
+    assert meta.n_dropped > 0
+
+
+def test_build_index_auto_list_cap_never_drops():
+    corpus = make_corpus(3, n_docs=64, cap=8, min_len=4, n_queries=2,
+                         n_topics=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _, meta = build_index(jax.random.PRNGKey(0), corpus.doc_embs,
+                              corpus.doc_lens, n_centroids=4, m=8, nbits=4,
+                              kmeans_iters=2)
+    assert meta.n_dropped == 0

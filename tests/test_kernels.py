@@ -94,6 +94,82 @@ def test_empty_docs_masked_out():
 
 
 # ---------------------------------------------------------------------------
+# Query-term masking: every masked kernel against its masked oracle
+# ---------------------------------------------------------------------------
+
+def _q_mask(n_q, seed=0):
+    """A random mask with at least one live and one dead term."""
+    rng = np.random.default_rng(seed + 101)
+    qm = rng.random(n_q) < 0.6
+    qm[0], qm[-1] = True, False
+    return jnp.asarray(qm)
+
+
+def test_bitpack_q_mask_zeroes_masked_bits():
+    cs, *_ = _inputs(*SHAPES[1])
+    qm = _q_mask(cs.shape[0])
+    out = np.asarray(ops.bitpack(cs, 0.2, qm))
+    np.testing.assert_array_equal(out, np.asarray(ref.bitpack(cs, 0.2, qm)))
+    dead_bits = np.uint32(0)
+    for i, live in enumerate(np.asarray(qm)):
+        if not live:
+            dead_bits |= np.uint32(1) << np.uint32(i)
+    assert (out & dead_bits == 0).all()
+
+
+def test_cinter_q_mask_matches_ref():
+    cs, codes, mask, _, _ = _inputs(*SHAPES[1])
+    qm = _q_mask(cs.shape[0])
+    out = ops.cinter(cs.T, codes, mask, qm)
+    exp = ref.cinter(cs.T, codes, mask, qm)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("th_r", [None, 0.3])
+def test_pqscore_q_mask_matches_ref(th_r):
+    cs, codes, mask, lut, res = _inputs(*SHAPES[0])
+    qm = _q_mask(cs.shape[0])
+    out = ops.pqscore(cs.T, lut, codes, res, mask, th_r, qm)
+    exp = ref.pqscore(cs.T, lut, codes, res, mask, th_r, qm)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_prefilter_fused_q_mask_matches_ref():
+    cs, codes, mask, _, _ = _inputs(*SHAPES[1])
+    qm = _q_mask(cs.shape[0])
+    n_docs = codes.shape[0]
+    s, i, bits = ops.prefilter(cs, 0.2, codes, mask, _bitmap(n_docs),
+                               n_docs // 3, qm)
+    rs, ri = ref.prefilter(cs, 0.2, codes, mask, _bitmap(n_docs),
+                           n_docs // 3, qm)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(bits),
+                                  np.asarray(ref.bitpack(cs, 0.2, qm)))
+
+
+def test_pqinter_fused_q_mask_matches_ref():
+    cs, codes, mask, lut, res = _inputs(*SHAPES[0])
+    qm = _q_mask(cs.shape[0])
+    out = ops.pqinter(cs.T, lut, codes, res, mask, 0.5, 20, 7, qm)
+    exp = ref.pqinter(cs.T, lut, codes, res, mask, 0.5, 20, 7, qm)
+    for got, want, name in zip(out, exp, ("scores", "pos", "sel2", "sbar")):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=name)
+
+
+def test_all_terms_masked_scores_zero():
+    """All-False mask: S̄ and Eq. 5/6 scores collapse to exactly 0.0 (the
+    empty sum) for every doc, masked bit words are all-zero."""
+    cs, codes, mask, lut, res = _inputs(*SHAPES[0])
+    qm = jnp.zeros((cs.shape[0],), jnp.bool_)
+    assert (np.asarray(ops.bitpack(cs, 0.2, qm)) == 0).all()
+    assert (np.asarray(ops.cinter(cs.T, codes, mask, qm)) == 0.0).all()
+    assert (np.asarray(ops.pqscore(cs.T, lut, codes, res, mask, 0.3,
+                                   qm)) == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
 # Fused prefilter megakernel (phases 1b-2 in one launch)
 # ---------------------------------------------------------------------------
 
