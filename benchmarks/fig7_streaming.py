@@ -1,0 +1,80 @@
+"""Streaming-corpus growth (PLAID SHIRTTT-style temporal sharding): latency
+and MRR@10 as the corpus grows from 1 to N index generations.
+
+The corpus arrives in equal slices. Generation 0 is a fresh ``build_index``
+over the first slice; every later slice becomes an immutable generation via
+``store.new_generation`` (quantized against generation 0's FROZEN
+centroid/PQ codebooks — no k-means re-run), served as a ``ShardedTimeline``
+through ``engine.retrieve_timeline``. Queries plant ground truth across the
+WHOLE corpus, so MRR@10 climbs as generations come online while per-query
+latency tracks the cost of the per-generation fan-out + merge:
+
+    fig7,streaming,gens=<g>,docs=<n>,retrieve,<us_per_query>,mrr=<m>,drift=x<r>
+
+``drift`` is the newest generation's ``IndexMeta.drift`` (quantization error
+vs the gen-0 training baseline — the re-train signal). The final row times
+one monolithic index built over the union corpus at the same budgets, so
+the artifact tracks the price of temporal sharding vs a full re-index:
+
+    fig7,streaming,monolithic,docs=<n>,retrieve,<us_per_query>,mrr=<m>
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (EngineConfig, ShardedTimeline, build_index,
+                        new_generation, retrieve_timeline)
+from repro.core import engine as emvb
+from repro.data.synthetic import mrr_at_k
+
+from .common import TH, TH_R, bench_corpus, bench_index, row, time_fn
+
+N_GENS = 4
+
+
+def run() -> list[str]:
+    corpus = bench_corpus("msmarco")
+    queries = jnp.asarray(corpus.queries)
+    b = queries.shape[0]
+    n_docs = corpus.doc_embs.shape[0]
+    per = n_docs // N_GENS
+    cfg = EngineConfig(k=10, n_filter=512, n_docs=64, th=TH, th_r=TH_R)
+
+    gen0, meta0 = build_index(
+        jax.random.PRNGKey(1), corpus.doc_embs[:per], corpus.doc_lens[:per],
+        n_centroids=512, m=16, nbits=8, plaid_b=2, kmeans_iters=4)
+    timeline = ShardedTimeline.of((gen0, meta0))
+
+    rows = []
+    for g in range(1, N_GENS + 1):
+        if g > 1:
+            lo = (g - 1) * per
+            timeline = timeline.append(*new_generation(
+                gen0, meta0, corpus.doc_embs[lo:lo + per],
+                corpus.doc_lens[lo:lo + per]))
+        t = time_fn(lambda tl=timeline: retrieve_timeline(tl, queries, cfg))
+        ids = np.asarray(retrieve_timeline(timeline, queries, cfg).doc_ids)
+        mrr = mrr_at_k(ids, corpus.gt_doc)
+        rows.append(row(
+            f"fig7,streaming,gens={g},docs={timeline.n_docs},retrieve",
+            t / b * 1e6,
+            f"mrr={mrr:.3f},drift=x{timeline.metas[-1].drift:.2f}"))
+
+    # the full re-index alternative: one monolithic build over the union
+    mono, _ = bench_index("msmarco", m=16)
+    t = time_fn(lambda: emvb.retrieve(mono, queries, cfg))
+    ids = np.asarray(emvb.retrieve(mono, queries, cfg).doc_ids)
+    rows.append(row(f"fig7,streaming,monolithic,docs={n_docs},retrieve",
+                    t / b * 1e6,
+                    f"mrr={mrr_at_k(ids, corpus.gt_doc):.3f}"))
+    return rows
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Docs link check: every file referenced from README.md and docs/*.md must
+exist in the tree.
+
+Run from the repo root (CI docs job; also wrapped by tests/test_docs_links.py):
+
+    python scripts/check_doc_links.py
+
+Two reference kinds are checked:
+  * markdown links ``[text](target)`` with a relative target — resolved
+    against the referencing file's directory (GitHub semantics); external
+    (``http(s)://``, ``mailto:``) and pure-anchor targets are skipped;
+  * backticked repo paths like ``src/repro/core/store.py`` — any
+    `...`-quoted token that contains a ``/`` and a known source suffix and
+    no glob/brace expansion characters, resolved against the repo root.
+
+Exit code 1 lists every broken reference (file + the missing target).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+BACKTICK = re.compile(r"`([^`\s]+)`")
+PATHY = re.compile(r"^[A-Za-z0-9_./-]+\.(py|md|yml|yaml|toml|txt|json|cfg)$")
+
+
+def references(text: str) -> list[tuple[str, str]]:
+    """-> [(kind, target)] for every checkable reference in ``text``."""
+    out = []
+    for target in MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        out.append(("link", target.split("#")[0]))
+    for tok in BACKTICK.findall(text):
+        if "/" in tok and PATHY.match(tok):
+            out.append(("path", tok))
+    return out
+
+
+def main() -> int:
+    """Check all doc files; print broken references; return the exit code."""
+    broken = []
+    n_checked = 0
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        for kind, target in references(text):
+            if not target:
+                continue
+            base = doc.parent if kind == "link" else ROOT
+            n_checked += 1
+            if not (base / target).exists():
+                broken.append(f"{doc.relative_to(ROOT)}: {kind} -> {target}")
+    if broken:
+        print(f"{len(broken)} broken doc reference(s):")
+        print("\n".join(f"  {b}" for b in broken))
+        return 1
+    print(f"doc link check OK ({n_checked} references in "
+          f"{len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

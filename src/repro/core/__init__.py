@@ -1,5 +1,7 @@
 """EMVB core — the paper's contribution as composable JAX modules."""
-from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual  # noqa: F401
-from .engine import EngineConfig, prune_queries, retrieve  # noqa: F401
+from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual, store  # noqa: F401
+from .engine import EngineConfig, prune_queries, retrieve, retrieve_timeline  # noqa: F401
 from .index import PackedIndex, IndexMeta, build_index, bytes_per_embedding  # noqa: F401
 from .plaid import PlaidConfig  # noqa: F401
+from .store import (ShardedTimeline, add_passages, load_index, load_timeline,  # noqa: F401
+                    new_generation, save_index, save_timeline)

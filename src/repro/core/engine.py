@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import TYPE_CHECKING, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +48,21 @@ from . import bitvector, interaction
 from .index import PackedIndex
 from .pq import build_lut
 
+if TYPE_CHECKING:  # avoid a runtime engine <-> store import cycle
+    from .store import ShardedTimeline
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Static retrieval configuration — hashable, passed as a jit-static arg.
+
+    Field groups: the paper's knobs (``th`` for the Eq. 4 bit vectors,
+    ``th_r`` for the Eq. 6 term filter, ``nprobe``/``n_filter``/``n_docs``/
+    ``k`` for the per-phase selection budgets) and the implementation knobs
+    (kernel dispatch, candidate layout, CS precision). ``__post_init__``
+    rejects inconsistent combinations with actionable errors.
+    """
+
     n_q: int = 32            # query terms (<= 32: one uint32 bit per term)
     nprobe: int = 4          # centroid lists unioned per query term
     th: float = 0.4          # bit-vector threshold (paper Fig. 2: 0.4)
@@ -131,11 +143,14 @@ class EngineConfig:
 
 
 class RetrievalResult(NamedTuple):
+    """Top-k retrieval output: scores sorted descending + global doc ids."""
+
     scores: jax.Array   # (B, k)
     doc_ids: jax.Array  # (B, k) int32
 
 
 def _kops(cfg: EngineConfig):
+    """The Pallas kernel dispatch module, or None for the jnp reference."""
     if not cfg.use_kernels:
         return None
     from repro.kernels import ops as kops
@@ -378,14 +393,19 @@ def retrieve(index: PackedIndex, queries: jax.Array, cfg: EngineConfig,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase1_candidates(index: PackedIndex, q: jax.Array, cfg: EngineConfig,
                       q_mask: Optional[jax.Array] = None):
+    """Phase 1 (paper §4.1): centroid scores, the stacked Eq. 4 bit vectors,
+    and the IVF candidate bitmap -> (cs, bits, bitmap)."""
     return _phase1(q, index, cfg, q_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase2_prefilter(index: PackedIndex, bits: jax.Array, bitmap: jax.Array,
                      cfg: EngineConfig):
-    # No q_mask: masked terms are already 0 bits in ``bits`` (phase 1), so
-    # Eq. 4's popcount structurally cannot count them.
+    """Phase 2 (paper §4.2): the bit-vector pre-filter — score F(P, q)
+    (paper Eq. 4) for every candidate and select the top-n_filter doc ids.
+
+    Takes no q_mask: masked terms are already 0 bits in ``bits`` (phase 1),
+    so Eq. 4's popcount structurally cannot count them."""
     return _phase2(index, index.token_mask(), bits, bitmap, cfg)
 
 
@@ -402,6 +422,8 @@ def phase12_prefilter(index: PackedIndex, q: jax.Array, cfg: EngineConfig,
 def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
                                 sel1: jax.Array, cfg: EngineConfig,
                                 q_mask: Optional[jax.Array] = None):
+    """Phase 3 (paper §4.3): centroid interaction S̄ (the Eq. 2 proxy score)
+    on the phase-2 survivors; select the top-n_docs for late interaction."""
     return _phase3(index, index.token_mask(), cs, sel1, cfg, q_mask)
 
 
@@ -409,6 +431,9 @@ def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
 def phase4_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
                             sel2: jax.Array, cfg: EngineConfig,
                             q_mask: Optional[jax.Array] = None):
+    """Phase 4 (paper §4.4): PQ late interaction on the phase-3 survivors —
+    paper Eq. 5, or Eq. 6 with the dynamic per-term filter when ``cfg.th_r``
+    is set — and the final top-k selection."""
     return _phase4(index, index.token_mask(), q, cs, sel2, cfg, q_mask)
 
 
@@ -422,6 +447,89 @@ def phase34_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
     pair (which keep their unfused behavior, mirroring how phase1/phase2
     relate to phase12_prefilter)."""
     return _phase34(index, index.token_mask(), q, cs, sel1, cfg, q_mask)
+
+
+# ---------------------------------------------------------------------------
+# Multi-generation serving (PLAID SHIRTTT): run the fused pipeline per
+# immutable index generation, merge per-generation top-k by score.
+# ---------------------------------------------------------------------------
+
+def adapt_config_to_corpus(cfg: EngineConfig, n_docs: int) -> EngineConfig:
+    """Clamp a config's selection budgets to a (small) corpus of ``n_docs``.
+
+    Timeline generations can be smaller than ``n_filter``/``n_docs``/
+    ``cand_cap`` (a freshly opened generation might hold a few hundred
+    docs); ``lax.top_k`` cannot select more entries than exist, so the
+    budgets are clamped to the generation size. Clamping is lossless: a
+    top-min(n_filter, n_docs) cut over n_docs docs keeps everything the
+    unclamped cut would. ``k`` is NOT clamped — a generation smaller than
+    ``k`` cannot fill a top-k and raises an actionable error instead.
+    """
+    if n_docs < cfg.k:
+        raise ValueError(
+            f"corpus/generation has {n_docs} docs but cfg.k={cfg.k}: "
+            "every generation must hold >= k docs to fill a per-generation "
+            "top-k — batch tiny additions with store.add_passages instead "
+            "of opening a new generation")
+    nf = min(cfg.n_filter, n_docs)
+    return dataclasses.replace(
+        cfg, n_filter=nf, n_docs=min(cfg.n_docs, nf),
+        cand_cap=max(min(cfg.cand_cap, n_docs), nf))
+
+
+def merge_generation_topk(parts: list[RetrievalResult], offsets,
+                          k: int) -> RetrievalResult:
+    """Merge per-generation top-k results into one global top-k.
+
+    Applies each generation's global doc-id ``offset``, concatenates in
+    generation (= id) order, and re-selects the top ``k`` by score. The
+    SINGLE definition of the merge, shared by ``retrieve_timeline`` and the
+    sharded plan in ``launch/serve.py``, so the documented tie contract
+    (``lax.top_k`` prefers the earlier concatenation position = the lower
+    global doc id) cannot diverge between the two paths.
+    """
+    scores = jnp.concatenate([r.scores for r in parts], axis=1)   # (B, G*k)
+    ids = jnp.concatenate(
+        [r.doc_ids + off for r, off in zip(parts, offsets)], axis=1)
+    top_scores, pos = jax.lax.top_k(scores, k)
+    return RetrievalResult(top_scores,
+                           jnp.take_along_axis(ids, pos, axis=1))
+
+
+def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
+                      cfg: EngineConfig,
+                      q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+    """Retrieve over a :class:`~repro.core.store.ShardedTimeline` — the
+    PLAID-SHIRTTT merge path.
+
+    Runs the existing fused four-phase pipeline (``retrieve``, so every
+    kernel/config choice applies unchanged) once per immutable generation,
+    offsets each generation's local doc ids into the global id space, and
+    merges the per-generation top-k by score into one final top-k.
+
+    Equivalence contract (tests/test_store.py): all generations share the
+    frozen centroid/PQ codebooks, and every phase's SCORE (Eq. 4 filter,
+    Eq. 2 proxy, Eq. 5/6 late interaction) is per-document given those
+    codebooks — so a document scores bit-identically in a timeline
+    generation and in one monolithic index grown over the union corpus.
+    With cut-lossless budgets (``n_filter``/``n_docs`` at least the
+    candidate count, e.g. the corpus size — clamped per generation
+    automatically) the merged top-k therefore equals the monolithic top-k
+    exactly, ids AND score bits. Under tight budgets the two legitimately
+    diverge in the timeline's FAVOR: phase 2/3 keep the top-n of the
+    *visible pool*, and a per-generation pool has fewer competitors — the
+    same relative-selection caveat the shard_map plan documents. Score
+    ties: ``lax.top_k`` breaks ties toward the lower index at every cut
+    and generations are concatenated in id order, so both paths resolve
+    ties toward the lower GLOBAL doc id.
+
+    Budgets are clamped per generation via :func:`adapt_config_to_corpus`;
+    generations of equal shape share one jit cache entry.
+    """
+    parts = [retrieve(gen, queries, adapt_config_to_corpus(cfg, meta.n_docs),
+                      q_masks)
+             for gen, meta, _ in timeline]
+    return merge_generation_topk(parts, timeline.offsets, cfg.k)
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,16 @@ from .residual import ResidualCodec, train_residual_codec, encode_residual
 
 @dataclasses.dataclass(frozen=True)
 class IndexMeta:
+    """Static description of a :class:`PackedIndex` (shapes + build params).
+
+    Hashable and JSON-serializable — ``repro.core.store`` round-trips it
+    through the on-disk manifest (docs/INDEX_FORMAT.md). The drift fields
+    (``n_grown`` / ``*_quant_mse``) are the incremental-growth telemetry:
+    ``add_passages`` quantizes new passages against the FROZEN centroid/PQ
+    codebooks, so :attr:`drift` is how callers decide when a re-train is
+    warranted.
+    """
+
     n_docs: int
     n_centroids: int
     d: int
@@ -39,9 +49,41 @@ class IndexMeta:
     # cannot reach the dropped docs through the overflowed centroid — size
     # list_cap up if retrieval quality matters more than IVF memory.
     n_dropped: int = 0
+    # docs appended by store.add_passages / encoded by store.new_generation
+    # AFTER the centroid/PQ codebooks were trained (the last n_grown docs).
+    n_grown: int = 0
+    # mean squared token -> assigned-centroid residual norm over the docs the
+    # codebooks were TRAINED on (the quantization error baseline)...
+    train_quant_mse: float = 0.0
+    # ... and the same statistic over the n_grown appended docs (0.0 until
+    # something is grown). Quantized against frozen codebooks, so this only
+    # ever degrades as the corpus distribution moves.
+    grown_quant_mse: float = 0.0
+
+    @property
+    def drift(self) -> float:
+        """Quantization-drift ratio ``grown_quant_mse / train_quant_mse``.
+
+        1.0 means appended passages quantize as well as the training corpus
+        (no drift, or nothing grown yet); sustained values well above 1
+        (rule of thumb: > ~1.5) mean the frozen centroids/codebooks no
+        longer fit the incoming distribution and a re-train (fresh
+        ``build_index`` over the union corpus) is warranted.
+        """
+        if self.n_grown == 0 or self.train_quant_mse == 0.0:
+            return 1.0
+        return self.grown_quant_mse / self.train_quant_mse
 
 
 class PackedIndex(NamedTuple):
+    """The complete on-device retrieval index — a flat pytree of arrays.
+
+    Being a NamedTuple of arrays (no Python state), it passes through jit /
+    vmap / shard_map unchanged, and ``repro.core.store`` can persist it
+    field-by-field. All shapes are fixed; integer padding uses one-past-end
+    sentinels (see the module docstring).
+    """
+
     centroids: jax.Array      # (n_c, d) fp32, L2-normalized
     codes: jax.Array          # (n_docs, cap) int32, pad = n_c
     doc_lens: jax.Array       # (n_docs,) int32
@@ -56,15 +98,18 @@ class PackedIndex(NamedTuple):
 
     @property
     def pq(self) -> PQCodebooks:
+        """PQ codebooks wrapped in their NamedTuple view."""
         return PQCodebooks(self.pq_codebooks)
 
     @property
     def plaid_codec(self) -> ResidualCodec:
+        """The PLAID b-bit residual codec reconstructed from its arrays."""
         nb = self.plaid_weights.shape[0]
         return ResidualCodec(self.plaid_cutoffs, self.plaid_weights,
                              int(np.log2(nb)))
 
     def token_mask(self) -> jax.Array:
+        """(n_docs, cap) bool — True for real (non-padding) tokens."""
         cap = self.codes.shape[1]
         return jnp.arange(cap)[None, :] < self.doc_lens[:, None]
 
@@ -82,63 +127,50 @@ def bytes_per_embedding(meta: IndexMeta, method: str) -> float:
     raise ValueError(method)
 
 
-def build_index(key: jax.Array,
-                doc_embs: np.ndarray,      # (n_docs, cap, d) fp32, zero-padded
-                doc_lens: np.ndarray,      # (n_docs,)
-                *,
-                n_centroids: int,
-                m: int = 16,
-                nbits: int = 8,
-                plaid_b: int = 2,
-                list_cap: Optional[int] = None,
-                kmeans_iters: int = 8,
-                pq_train_size: int = 65536,
-                use_opq: bool = False) -> tuple[PackedIndex, IndexMeta]:
+def quantize_tokens(centroids: jax.Array, doc_embs: np.ndarray,
+                    doc_lens: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Assign every token to its nearest (frozen) centroid — paper §4.1.
+
+    The shared quantization step of ``build_index`` AND the incremental
+    growth path (``store.add_passages`` / ``store.new_generation``): both
+    MUST encode a given document identically, which is what makes a grown
+    monolithic index and a multi-generation timeline score docs bit-for-bit
+    the same (tests/test_store.py).
+
+    centroids : (n_c, d) fp32 — the frozen centroid vocabulary
+    doc_embs  : (n_docs, cap, d) fp32, zero-padded (rows are re-normalized)
+    doc_lens  : (n_docs,) int
+    -> (codes (n_docs, cap) int32 with the ``n_c`` pad sentinel,
+        residual_flat (n_docs*cap, d) fp32 token - centroid residuals,
+        mask (n_docs, cap) bool of real tokens)
+    """
     n_docs, cap, d = doc_embs.shape
-    k1, k2, k3 = jax.random.split(key, 3)
-
-    mask = (np.arange(cap)[None, :] < doc_lens[:, None])
-    flat = jnp.asarray(doc_embs.reshape(-1, d)[mask.reshape(-1)])
-    flat = flat / jnp.maximum(jnp.linalg.norm(flat, axis=-1, keepdims=True), 1e-12)
-
-    # --- centroid vocabulary (spherical k-means on all token embeddings) ----
-    centroids, _ = kmeans_spherical(k1, flat, n_centroids, iters=kmeans_iters)
-
-    # --- per-token assignment + residuals ------------------------------------
+    n_centroids = centroids.shape[0]
+    mask = (np.arange(cap)[None, :] < np.asarray(doc_lens)[:, None])
     normed = np.asarray(doc_embs, dtype=np.float32)
     norms = np.maximum(np.linalg.norm(normed, axis=-1, keepdims=True), 1e-12)
     normed = normed / norms
     flat_all = jnp.asarray(normed.reshape(-1, d))
     codes_flat = np.asarray(assign(flat_all, centroids))            # (n_docs*cap,)
     residual_flat = np.asarray(flat_all) - np.asarray(centroids)[codes_flat]
-
     codes = codes_flat.reshape(n_docs, cap).astype(np.int32)
     codes[~mask] = n_centroids                                      # sentinel pad
+    return codes, residual_flat, mask
 
-    # --- EMVB: PQ (optionally OPQ) on residuals ------------------------------
-    res_sample_idx = np.random.default_rng(0).choice(
-        mask.sum(), size=min(pq_train_size, int(mask.sum())), replace=False)
-    res_sample = jnp.asarray(residual_flat[mask.reshape(-1)][res_sample_idx])
-    if use_opq:
-        opq = train_opq(k2, res_sample, m, nbits=nbits)
-        rotation, pq_cb = opq.rotation, opq.cb
-        residual_rot = jnp.asarray(residual_flat) @ rotation
-    else:
-        rotation = jnp.eye(d, dtype=jnp.float32)
-        pq_cb = train_pq(k2, res_sample, m, nbits=nbits)
-        residual_rot = jnp.asarray(residual_flat)
-    res_codes = np.asarray(encode_pq(residual_rot, pq_cb))
-    res_codes = res_codes.reshape(n_docs, cap, m).astype(np.uint8)
 
-    # --- PLAID baseline: b-bit bucket codec on raw residuals ----------------
-    codec = train_residual_codec(res_sample, plaid_b)
-    plaid_packed = np.asarray(
-        encode_residual(jnp.asarray(residual_flat), codec))
-    plaid_packed = plaid_packed.reshape(n_docs, cap, -1)
-
-    # --- inverted file: centroid -> doc ids ----------------------------------
-    doc_of_token = np.broadcast_to(np.arange(n_docs)[:, None], (n_docs, cap))[mask]
-    pairs = np.stack([codes_flat[mask.reshape(-1)], doc_of_token], axis=1)
+def _build_ivf(codes: np.ndarray, n_centroids: int,
+               list_cap: Optional[int], *, origin: str = "build_index"
+               ) -> tuple[np.ndarray, np.ndarray, int, int]:
+    """Build the padded (n_c, list_cap) inverted file from sentinel-padded
+    token codes. Returns (ivf, ivf_lens, list_cap, n_dropped) and warns when
+    a fixed list_cap truncates lists (docs become unreachable via that
+    centroid in phase 1)."""
+    n_docs, cap = codes.shape
+    mask = codes < n_centroids
+    doc_of_token = np.broadcast_to(
+        np.arange(n_docs)[:, None], (n_docs, cap))[mask]
+    pairs = np.stack([codes[mask], doc_of_token], axis=1)
     lists: list[np.ndarray] = [np.empty(0, np.int64)] * n_centroids
     order = np.argsort(pairs[:, 0], kind="stable")
     sorted_pairs = pairs[order]
@@ -164,16 +196,84 @@ def build_index(key: jax.Array,
         ivf_lens[c] = ln
     if n_dropped:
         warnings.warn(
-            f"build_index: {n_overflowed} IVF list(s) overflowed "
+            f"{origin}: {n_overflowed} IVF list(s) overflowed "
             f"list_cap={list_cap}; {n_dropped} doc-id entries dropped "
             f"(longest list: {max_len}). Dropped docs are unreachable "
             "through the overflowed centroids in phase 1 — raise list_cap "
             "(or leave it None to auto-size) if recall matters.",
-            stacklevel=2)
+            stacklevel=3)
+    return ivf, ivf_lens, list_cap, n_dropped
+
+
+def build_index(key: jax.Array,
+                doc_embs: np.ndarray,      # (n_docs, cap, d) fp32, zero-padded
+                doc_lens: np.ndarray,      # (n_docs,)
+                *,
+                n_centroids: int,
+                m: int = 16,
+                nbits: int = 8,
+                plaid_b: int = 2,
+                list_cap: Optional[int] = None,
+                kmeans_iters: int = 8,
+                pq_train_size: int = 65536,
+                use_opq: bool = False) -> tuple[PackedIndex, IndexMeta]:
+    """Build the full EMVB/PLAID index over a padded corpus (eager, once).
+
+    Trains the centroid vocabulary (spherical k-means over all real token
+    embeddings, paper §4.1), assigns every token, PQ-encodes the residuals
+    (paper §4.4 / C3; OPQ optional), fits the PLAID b-bit baseline codec,
+    and builds the padded inverted file phase 1 probes. The returned
+    :class:`IndexMeta` records the quantization-error baseline
+    (``train_quant_mse``) that ``store.add_passages`` later measures its
+    drift statistic against.
+
+    -> (PackedIndex, IndexMeta)
+    """
+    n_docs, cap, d = doc_embs.shape
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    mask = (np.arange(cap)[None, :] < doc_lens[:, None])
+    flat = jnp.asarray(doc_embs.reshape(-1, d)[mask.reshape(-1)])
+    flat = flat / jnp.maximum(jnp.linalg.norm(flat, axis=-1, keepdims=True), 1e-12)
+
+    # --- centroid vocabulary (spherical k-means on all token embeddings) ----
+    centroids, _ = kmeans_spherical(k1, flat, n_centroids, iters=kmeans_iters)
+
+    # --- per-token assignment + residuals ------------------------------------
+    codes, residual_flat, mask = quantize_tokens(centroids, doc_embs, doc_lens)
+
+    # --- EMVB: PQ (optionally OPQ) on residuals ------------------------------
+    res_sample_idx = np.random.default_rng(0).choice(
+        mask.sum(), size=min(pq_train_size, int(mask.sum())), replace=False)
+    res_sample = jnp.asarray(residual_flat[mask.reshape(-1)][res_sample_idx])
+    if use_opq:
+        opq = train_opq(k2, res_sample, m, nbits=nbits)
+        rotation, pq_cb = opq.rotation, opq.cb
+        residual_rot = jnp.asarray(residual_flat) @ rotation
+    else:
+        rotation = jnp.eye(d, dtype=jnp.float32)
+        pq_cb = train_pq(k2, res_sample, m, nbits=nbits)
+        residual_rot = jnp.asarray(residual_flat)
+    res_codes = np.asarray(encode_pq(residual_rot, pq_cb))
+    res_codes = res_codes.reshape(n_docs, cap, m).astype(np.uint8)
+
+    # --- PLAID baseline: b-bit bucket codec on raw residuals ----------------
+    codec = train_residual_codec(res_sample, plaid_b)
+    plaid_packed = np.asarray(
+        encode_residual(jnp.asarray(residual_flat), codec))
+    plaid_packed = plaid_packed.reshape(n_docs, cap, -1)
+
+    # --- inverted file: centroid -> doc ids ----------------------------------
+    ivf, ivf_lens, list_cap, n_dropped = _build_ivf(
+        codes, n_centroids, list_cap, origin="build_index")
+
+    # quantization-error baseline for store.add_passages' drift statistic
+    real_res = residual_flat[mask.reshape(-1)]
+    train_quant_mse = float(np.mean(np.sum(real_res * real_res, axis=-1)))
 
     meta = IndexMeta(n_docs=n_docs, n_centroids=n_centroids, d=d, cap=cap,
                      m=m, nbits=nbits, plaid_b=plaid_b, list_cap=list_cap,
-                     n_dropped=n_dropped)
+                     n_dropped=n_dropped, train_quant_mse=train_quant_mse)
     idx = PackedIndex(
         centroids=centroids,
         codes=jnp.asarray(codes),

@@ -28,10 +28,10 @@ def assign(x: jax.Array, centroids: jax.Array, *, chunk: int = 16384) -> jax.Arr
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     xb = xp.reshape(-1, chunk, x.shape[1])
 
-    def one(block):
+    def _one(block):
         return jnp.argmin(_pairwise_sq_dists(block, centroids), axis=-1).astype(jnp.int32)
 
-    out = jax.lax.map(one, xb).reshape(-1)
+    out = jax.lax.map(_one, xb).reshape(-1)
     return out[:n]
 
 
@@ -55,13 +55,14 @@ def kmeans(key: jax.Array, x: jax.Array, k: int, *, iters: int = 8,
     perm = jax.random.permutation(init_key, x.shape[0])[:k]
     centroids0 = x[perm]
 
-    def body(carry, subkey):
+    def _body(carry, subkey):
         centroids = carry
         a = assign(x, centroids, chunk=chunk)
         centroids = _update(x, a, k, centroids, subkey)
         return centroids, None
 
-    centroids, _ = jax.lax.scan(body, centroids0, jax.random.split(loop_key, iters))
+    centroids, _ = jax.lax.scan(_body, centroids0,
+                                jax.random.split(loop_key, iters))
     return centroids, assign(x, centroids, chunk=chunk)
 
 

@@ -27,6 +27,8 @@ from .residual import decode_residual
 
 @dataclasses.dataclass(frozen=True)
 class PlaidConfig:
+    """Static PLAID retrieval configuration (hashable jit argument)."""
+
     n_q: int = 32
     nprobe: int = 4
     n_docs: int = 64      # docs decompressed + exactly scored
@@ -69,6 +71,7 @@ def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def retrieve(index: PackedIndex, queries: jax.Array,
              cfg: PlaidConfig) -> RetrievalResult:
+    """PLAID retrieval: queries (B, n_q, d) -> top-k (scores, ids)."""
     token_mask = index.token_mask()
     return jax.vmap(lambda q: _retrieve_one(q, index, token_mask, cfg))(queries)
 
@@ -77,6 +80,7 @@ def retrieve(index: PackedIndex, queries: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase_retrieval(index: PackedIndex, q: jax.Array, cfg: PlaidConfig):
+    """PLAID phase 1: full top-nprobe probe -> (cs, candidate bitmap)."""
     cs = centroid_scores(q, index.centroids)
     _, probe_ids = jax.lax.top_k(cs, cfg.nprobe)
     bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
@@ -87,6 +91,7 @@ def phase_retrieval(index: PackedIndex, q: jax.Array, cfg: PlaidConfig):
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def phase_filtering(index: PackedIndex, cs: jax.Array, bitmap: jax.Array,
                     cfg: PlaidConfig):
+    """PLAID phase 2: centroid interaction over ALL candidates -> top ids."""
     token_mask = index.token_mask()
     sbar = interaction.centroid_interaction(cs.T, index.codes, token_mask)
     sbar = jnp.where(bitmap, sbar, -jnp.inf)
@@ -96,6 +101,8 @@ def phase_filtering(index: PackedIndex, cs: jax.Array, bitmap: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=())
 def phase_decompression(index: PackedIndex, sel2: jax.Array):
+    """PLAID phase 3: decompress b-bit residuals (centroid + bucket values)
+    into full-precision embeddings — the cost EMVB's PQ LUT removes."""
     d = index.centroids.shape[1]
     codec = index.plaid_codec
     s2_codes = jnp.take(index.codes, sel2, axis=0)
@@ -109,6 +116,7 @@ def phase_decompression(index: PackedIndex, sel2: jax.Array):
 @functools.partial(jax.jit, static_argnames=("k",))
 def phase_late_interaction(index: PackedIndex, q: jax.Array, emb: jax.Array,
                            sel2: jax.Array, k: int):
+    """PLAID phase 4: exact MaxSim on decompressed vectors -> final top-k."""
     token_mask = index.token_mask()
     s2_mask = jnp.take(token_mask, sel2, axis=0)
     scores = interaction.maxsim(q, emb, s2_mask)

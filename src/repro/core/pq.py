@@ -27,18 +27,23 @@ from .kmeans import kmeans
 
 
 class PQCodebooks(NamedTuple):
+    """Per-subspace PQ codebooks (paper §4.4): one K-entry table per slice."""
+
     codebooks: jax.Array  # (m, K, dsub) fp32
 
     @property
     def m(self) -> int:
+        """Number of subspaces."""
         return self.codebooks.shape[0]
 
     @property
     def ksub(self) -> int:
+        """Codewords per subspace (2^nbits)."""
         return self.codebooks.shape[1]
 
     @property
     def dsub(self) -> int:
+        """Dimensions per subspace (d / m)."""
         return self.codebooks.shape[2]
 
 
@@ -56,12 +61,12 @@ def train_pq(key: jax.Array, x: jax.Array, m: int, *, nbits: int = 8,
     subs = _split(x, m)  # (m, n, dsub)
     keys = jax.random.split(key, m)
 
-    def one(args):
+    def _one(args):
         k_i, sub = args
         c, _ = kmeans(k_i, sub, ksub, iters=iters)
         return c
 
-    cbs = jax.lax.map(one, (keys, subs))  # (m, K, dsub)
+    cbs = jax.lax.map(_one, (keys, subs))  # (m, K, dsub)
     return PQCodebooks(cbs)
 
 
@@ -70,12 +75,12 @@ def encode_pq(x: jax.Array, cb: PQCodebooks) -> jax.Array:
     """(n, d) -> (n, m) uint8 codes (nearest codeword per subspace)."""
     subs = _split(x, cb.m)  # (m, n, dsub)
 
-    def one(args):
+    def _one(args):
         sub, c = args
         d2 = jnp.sum(c * c, -1)[None, :] - 2.0 * (sub @ c.T)
         return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
 
-    codes = jax.lax.map(one, (subs, cb.codebooks))  # (m, n)
+    codes = jax.lax.map(_one, (subs, cb.codebooks))  # (m, n)
     return codes.T
 
 
@@ -123,6 +128,9 @@ def pq_ste(x: jax.Array, cb: PQCodebooks) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 class OPQ(NamedTuple):
+    """Optimized PQ: an orthonormal rotation plus the codebooks trained
+    on the rotated residuals (Ge et al., 2013)."""
+
     rotation: jax.Array  # (d, d) orthonormal
     cb: PQCodebooks
 
@@ -148,5 +156,6 @@ def train_opq(key: jax.Array, x: jax.Array, m: int, *, nbits: int = 8,
 
 
 def pq_reconstruction_mse(x: jax.Array, cb: PQCodebooks) -> jax.Array:
+    """Mean squared encode->decode reconstruction error of x (n, d)."""
     xhat = decode_pq(encode_pq(x, cb), cb)
     return jnp.mean(jnp.sum((x - xhat) ** 2, axis=-1))

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 
 class ResidualCodec(NamedTuple):
+    """PLAID's b-bit quantile bucket codec for residual values."""
+
     cutoffs: jax.Array         # (2^b - 1,) bucket boundaries
     bucket_weights: jax.Array  # (2^b,) reconstruction values
     b: int                     # static: bits per dimension
@@ -56,6 +58,7 @@ def pack_codes(codes: jax.Array, b: int) -> jax.Array:
 
 
 def unpack_codes(packed: jax.Array, b: int, d: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: (..., d*b/8) uint8 -> (..., d) codes."""
     per = 8 // b
     mask = jnp.uint32((1 << b) - 1)
     shifts = (jnp.arange(per, dtype=jnp.uint32) * b)

@@ -1,0 +1,471 @@
+"""Index lifecycle: persistence, incremental growth, multi-generation serving.
+
+Three concerns, one subsystem (docs/INDEX_FORMAT.md has the on-disk schema):
+
+* **Persistence** — ``save_index`` / ``load_index`` write a
+  :class:`~repro.core.index.PackedIndex` + :class:`~repro.core.index.IndexMeta`
+  to a versioned directory (``manifest.json`` + ``arrays.npz``). Loading is
+  bit-exact: retrieval on a loaded index equals retrieval on the original,
+  ids AND score bits (tests/test_store.py).
+
+* **Incremental growth** — ``add_passages`` appends passages to an existing
+  index WITHOUT re-running k-means: new tokens are quantized against the
+  frozen centroid/PQ/PLAID codebooks (the exact ``quantize_tokens`` path
+  ``build_index`` used), IVF lists are extended (list_cap grows instead of
+  dropping entries), and the quantization-error drift statistic on
+  ``IndexMeta`` tells callers when the frozen codebooks have gone stale.
+
+* **Multi-generation serving** — à la PLAID SHIRTTT (Lawrie et al., 2024):
+  an append-only stream is served as a :class:`ShardedTimeline` of immutable
+  index generations, each built or grown independently (possibly with
+  different ``n_docs``), merged at query time by
+  ``repro.core.engine.retrieve_timeline`` (single device) or
+  ``repro.launch.serve.make_timeline_retriever`` (shard_map plan per
+  generation). Per-generation footprint stays bounded — growth never
+  rewrites an old generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zipfile
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from .index import IndexMeta, PackedIndex, _build_ivf, quantize_tokens
+from .pq import encode_pq
+from .residual import encode_residual
+
+# Bump on ANY incompatible change to the manifest or array set; readers
+# refuse files from the future. See docs/INDEX_FORMAT.md for the policy.
+SCHEMA_VERSION = 1
+_FORMAT = "emvb-packed-index"
+_TIMELINE_FORMAT = "emvb-sharded-timeline"
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+# ---------------------------------------------------------------------------
+# Persistence — versioned on-disk format
+# ---------------------------------------------------------------------------
+
+def save_index(path: str, index: PackedIndex, meta: IndexMeta) -> str:
+    """Write an index to ``path`` (a directory; created if missing).
+
+    Layout: ``manifest.json`` (format name, ``schema_version``, the full
+    ``IndexMeta``, and a per-array dtype/shape manifest) + ``arrays.npz``
+    (every ``PackedIndex`` field, uncompressed, bit-exact). Returns ``path``.
+    """
+    os.makedirs(path, exist_ok=True)
+    arrays = {f: np.asarray(getattr(index, f)) for f in PackedIndex._fields}
+    manifest = {
+        "format": _FORMAT,
+        "schema_version": SCHEMA_VERSION,
+        "meta": dataclasses.asdict(meta),
+        "arrays": {f: {"dtype": str(a.dtype), "shape": list(a.shape)}
+                   for f, a in arrays.items()},
+    }
+    # The manifest gates validity: retract any existing one BEFORE touching
+    # the arrays (covers overwriting a prior save), write the arrays, then
+    # publish the new manifest atomically — a crash at any point leaves a
+    # directory load_index rejects instead of a torn or stale index.
+    mpath = os.path.join(path, _MANIFEST)
+    if os.path.exists(mpath):
+        os.remove(mpath)
+    np.savez(os.path.join(path, _ARRAYS), **arrays)
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, mpath)
+    return path
+
+
+def _fail(path: str, why: str) -> ValueError:
+    return ValueError(f"load_index({path!r}): {why}")
+
+
+def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
+    """Load an index written by :func:`save_index` — the bit-exact inverse.
+
+    Every failure mode raises an actionable ``ValueError``: missing/corrupt
+    files, wrong format, a future ``schema_version`` (this build refuses to
+    guess at formats from the future), missing or unknown meta fields, and
+    any array whose dtype/shape disagrees with the manifest.
+    """
+    mpath = os.path.join(path, _MANIFEST)
+    if not os.path.isfile(mpath):
+        raise _fail(path, f"no {_MANIFEST} — not a saved EMVB index "
+                          "(or a save was interrupted before the manifest "
+                          "was written)")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise _fail(path, f"corrupt {_MANIFEST}: {e}") from e
+    if not isinstance(manifest, dict) or manifest.get("format") != _FORMAT:
+        raise _fail(path, f"{_MANIFEST} has format="
+                          f"{manifest.get('format')!r}, expected {_FORMAT!r}")
+    version = manifest.get("schema_version")
+    if not isinstance(version, int) or version < 1:
+        raise _fail(path, f"bad schema_version={version!r}")
+    if version > SCHEMA_VERSION:
+        raise _fail(path, f"schema_version={version} is newer than this "
+                          f"build understands (<= {SCHEMA_VERSION}); "
+                          "upgrade repro to read this index")
+
+    meta_fields = {f.name for f in dataclasses.fields(IndexMeta)}
+    meta_dict = manifest.get("meta")
+    if not isinstance(meta_dict, dict):
+        raise _fail(path, f"{_MANIFEST} is missing the 'meta' table")
+    missing = sorted(meta_fields - meta_dict.keys())
+    unknown = sorted(meta_dict.keys() - meta_fields)
+    if missing:
+        raise _fail(path, f"manifest meta is missing field(s) "
+                          f"{missing} — corrupt or hand-edited manifest")
+    if unknown:
+        raise _fail(path, f"manifest meta has unknown field(s) {unknown} at "
+                          f"schema_version={version}; new fields require a "
+                          "schema version bump (docs/INDEX_FORMAT.md)")
+    meta = IndexMeta(**meta_dict)
+
+    decl = manifest.get("arrays")
+    if not isinstance(decl, dict) or \
+            sorted(decl) != sorted(PackedIndex._fields):
+        raise _fail(path, "manifest 'arrays' table does not list exactly the "
+                          f"PackedIndex fields {sorted(PackedIndex._fields)}")
+    apath = os.path.join(path, _ARRAYS)
+    if not os.path.isfile(apath):
+        raise _fail(path, f"no {_ARRAYS} next to the manifest")
+    try:
+        with np.load(apath) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise _fail(path, f"corrupt {_ARRAYS}: {e}") from e
+
+    fields = []
+    for f in PackedIndex._fields:
+        if f not in arrays:
+            raise _fail(path, f"{_ARRAYS} is missing array {f!r} declared "
+                              "in the manifest")
+        a, want = arrays[f], decl[f]
+        if str(a.dtype) != want["dtype"] or list(a.shape) != want["shape"]:
+            raise _fail(path, f"array {f!r} is {a.dtype}{list(a.shape)} but "
+                              f"the manifest declares {want['dtype']}"
+                              f"{want['shape']} — corrupt save")
+        fields.append(jnp.asarray(a))
+    index = PackedIndex(*fields)
+
+    # light cross-checks: meta and arrays must describe the same index
+    n_docs, cap = index.codes.shape
+    if (meta.n_docs, meta.cap) != (n_docs, cap) or \
+            meta.n_centroids != index.centroids.shape[0]:
+        raise _fail(path, f"meta (n_docs={meta.n_docs}, cap={meta.cap}, "
+                          f"n_centroids={meta.n_centroids}) disagrees with "
+                          f"the arrays (codes {n_docs}x{cap}, centroids "
+                          f"{index.centroids.shape[0]}) — corrupt save")
+    return index, meta
+
+
+# ---------------------------------------------------------------------------
+# Incremental growth — quantize against frozen codebooks
+# ---------------------------------------------------------------------------
+
+def _encode_passages(index: PackedIndex, doc_embs: np.ndarray,
+                     doc_lens: np.ndarray):
+    """Encode new passages against an index's FROZEN codebooks.
+
+    Runs the exact build-time path — ``quantize_tokens`` + PQ (+ OPQ
+    rotation) + PLAID codec — so a passage encodes bit-identically whether
+    it entered via ``build_index``-then-``add_passages`` or via
+    ``new_generation``. Returns (codes, res_codes, plaid_res,
+    residual_sq_sum, n_tokens); the last two feed the drift statistic.
+    """
+    n_new, cap, d = doc_embs.shape
+    codes, residual_flat, mask = quantize_tokens(
+        index.centroids, doc_embs, doc_lens)
+    rotation = np.asarray(index.opq_rotation)
+    if np.array_equal(rotation, np.eye(d, dtype=rotation.dtype)):
+        residual_rot = jnp.asarray(residual_flat)   # skip the identity matmul
+    else:
+        residual_rot = jnp.asarray(residual_flat) @ index.opq_rotation
+    m = index.res_codes.shape[-1]
+    res_codes = np.asarray(encode_pq(residual_rot, index.pq))
+    res_codes = res_codes.reshape(n_new, cap, m).astype(np.uint8)
+    plaid_res = np.asarray(
+        encode_residual(jnp.asarray(residual_flat), index.plaid_codec))
+    plaid_res = plaid_res.reshape(n_new, cap, -1)
+    real = residual_flat[mask.reshape(-1)]
+    return codes, res_codes, plaid_res, float(np.sum(real * real)), \
+        int(mask.sum())
+
+
+def _check_new_docs(meta: IndexMeta, doc_embs: np.ndarray,
+                    doc_lens: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Validate (and coerce) new-passage arrays against the index geometry."""
+    doc_embs = np.asarray(doc_embs, dtype=np.float32)
+    doc_lens = np.asarray(doc_lens, dtype=np.int32)
+    if doc_embs.ndim != 3 or doc_embs.shape[0] != doc_lens.shape[0]:
+        raise ValueError(
+            f"doc_embs {doc_embs.shape} / doc_lens {doc_lens.shape}: "
+            "expected (n_new, cap, d) embeddings with one length per doc")
+    if doc_embs.shape[1] != meta.cap or doc_embs.shape[2] != meta.d:
+        raise ValueError(
+            f"new passages are padded to (cap={doc_embs.shape[1]}, "
+            f"d={doc_embs.shape[2]}) but the index was built with "
+            f"(cap={meta.cap}, d={meta.d}); re-pad (or truncate) the new "
+            "docs to the index geometry first")
+    if doc_embs.shape[0] == 0:
+        raise ValueError("no passages to add (n_new=0)")
+    return doc_embs, doc_lens
+
+
+def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
+                 doc_lens: np.ndarray) -> tuple[PackedIndex, IndexMeta]:
+    """Append passages to an existing index without re-running k-means.
+
+    New docs are quantized against the FROZEN centroid and PQ/PLAID
+    codebooks (so existing doc ids, codes and scores are untouched), their
+    doc ids continue after the current corpus, and the IVF is extended
+    in-place semantics-wise: ``list_cap`` grows as needed instead of
+    dropping entries (host-side realloc; the old one-past-end sentinels are
+    rewritten for the new ``n_docs``).
+
+    Drift accounting: ``meta.n_grown`` counts docs appended since the
+    codebooks were trained and ``meta.grown_quant_mse`` tracks their mean
+    squared token->centroid residual — compare against
+    ``meta.train_quant_mse`` via ``meta.drift`` to decide when a re-train
+    (fresh ``build_index`` over the union corpus) is warranted.
+
+    doc_embs : (n_new, cap, d) fp32, zero-padded to the INDEX's cap/d
+    doc_lens : (n_new,) int
+    -> (PackedIndex, IndexMeta) — a new index/meta pair (inputs unchanged)
+    """
+    doc_embs, doc_lens = _check_new_docs(meta, doc_embs, doc_lens)
+    n_old, n_new = meta.n_docs, doc_embs.shape[0]
+    n_total = n_old + n_new
+    new_codes, new_res, new_plaid, sq_sum, n_tok = _encode_passages(
+        index, doc_embs, doc_lens)
+
+    # --- extend the IVF: new lists first, then merge with the old ones ------
+    add_ivf, add_lens, _, _ = _build_ivf(
+        new_codes, meta.n_centroids, None, origin="add_passages")
+    old_ivf = np.asarray(index.ivf)
+    old_lens = np.asarray(index.ivf_lens)
+    need = old_lens + add_lens
+    list_cap = max(meta.list_cap, int(need.max()))
+    ivf = np.full((meta.n_centroids, list_cap), n_total, dtype=np.int32)
+    for c in np.nonzero(old_lens)[0]:
+        ivf[c, :old_lens[c]] = old_ivf[c, :old_lens[c]]
+    for c in np.nonzero(add_lens)[0]:
+        ivf[c, old_lens[c]:need[c]] = add_ivf[c, :add_lens[c]] + n_old
+    ivf_lens = need.astype(np.int32)
+
+    # --- drift statistic over ALL grown docs (old grown + this batch) -------
+    all_lens = np.asarray(index.doc_lens)
+    old_grown_tok = int(all_lens[n_old - meta.n_grown:].sum())
+    grown_tok = old_grown_tok + n_tok
+    grown_mse = (meta.grown_quant_mse * old_grown_tok + sq_sum) / \
+        max(grown_tok, 1)
+
+    plaid_res = np.asarray(index.plaid_res)
+    if plaid_res.shape[0] == n_old:                 # real PLAID codes
+        plaid_res = np.concatenate([plaid_res, new_plaid], axis=0)
+    grown = PackedIndex(
+        centroids=index.centroids,
+        codes=jnp.asarray(np.concatenate(
+            [np.asarray(index.codes), new_codes], axis=0)),
+        doc_lens=jnp.asarray(np.concatenate([all_lens, doc_lens], axis=0)),
+        res_codes=jnp.asarray(np.concatenate(
+            [np.asarray(index.res_codes), new_res], axis=0)),
+        pq_codebooks=index.pq_codebooks,
+        ivf=jnp.asarray(ivf),
+        ivf_lens=jnp.asarray(ivf_lens),
+        plaid_res=jnp.asarray(plaid_res),
+        plaid_cutoffs=index.plaid_cutoffs,
+        plaid_weights=index.plaid_weights,
+        opq_rotation=index.opq_rotation,
+    )
+    grown_meta = dataclasses.replace(
+        meta, n_docs=n_total, list_cap=list_cap, n_grown=meta.n_grown + n_new,
+        grown_quant_mse=float(grown_mse))
+    return grown, grown_meta
+
+
+def new_generation(base: PackedIndex, base_meta: IndexMeta,
+                   doc_embs: np.ndarray, doc_lens: np.ndarray
+                   ) -> tuple[PackedIndex, IndexMeta]:
+    """Build a fresh, self-contained index generation for NEW passages only,
+    reusing a base index's frozen centroid/PQ/PLAID codebooks.
+
+    The PLAID-SHIRTTT building block: each arriving corpus slice becomes an
+    immutable generation with LOCAL doc ids and its own (auto-sized) IVF,
+    sharing the base's codebooks so scores are directly comparable — a
+    :class:`ShardedTimeline` of such generations merges per-generation
+    top-k by score with no calibration step. Every doc counts as "grown"
+    (quantized against foreign codebooks), so the generation's
+    ``meta.drift`` measures how far the stream has moved from the base
+    training distribution.
+
+    -> (PackedIndex, IndexMeta) for the new generation alone
+    """
+    doc_embs, doc_lens = _check_new_docs(base_meta, doc_embs, doc_lens)
+    n_new = doc_embs.shape[0]
+    codes, res_codes, plaid_res, sq_sum, n_tok = _encode_passages(
+        base, doc_embs, doc_lens)
+    ivf, ivf_lens, list_cap, n_dropped = _build_ivf(
+        codes, base_meta.n_centroids, None, origin="new_generation")
+    gen = PackedIndex(
+        centroids=base.centroids,
+        codes=jnp.asarray(codes),
+        doc_lens=jnp.asarray(doc_lens),
+        res_codes=jnp.asarray(res_codes),
+        pq_codebooks=base.pq_codebooks,
+        ivf=jnp.asarray(ivf),
+        ivf_lens=jnp.asarray(ivf_lens),
+        plaid_res=jnp.asarray(plaid_res),
+        plaid_cutoffs=base.plaid_cutoffs,
+        plaid_weights=base.plaid_weights,
+        opq_rotation=base.opq_rotation,
+    )
+    gen_meta = dataclasses.replace(
+        base_meta, n_docs=n_new, list_cap=list_cap, n_dropped=n_dropped,
+        n_grown=n_new, grown_quant_mse=sq_sum / max(n_tok, 1))
+    return gen, gen_meta
+
+
+# ---------------------------------------------------------------------------
+# Multi-generation timeline (PLAID SHIRTTT)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedTimeline:
+    """An ordered sequence of immutable index generations served as one
+    corpus (PLAID SHIRTTT's temporal sharding).
+
+    Generation g's local doc ids map to the global id space at offset
+    ``offsets[g]`` (generations are concatenated in arrival order, so
+    global ids are stable as the timeline grows). Query through
+    ``repro.core.engine.retrieve_timeline`` or, sharded,
+    ``repro.launch.serve.make_timeline_retriever``.
+    """
+
+    generations: tuple[PackedIndex, ...]
+    metas: tuple[IndexMeta, ...]
+
+    def __post_init__(self):
+        """Validate the generation/meta pairing and codebook compatibility."""
+        if len(self.generations) != len(self.metas):
+            raise ValueError(
+                f"{len(self.generations)} generation(s) but "
+                f"{len(self.metas)} meta(s)")
+        if not self.generations:
+            raise ValueError("a ShardedTimeline needs >= 1 generation")
+        d0 = self.metas[0]
+        geom = ("n_centroids", "d", "cap", "m", "nbits", "plaid_b")
+        for g, m in enumerate(self.metas[1:], start=1):
+            mine = tuple(getattr(m, f) for f in geom)
+            base = tuple(getattr(d0, f) for f in geom)
+            if mine != base:
+                raise ValueError(
+                    f"generation {g} geometry {dict(zip(geom, mine))} "
+                    f"differs from generation 0 {dict(zip(geom, base))}; "
+                    "generations must share the frozen codebooks (build "
+                    "them with store.new_generation)")
+        # geometry can coincide by accident (e.g. two independent
+        # build_index runs) — scores are only comparable if the CODEBOOK
+        # CONTENTS match, so check the arrays, not just their shapes
+        c0 = self.generations[0]
+        for g, gen in enumerate(self.generations[1:], start=1):
+            if not (np.array_equal(np.asarray(gen.centroids),
+                                   np.asarray(c0.centroids)) and
+                    np.array_equal(np.asarray(gen.pq_codebooks),
+                                   np.asarray(c0.pq_codebooks))):
+                raise ValueError(
+                    f"generation {g} was quantized against different "
+                    "centroid/PQ codebooks than generation 0 — its scores "
+                    "are not comparable and a merged top-k would be "
+                    "silently wrong. Build generations from one base index "
+                    "with store.new_generation (a re-trained codebook "
+                    "starts a NEW timeline epoch)")
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        """Global doc-id offset of each generation (cumulative n_docs)."""
+        offs, acc = [], 0
+        for m in self.metas:
+            offs.append(acc)
+            acc += m.n_docs
+        return tuple(offs)
+
+    @property
+    def n_docs(self) -> int:
+        """Total docs across all generations."""
+        return sum(m.n_docs for m in self.metas)
+
+    def __len__(self) -> int:
+        """Number of generations."""
+        return len(self.generations)
+
+    def __iter__(self) -> Iterator[tuple[PackedIndex, IndexMeta, int]]:
+        """Yield (index, meta, global-id offset) per generation, in order."""
+        return iter(zip(self.generations, self.metas, self.offsets))
+
+    def append(self, index: PackedIndex, meta: IndexMeta) -> "ShardedTimeline":
+        """A new timeline with ``index`` appended as the latest generation."""
+        return ShardedTimeline(self.generations + (index,),
+                               self.metas + (meta,))
+
+    @classmethod
+    def of(cls, *pairs: tuple[PackedIndex, IndexMeta]) -> "ShardedTimeline":
+        """Build a timeline from (index, meta) pairs in arrival order."""
+        return cls(tuple(i for i, _ in pairs), tuple(m for _, m in pairs))
+
+
+def save_timeline(path: str, timeline: ShardedTimeline) -> str:
+    """Persist a timeline: one :func:`save_index` directory per generation
+    (``gen-0000``, ``gen-0001``, ...) plus a ``timeline.json`` listing them
+    in order. Returns ``path``."""
+    os.makedirs(path, exist_ok=True)
+    names = []
+    for g, (index, meta, _) in enumerate(timeline):
+        name = f"gen-{g:04d}"
+        save_index(os.path.join(path, name), index, meta)
+        names.append(name)
+    with open(os.path.join(path, "timeline.json"), "w") as f:
+        json.dump({"format": _TIMELINE_FORMAT,
+                   "schema_version": SCHEMA_VERSION,
+                   "generations": names}, f, indent=1)
+    return path
+
+
+def load_timeline(path: str) -> ShardedTimeline:
+    """Load a timeline written by :func:`save_timeline` (bit-exact, like
+    :func:`load_index`); raises actionable ``ValueError`` on corruption."""
+    tpath = os.path.join(path, "timeline.json")
+    if not os.path.isfile(tpath):
+        raise ValueError(f"load_timeline({path!r}): no timeline.json — not "
+                         "a saved timeline")
+    try:
+        with open(tpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ValueError(
+            f"load_timeline({path!r}): corrupt timeline.json: {e}") from e
+    if manifest.get("format") != _TIMELINE_FORMAT:
+        raise ValueError(
+            f"load_timeline({path!r}): format={manifest.get('format')!r}, "
+            f"expected {_TIMELINE_FORMAT!r}")
+    version = manifest.get("schema_version")
+    if not isinstance(version, int) or version > SCHEMA_VERSION:
+        raise ValueError(
+            f"load_timeline({path!r}): schema_version={version!r} is not "
+            f"readable by this build (<= {SCHEMA_VERSION})")
+    names = manifest.get("generations")
+    if not isinstance(names, list) or not names:
+        raise ValueError(f"load_timeline({path!r}): empty or missing "
+                         "'generations' list")
+    pairs = [load_index(os.path.join(path, n)) for n in names]
+    return ShardedTimeline.of(*pairs)

@@ -121,6 +121,52 @@ def _index_struct():
     return PackedIndex(*([0] * len(PackedIndex._fields)))
 
 
+# ---------------------------------------------------------------------------
+# Multi-generation serving (PLAID SHIRTTT): one shard_map plan per immutable
+# index generation, merged by score at the top.
+# ---------------------------------------------------------------------------
+
+def make_timeline_retriever(mesh: Mesh, cfg: EngineConfig, timeline):
+    """Sharded serving over a ``repro.core.store.ShardedTimeline``.
+
+    Reuses the existing shard_map plan PER GENERATION: each generation is
+    doc-sharded across the whole mesh (``shard_index``), queried through
+    ``make_shardmap_retriever`` (so the per-shard four-phase pipeline, the
+    kernel choices, and the two-level top-k all apply unchanged), and the
+    per-generation global top-k are merged by score with the generation's
+    doc-id offset applied — a third top-k level on top of the per-shard
+    merge. Selection budgets are clamped to each generation's PER-SHARD doc
+    count via ``engine.adapt_config_to_corpus``.
+
+    Every generation's ``n_docs`` must divide the mesh size (the
+    ``shard_index`` block-partition contract). Returns
+    ``run(queries, q_masks=None) -> RetrievalResult`` over global doc ids.
+    """
+    from repro.core.engine import adapt_config_to_corpus, merge_generation_topk
+
+    n_shards = 1
+    for a in mesh.axis_names:
+        n_shards *= mesh.shape[a]
+    # one retriever per DISTINCT clamped config: equal-size generations (the
+    # steady-state stream) share a single traced/compiled shard_map program
+    # instead of compiling G identical ones
+    retrievers: dict = {}
+    plans = []
+    for gen, meta, _ in timeline:
+        gcfg = adapt_config_to_corpus(cfg, meta.n_docs // n_shards)
+        if gcfg not in retrievers:
+            retrievers[gcfg] = make_shardmap_retriever(mesh, gcfg)
+        plans.append((shard_index(gen, n_shards), retrievers[gcfg]))
+    offsets = timeline.offsets
+
+    def run(queries: jax.Array, q_masks=None) -> RetrievalResult:
+        parts = [retriever(stacked, queries, q_masks)
+                 for stacked, retriever in plans]
+        return merge_generation_topk(parts, offsets, cfg.k)
+
+    return run
+
+
 def shard_index(index: PackedIndex, n_shards: int) -> PackedIndex:
     """Split a global index into per-shard local indices, stacked on a new
     leading axis. Docs are block-partitioned; each shard's IVF is rebuilt

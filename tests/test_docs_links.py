@@ -1,0 +1,15 @@
+"""Docs stay navigable: every file referenced from README.md / docs/*.md
+exists (the same check the CI docs job runs via scripts/check_doc_links.py)."""
+import pathlib
+import sys
+
+
+def test_doc_references_resolve(capsys):
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "scripts"))
+    try:
+        import check_doc_links
+    finally:
+        sys.path.pop(0)
+    rc = check_doc_links.main()
+    out = capsys.readouterr().out
+    assert rc == 0, out

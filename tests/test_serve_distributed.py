@@ -1,11 +1,13 @@
 """Distributed serving: the shard_map plan equals the single-device engine,
-and shard_index's local IVFs are consistent with the global one."""
+shard_index's local IVFs are consistent with the global one, and the
+multi-generation timeline plan equals the single-device merge path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import EngineConfig, engine
-from repro.launch.serve import make_shardmap_retriever, shard_index
+from repro.launch.serve import (make_shardmap_retriever,
+                                make_timeline_retriever, shard_index)
 
 CFG = EngineConfig(nprobe=8, th=0.3, th_r=0.4, n_filter=64, n_docs=16, k=10)
 
@@ -68,6 +70,28 @@ def test_shard_index_partitions_consistently(small_index):
         assert local_docs <= global_docs
         if sum(l_lens[s, c] for s in range(n_shards)) == len(global_docs):
             assert local_docs == global_docs
+
+
+def test_timeline_retriever_matches_single_device(small_corpus, small_index):
+    """The sharded multi-generation plan (shard_map per generation + merge
+    by score with doc-id offsets) returns the same ids as the single-device
+    ``engine.retrieve_timeline`` over the same ShardedTimeline."""
+    from repro.core import ShardedTimeline, new_generation, retrieve_timeline
+
+    idx, meta = small_index
+    gen1 = new_generation(idx, meta, np.asarray(small_corpus.doc_embs[:300]),
+                          np.asarray(small_corpus.doc_lens[:300]))
+    tl = ShardedTimeline.of((idx, meta), gen1)
+    q = jnp.asarray(small_corpus.queries[:8])
+    ref = retrieve_timeline(tl, q, CFG)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    run = make_timeline_retriever(mesh, CFG, tl)
+    with mesh:
+        out = run(q)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids))
+    np.testing.assert_allclose(np.asarray(ref.scores),
+                               np.asarray(out.scores), rtol=1e-5)
 
 
 def test_per_shard_topk_merge_recovers_global(small_corpus, small_index):

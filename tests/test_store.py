@@ -1,0 +1,409 @@
+"""Index lifecycle contract (repro.core.store):
+
+* save -> load -> retrieve is BIT-exact (ids AND score bits) to retrieval on
+  the original index, across both candidate modes, both megakernels, and a
+  masked/pruned query;
+* corrupt / missing-field / future-schema-version files raise actionable
+  ValueErrors;
+* add_passages grows an index against frozen codebooks (IVF extended, drift
+  stats surfaced) and a ShardedTimeline of grown generations matches one
+  monolithic index built over the union corpus — exactly, under
+  cut-lossless budgets (ties resolve toward the lower global doc id at
+  every cut in both paths; under tight budgets phase 2/3 keep the top-n of
+  the *visible pool*, so the timeline legitimately diverges in its favor —
+  same relative-selection caveat as the shard_map plan).
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, ShardedTimeline, add_passages,
+                        build_index, engine, load_index, load_timeline,
+                        new_generation, prune_queries, retrieve_timeline,
+                        save_index, save_timeline)
+from repro.core.store import SCHEMA_VERSION
+from repro.data.synthetic import make_corpus
+
+# Same constants as tests/test_system.py so the jit cache is shared.
+CFG = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48, k=10)
+
+RETRIEVAL_CFGS = {
+    "ref-score_all": CFG,
+    "ref-compact": dataclasses.replace(CFG, candidate_mode="compact",
+                                       cand_cap=600),
+    # each megakernel alone, then both (the default fused engine)
+    "prefilter-megakernel": dataclasses.replace(
+        CFG, use_kernels=True, fused_late_interaction=False),
+    "pqinter-megakernel": dataclasses.replace(
+        CFG, use_kernels=True, fused_prefilter=False),
+    "fused-score_all": dataclasses.replace(CFG, use_kernels=True),
+    "fused-compact": dataclasses.replace(CFG, use_kernels=True,
+                                         candidate_mode="compact",
+                                         cand_cap=600),
+}
+
+
+# ---------------------------------------------------------------------------
+# Persistence: bit-exact round trip
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def saved(small_index, tmp_path_factory):
+    idx, meta = small_index
+    path = str(tmp_path_factory.mktemp("store") / "idx")
+    save_index(path, idx, meta)
+    return path
+
+
+def test_round_trip_arrays_and_meta(small_index, saved):
+    idx, meta = small_index
+    loaded, lmeta = load_index(saved)
+    assert lmeta == meta
+    for f in idx._fields:
+        a, b = np.asarray(getattr(idx, f)), np.asarray(getattr(loaded, f))
+        assert a.dtype == b.dtype, f
+        np.testing.assert_array_equal(a, b, err_msg=f)
+
+
+@pytest.mark.parametrize("name", sorted(RETRIEVAL_CFGS))
+def test_round_trip_retrieval_bit_exact(small_corpus, small_index, saved,
+                                        name):
+    """retrieve(load_index(save_index(p, idx)), q) == retrieve(idx, q),
+    ids AND score bits, for both candidate modes and both megakernels."""
+    idx, _ = small_index
+    loaded, _ = load_index(saved)
+    q = jnp.asarray(small_corpus.queries[:8])
+    cfg = RETRIEVAL_CFGS[name]
+    a = engine.retrieve(idx, q, cfg)
+    b = engine.retrieve(loaded, q, cfg)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_round_trip_retrieval_masked_pruned(small_corpus, small_index, saved):
+    """The masking/pruning contract survives persistence: a pruned query +
+    mask retrieves bit-identically on the loaded index."""
+    idx, _ = small_index
+    loaded, _ = load_index(saved)
+    qp, qm = prune_queries(jnp.asarray(small_corpus.queries[:8]), keep=16)
+    cfg = RETRIEVAL_CFGS["fused-score_all"]
+    a = engine.retrieve(idx, qp, cfg, qm)
+    b = engine.retrieve(loaded, qp, cfg, qm)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+# ---------------------------------------------------------------------------
+# Persistence: every corruption raises an actionable ValueError
+# ---------------------------------------------------------------------------
+
+def _resave(src, dst, mutate_manifest=None, drop_array=None):
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(src, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    if mutate_manifest:
+        mutate_manifest(manifest)
+    if drop_array:
+        del arrays[drop_array]
+    os.makedirs(dst, exist_ok=True)
+    np.savez(os.path.join(dst, "arrays.npz"), **arrays)
+    with open(os.path.join(dst, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def test_load_missing_dir(tmp_path):
+    with pytest.raises(ValueError, match="no manifest.json"):
+        load_index(str(tmp_path / "nope"))
+
+
+def test_load_corrupt_manifest(tmp_path, saved):
+    dst = tmp_path / "bad"
+    _resave(saved, str(dst))
+    (dst / "manifest.json").write_text("{not json")
+    with pytest.raises(ValueError, match="corrupt manifest.json"):
+        load_index(str(dst))
+
+
+def test_load_wrong_format(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst, mutate_manifest=lambda m: m.update(format="tarball"))
+    with pytest.raises(ValueError, match="format='tarball'"):
+        load_index(dst)
+
+
+def test_load_future_schema_version(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst,
+            mutate_manifest=lambda m: m.update(
+                schema_version=SCHEMA_VERSION + 1))
+    with pytest.raises(ValueError, match="newer than this build"):
+        load_index(dst)
+
+
+def test_load_missing_meta_field(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst,
+            mutate_manifest=lambda m: m["meta"].pop("n_centroids"))
+    with pytest.raises(ValueError, match=r"missing field.*n_centroids"):
+        load_index(dst)
+
+
+def test_load_unknown_meta_field(tmp_path, saved):
+    """Additive meta fields require a schema version bump — an unknown key
+    at the current version means a mismatched writer, not silent luck."""
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst,
+            mutate_manifest=lambda m: m["meta"].update(frobnication=3))
+    with pytest.raises(ValueError, match="unknown field.*frobnication"):
+        load_index(dst)
+
+
+def test_load_missing_array(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst, drop_array="codes")
+    with pytest.raises(ValueError, match="missing array 'codes'"):
+        load_index(dst)
+
+
+def test_load_dtype_mismatch(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst,
+            mutate_manifest=lambda m: m["arrays"]["codes"].update(
+                dtype="float64"))
+    with pytest.raises(ValueError, match="manifest declares float64"):
+        load_index(dst)
+
+
+def test_load_meta_array_disagreement(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst,
+            mutate_manifest=lambda m: m["meta"].update(n_docs=7))
+    with pytest.raises(ValueError, match="disagrees with the arrays"):
+        load_index(dst)
+
+
+def test_load_missing_npz(tmp_path, saved):
+    dst = tmp_path / "bad"
+    _resave(saved, str(dst))
+    (dst / "arrays.npz").unlink()
+    with pytest.raises(ValueError, match="no arrays.npz"):
+        load_index(str(dst))
+
+
+def test_load_corrupt_npz(tmp_path, saved):
+    dst = tmp_path / "bad"
+    _resave(saved, str(dst))
+    (dst / "arrays.npz").write_bytes(b"\x00" * 64)
+    with pytest.raises(ValueError, match="corrupt arrays.npz"):
+        load_index(str(dst))
+
+
+# ---------------------------------------------------------------------------
+# Incremental growth + the timeline equivalence contract
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stream_corpus():
+    # 3 slices of 200 docs; queries plant ground truth across all slices
+    return make_corpus(0, n_docs=600, cap=24, min_len=8, n_queries=24,
+                       n_topics=24)
+
+
+@pytest.fixture(scope="module")
+def gen0(stream_corpus):
+    c = stream_corpus
+    return build_index(jax.random.PRNGKey(0), c.doc_embs[:200],
+                       c.doc_lens[:200], n_centroids=128, m=8, nbits=4,
+                       kmeans_iters=3)
+
+
+@pytest.fixture(scope="module")
+def mono_grown(stream_corpus, gen0):
+    """One monolithic index grown over the union corpus via add_passages."""
+    c = stream_corpus
+    idx, meta = gen0
+    idx, meta = add_passages(idx, meta, c.doc_embs[200:400],
+                             c.doc_lens[200:400])
+    return add_passages(idx, meta, c.doc_embs[400:600], c.doc_lens[400:600])
+
+
+@pytest.fixture(scope="module")
+def timeline(stream_corpus, gen0):
+    """The same union corpus as 3 immutable generations."""
+    c = stream_corpus
+    idx0, m0 = gen0
+    tl = ShardedTimeline.of((idx0, m0))
+    for lo in (200, 400):
+        tl = tl.append(*new_generation(idx0, m0, c.doc_embs[lo:lo + 200],
+                                       c.doc_lens[lo:lo + 200]))
+    return tl
+
+
+def test_add_passages_appends_consistently(stream_corpus, gen0, mono_grown):
+    c = stream_corpus
+    _, m0 = gen0
+    idx, meta = mono_grown
+    assert meta.n_docs == 600 and meta.n_grown == 400
+    assert int(idx.codes.shape[0]) == 600
+    # original docs untouched, appended docs' lengths preserved
+    np.testing.assert_array_equal(np.asarray(idx.doc_lens),
+                                  np.asarray(c.doc_lens[:600]))
+    # every appended doc is reachable through each of its token centroids
+    ivf = np.asarray(idx.ivf)
+    lens = np.asarray(idx.ivf_lens)
+    codes = np.asarray(idx.codes)
+    for doc in (217, 599):
+        for cid in np.unique(codes[doc][codes[doc] < meta.n_centroids]):
+            assert doc in ivf[cid, :lens[cid]], (doc, cid)
+    # drift stats: appended in-domain docs quantize a bit worse than the
+    # training corpus, but in the same ballpark
+    assert meta.train_quant_mse > 0
+    assert meta.grown_quant_mse > 0
+    assert 0.8 < meta.drift < 1.6, meta
+
+
+def test_add_passages_validates_geometry(gen0):
+    idx, meta = gen0
+    bad = np.zeros((4, meta.cap + 3, meta.d), np.float32)
+    with pytest.raises(ValueError, match="padded to"):
+        add_passages(idx, meta, bad, np.full(4, 5, np.int32))
+    with pytest.raises(ValueError, match="n_new=0"):
+        add_passages(idx, meta, np.zeros((0, meta.cap, meta.d), np.float32),
+                     np.zeros(0, np.int32))
+    # degenerate but legal: an all-padding batch (zero real tokens) must not
+    # blow up the drift accounting
+    empty, emeta = add_passages(
+        idx, meta, np.zeros((2, meta.cap, meta.d), np.float32),
+        np.zeros(2, np.int32))
+    assert emeta.n_docs == meta.n_docs + 2 and emeta.n_grown == 2
+    assert np.isfinite(emeta.grown_quant_mse)
+
+
+def test_add_passages_finds_new_docs(stream_corpus, mono_grown):
+    """Queries whose planted doc lives in the APPENDED range retrieve it."""
+    c = stream_corpus
+    idx, _ = mono_grown
+    grown_q = np.nonzero(c.gt_doc >= 200)[0][:8]
+    assert grown_q.size >= 4
+    res = engine.retrieve(idx, jnp.asarray(c.queries[grown_q]), CFG)
+    ids = np.asarray(res.doc_ids)
+    hits = [g in ids[i] for i, g in enumerate(c.gt_doc[grown_q])]
+    assert np.mean(hits) >= 0.75, (hits, ids, c.gt_doc[grown_q])
+
+
+def test_drift_ratio_flags_distribution_shift():
+    """Out-of-distribution passages must quantize measurably worse against
+    the frozen codebooks than in-domain passages — that gap is the re-train
+    signal ``IndexMeta.drift`` exists to surface. Uses a low-token-noise
+    corpus so the centroids genuinely fit the training distribution (on the
+    noisy fixture corpus, quantization error is noise-dominated and drift
+    ratios compress toward 1)."""
+    c = make_corpus(5, n_docs=256, cap=16, min_len=8, n_queries=4,
+                    n_topics=16, token_noise=0.05)
+    idx0, m0 = build_index(jax.random.PRNGKey(0), c.doc_embs[:128],
+                           c.doc_lens[:128], n_centroids=32, m=8, nbits=4,
+                           kmeans_iters=3)
+    _, in_meta = new_generation(idx0, m0, c.doc_embs[128:],
+                                c.doc_lens[128:])
+    # uniform random directions: no topic structure the centroids could fit
+    rng = np.random.default_rng(99)
+    ood_embs = rng.normal(size=(64, m0.cap, m0.d)).astype(np.float32)
+    ood_embs /= np.linalg.norm(ood_embs, axis=-1, keepdims=True)
+    _, ood_meta = new_generation(idx0, m0, ood_embs,
+                                 np.full(64, m0.cap, np.int32))
+    assert in_meta.drift < 1.5 < ood_meta.drift, (in_meta.drift,
+                                                  ood_meta.drift)
+
+
+@pytest.mark.parametrize("kernels", [False, True],
+                         ids=["jnp-ref", "fused-megakernels"])
+def test_timeline_matches_monolithic_exactly(stream_corpus, mono_grown,
+                                             timeline, kernels):
+    """The acceptance contract: a ShardedTimeline of G grown generations
+    returns the SAME top-k ids (and score bits) as one monolithic index
+    built over the union corpus, under cut-lossless budgets (every
+    candidate late-interacted; see module docstring for the tie story and
+    why tight budgets legitimately diverge in the timeline's favor)."""
+    c = stream_corpus
+    mono, _ = mono_grown
+    cfg = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=600, n_docs=600,
+                       k=10, use_kernels=kernels)
+    q = jnp.asarray(c.queries[:8] if kernels else c.queries)
+    a = retrieve_timeline(timeline, q, cfg)
+    b = engine.retrieve(mono, q, cfg)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_timeline_masked_query_contract(stream_corpus, timeline):
+    """Query masking threads through the merge path: a zero-padded query
+    with its mask == the unpadded prefix, bit for bit, across generations."""
+    c = stream_corpus
+    keep = 20
+    q = np.asarray(c.queries[:8]).copy()
+    q[:, keep:] = 0.0
+    qm = jnp.broadcast_to(jnp.arange(q.shape[1]) < keep, q.shape[:2])
+    a = retrieve_timeline(timeline, jnp.asarray(q), CFG, qm)
+    b = retrieve_timeline(timeline, jnp.asarray(q[:, :keep]), CFG)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_timeline_small_final_generation(stream_corpus, gen0):
+    """A freshly opened generation smaller than n_filter/cand_cap serves
+    fine (budgets clamp per generation); one smaller than k raises."""
+    c = stream_corpus
+    idx0, m0 = gen0
+    tiny = new_generation(idx0, m0, c.doc_embs[560:600], c.doc_lens[560:600])
+    tl = ShardedTimeline.of((idx0, m0), tiny)
+    res = retrieve_timeline(tl, jnp.asarray(c.queries[:8]), CFG)
+    ids = np.asarray(res.doc_ids)
+    assert ids.min() >= 0 and ids.max() < 240
+    with pytest.raises(ValueError, match="must hold >= k docs"):
+        engine.adapt_config_to_corpus(CFG, CFG.k - 1)
+
+
+def test_timeline_rejects_mismatched_generations(stream_corpus, gen0):
+    idx0, m0 = gen0
+    bad_meta = dataclasses.replace(m0, n_centroids=m0.n_centroids * 2)
+    with pytest.raises(ValueError, match="share the frozen codebooks"):
+        ShardedTimeline.of((idx0, m0), (idx0, bad_meta))
+    # same geometry, DIFFERENT codebooks (an independent build_index run):
+    # scores are incomparable, so the merge must refuse
+    c = stream_corpus
+    other, om = build_index(jax.random.PRNGKey(7), c.doc_embs[200:400],
+                            c.doc_lens[200:400], n_centroids=128, m=8,
+                            nbits=4, kmeans_iters=3)
+    with pytest.raises(ValueError, match="not comparable"):
+        ShardedTimeline.of((idx0, m0), (other, om))
+
+
+def test_timeline_save_load_round_trip(stream_corpus, timeline, tmp_path):
+    path = str(tmp_path / "tl")
+    save_timeline(path, timeline)
+    loaded = load_timeline(path)
+    assert len(loaded) == len(timeline)
+    assert loaded.offsets == timeline.offsets
+    q = jnp.asarray(stream_corpus.queries[:8])
+    a = retrieve_timeline(timeline, q, CFG)
+    b = retrieve_timeline(loaded, q, CFG)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_load_timeline_errors(tmp_path):
+    with pytest.raises(ValueError, match="no timeline.json"):
+        load_timeline(str(tmp_path / "nope"))
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "timeline.json").write_text(json.dumps(
+        {"format": "emvb-sharded-timeline",
+         "schema_version": SCHEMA_VERSION + 1, "generations": ["g"]}))
+    with pytest.raises(ValueError, match="schema_version"):
+        load_timeline(str(bad))
