@@ -6,7 +6,8 @@ CPU; the EMVB/PLAID *ratios* are the reproduction target).
 
 ``--smoke`` runs the fast default subset (fig1: the phase breakdown plus the
 fused-vs-unfused megakernel rows; fig6: the query-pruning latency/MRR sweep;
-fig7: latency + MRR@10 as the corpus grows 1 -> N streaming generations)
+fig7: latency + MRR@10 as the corpus grows 1 -> N streaming generations;
+fig8: serving-cache throughput/hit-rate, cold vs warm vs uncached)
 and writes the rows to ``BENCH_smoke.json`` so CI can upload the perf
 trajectory as a per-push artifact; ``--json PATH`` does the same for any
 suite selection. BENCH_*.json is gitignored by design — machine-dependent
@@ -20,8 +21,8 @@ import sys
 import time
 
 from . import (fig1_breakdown, fig2_threshold, fig4_membership,
-               fig5_termfilter, fig6_pruning, fig7_streaming, roofline,
-               table1_msmarco, table2_ood)
+               fig5_termfilter, fig6_pruning, fig7_streaming, fig8_serving,
+               roofline, table1_msmarco, table2_ood)
 
 SUITES = {
     "table1": table1_msmarco,
@@ -32,9 +33,10 @@ SUITES = {
     "fig5": fig5_termfilter,
     "fig6": fig6_pruning,
     "fig7": fig7_streaming,
+    "fig8": fig8_serving,
     "roofline": roofline,
 }
-SMOKE_SUITES = ["fig1", "fig6", "fig7"]
+SMOKE_SUITES = ["fig1", "fig6", "fig7", "fig8"]
 
 
 def main() -> None:

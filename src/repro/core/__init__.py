@@ -3,5 +3,7 @@ from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual
 from .engine import EngineConfig, prune_queries, retrieve, retrieve_timeline  # noqa: F401
 from .index import PackedIndex, IndexMeta, build_index, bytes_per_embedding  # noqa: F401
 from .plaid import PlaidConfig  # noqa: F401
-from .store import (ShardedTimeline, add_passages, load_index, load_timeline,  # noqa: F401
-                    new_generation, save_index, save_timeline)
+from .store import (ShardedTimeline, add_passages, generation_footprint,  # noqa: F401
+                    index_fingerprint, load_index, load_timeline,
+                    new_generation, save_index, save_timeline,
+                    timeline_footprint)

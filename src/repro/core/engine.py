@@ -477,23 +477,57 @@ def adapt_config_to_corpus(cfg: EngineConfig, n_docs: int) -> EngineConfig:
         cand_cap=max(min(cfg.cand_cap, n_docs), nf))
 
 
-def merge_generation_topk(parts: list[RetrievalResult], offsets,
-                          k: int) -> RetrievalResult:
-    """Merge per-generation top-k results into one global top-k.
+def merge_partial_topk(parts: list[RetrievalResult],
+                       k: int) -> RetrievalResult:
+    """Merge per-generation partial top-k results (GLOBAL doc ids) into one
+    final top-k.
 
-    Applies each generation's global doc-id ``offset``, concatenates in
-    generation (= id) order, and re-selects the top ``k`` by score. The
-    SINGLE definition of the merge, shared by ``retrieve_timeline`` and the
-    sharded plan in ``launch/serve.py``, so the documented tie contract
-    (``lax.top_k`` prefers the earlier concatenation position = the lower
-    global doc id) cannot diverge between the two paths.
+    Concatenates the partials in generation (= global id) order and
+    re-selects the top ``k`` by score. The SINGLE definition of the merge,
+    shared by ``retrieve_timeline``, the sharded plan in ``launch/serve.py``
+    and the serving cache (``repro.serving``) — so the documented tie
+    contract (``lax.top_k`` prefers the earlier concatenation position =
+    the lower global doc id) cannot diverge between the paths, and a merge
+    of CACHED partials is bit-identical to a merge of freshly computed ones.
     """
     scores = jnp.concatenate([r.scores for r in parts], axis=1)   # (B, G*k)
-    ids = jnp.concatenate(
-        [r.doc_ids + off for r, off in zip(parts, offsets)], axis=1)
+    ids = jnp.concatenate([r.doc_ids for r in parts], axis=1)
     top_scores, pos = jax.lax.top_k(scores, k)
     return RetrievalResult(top_scores,
                            jnp.take_along_axis(ids, pos, axis=1))
+
+
+def merge_generation_topk(parts: list[RetrievalResult], offsets,
+                          k: int) -> RetrievalResult:
+    """Merge per-generation top-k results carrying LOCAL doc ids.
+
+    Applies each generation's global doc-id ``offset`` then defers to
+    :func:`merge_partial_topk` (the single merge definition).
+    """
+    return merge_partial_topk(
+        [RetrievalResult(r.scores, r.doc_ids + off)
+         for r, off in zip(parts, offsets)], k)
+
+
+def retrieve_generation_topk(index: PackedIndex, meta, offset: int,
+                             queries: jax.Array, cfg: EngineConfig,
+                             q_masks: Optional[jax.Array] = None
+                             ) -> RetrievalResult:
+    """One generation's partial top-k, doc ids mapped into the GLOBAL space.
+
+    The reusable intermediate of the timeline merge path: runs the full
+    four-phase pipeline (``retrieve``, budgets clamped to the generation via
+    :func:`adapt_config_to_corpus`) over ONE immutable generation and
+    offsets its local doc ids by the generation's position in the timeline.
+    ``retrieve_timeline`` is ``merge_partial_topk`` over these partials —
+    and because a generation is immutable, a partial depends only on
+    (query bytes, generation contents, config), which is exactly what makes
+    it cacheable (``repro.serving.cache``): a cached partial merges
+    bit-identically with freshly computed ones.
+    """
+    part = retrieve(index, queries, adapt_config_to_corpus(cfg, meta.n_docs),
+                    q_masks)
+    return RetrievalResult(part.scores, part.doc_ids + jnp.int32(offset))
 
 
 def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
@@ -524,12 +558,15 @@ def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
     ties toward the lower GLOBAL doc id.
 
     Budgets are clamped per generation via :func:`adapt_config_to_corpus`;
-    generations of equal shape share one jit cache entry.
+    generations of equal shape share one jit cache entry. The per-generation
+    partials are exposed as :func:`retrieve_generation_topk` so the serving
+    layer (``repro.serving``) can cache them per immutable generation and
+    merge cached + fresh partials through the same
+    :func:`merge_partial_topk`.
     """
-    parts = [retrieve(gen, queries, adapt_config_to_corpus(cfg, meta.n_docs),
-                      q_masks)
-             for gen, meta, _ in timeline]
-    return merge_generation_topk(parts, timeline.offsets, cfg.k)
+    parts = [retrieve_generation_topk(gen, meta, off, queries, cfg, q_masks)
+             for gen, meta, off in timeline]
+    return merge_partial_topk(parts, cfg.k)
 
 
 # ---------------------------------------------------------------------------

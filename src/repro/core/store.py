@@ -27,6 +27,8 @@ Three concerns, one subsystem (docs/INDEX_FORMAT.md has the on-disk schema):
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 import json
 import os
 import zipfile
@@ -35,17 +37,46 @@ from typing import Iterator
 import jax.numpy as jnp
 import numpy as np
 
-from .index import IndexMeta, PackedIndex, _build_ivf, quantize_tokens
+from .index import IndexMeta, PackedIndex, _build_ivf, bytes_per_embedding, \
+    quantize_tokens
 from .pq import encode_pq
 from .residual import encode_residual
 
 # Bump on ANY incompatible change to the manifest or array set; readers
 # refuse files from the future. See docs/INDEX_FORMAT.md for the policy.
-SCHEMA_VERSION = 1
+# v2: manifest gains the content ``fingerprint`` (the serving cache's
+# generation id); v1 files load fine, they just carry no fingerprint.
+SCHEMA_VERSION = 2
 _FORMAT = "emvb-packed-index"
 _TIMELINE_FORMAT = "emvb-sharded-timeline"
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+
+# ---------------------------------------------------------------------------
+# Content fingerprints — the serving cache's generation ids
+# ---------------------------------------------------------------------------
+
+def index_fingerprint(index: PackedIndex) -> str:
+    """Content fingerprint of an index: sha256 over every array's name,
+    dtype, shape and bytes (hex digest).
+
+    Equal fingerprints mean equal array contents, and every retrieval input
+    is a ``PackedIndex`` field — so equal fingerprints mean bit-identical
+    retrieval. That makes the fingerprint the serving layer's generation id: a per-generation cached result
+    keyed by it can never be served against different contents —
+    ``add_passages`` necessarily changes ``codes``/``doc_lens`` and with
+    them the fingerprint. Persisted in the ``save_index`` manifest and
+    verified on load (docs/INDEX_FORMAT.md).
+    """
+    h = hashlib.sha256()
+    for f in PackedIndex._fields:
+        a = np.ascontiguousarray(np.asarray(getattr(index, f)))
+        h.update(f.encode())
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -55,15 +86,17 @@ _ARRAYS = "arrays.npz"
 def save_index(path: str, index: PackedIndex, meta: IndexMeta) -> str:
     """Write an index to ``path`` (a directory; created if missing).
 
-    Layout: ``manifest.json`` (format name, ``schema_version``, the full
-    ``IndexMeta``, and a per-array dtype/shape manifest) + ``arrays.npz``
-    (every ``PackedIndex`` field, uncompressed, bit-exact). Returns ``path``.
+    Layout: ``manifest.json`` (format name, ``schema_version``, the content
+    ``fingerprint``, the full ``IndexMeta``, and a per-array dtype/shape
+    manifest) + ``arrays.npz`` (every ``PackedIndex`` field, uncompressed,
+    bit-exact). Returns ``path``.
     """
     os.makedirs(path, exist_ok=True)
     arrays = {f: np.asarray(getattr(index, f)) for f in PackedIndex._fields}
     manifest = {
         "format": _FORMAT,
         "schema_version": SCHEMA_VERSION,
+        "fingerprint": index_fingerprint(index),
         "meta": dataclasses.asdict(meta),
         "arrays": {f: {"dtype": str(a.dtype), "shape": list(a.shape)}
                    for f, a in arrays.items()},
@@ -92,8 +125,10 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
 
     Every failure mode raises an actionable ``ValueError``: missing/corrupt
     files, wrong format, a future ``schema_version`` (this build refuses to
-    guess at formats from the future), missing or unknown meta fields, and
-    any array whose dtype/shape disagrees with the manifest.
+    guess at formats from the future), missing or unknown meta fields, any
+    array whose dtype/shape disagrees with the manifest, and (schema v2+)
+    a manifest ``fingerprint`` that disagrees with the recomputed content
+    fingerprint — silently corrupted array BYTES, not just wrong shapes.
     """
     mpath = os.path.join(path, _MANIFEST)
     if not os.path.isfile(mpath):
@@ -166,6 +201,21 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
                           f"n_centroids={meta.n_centroids}) disagrees with "
                           f"the arrays (codes {n_docs}x{cap}, centroids "
                           f"{index.centroids.shape[0]}) — corrupt save")
+
+    # content fingerprint (schema v2+): the dtype/shape checks above cannot
+    # see flipped BYTES; the fingerprint can. v1 files predate it.
+    if version >= 2:
+        declared = manifest.get("fingerprint")
+        if not isinstance(declared, str):
+            raise _fail(path, "manifest has no 'fingerprint' at "
+                              f"schema_version={version} (required since "
+                              "v2) — corrupt or hand-edited manifest")
+        actual = index_fingerprint(index)
+        if declared != actual:
+            raise _fail(path, f"manifest fingerprint {declared[:12]}… "
+                              f"disagrees with the array contents "
+                              f"({actual[:12]}…) — the arrays were modified "
+                              "after the save, or the save is corrupt")
     return index, meta
 
 
@@ -400,6 +450,19 @@ class ShardedTimeline:
             acc += m.n_docs
         return tuple(offs)
 
+    @functools.cached_property
+    def fingerprints(self) -> tuple[str, ...]:
+        """Content fingerprint (:func:`index_fingerprint`) per generation.
+
+        The serving layer's cache keys. Computed once per timeline OBJECT
+        (cached_property): the timeline is immutable, so any mutation —
+        ``append``, ``with_newest`` — builds a new timeline whose changed
+        generation hashes to a new fingerprint, which is exactly the cache
+        invalidation rule (stale entries keyed by the old fingerprint are
+        simply never hit again).
+        """
+        return tuple(index_fingerprint(g) for g in self.generations)
+
     @property
     def n_docs(self) -> int:
         """Total docs across all generations."""
@@ -418,6 +481,20 @@ class ShardedTimeline:
         return ShardedTimeline(self.generations + (index,),
                                self.metas + (meta,))
 
+    def with_newest(self, index: PackedIndex,
+                    meta: IndexMeta) -> "ShardedTimeline":
+        """A new timeline with the NEWEST generation replaced by ``index``.
+
+        The ``add_passages``-on-the-open-generation step of a streaming
+        deployment: grow ``timeline.generations[-1]`` functionally, then
+        swap it in here. Only the last generation may be replaced — older
+        ones are immutable by contract (cached results key on their
+        fingerprints), and replacing the tail changes no other generation's
+        global id offset.
+        """
+        return ShardedTimeline(self.generations[:-1] + (index,),
+                               self.metas[:-1] + (meta,))
+
     @classmethod
     def of(cls, *pairs: tuple[PackedIndex, IndexMeta]) -> "ShardedTimeline":
         """Build a timeline from (index, meta) pairs in arrival order."""
@@ -427,7 +504,7 @@ class ShardedTimeline:
 def save_timeline(path: str, timeline: ShardedTimeline) -> str:
     """Persist a timeline: one :func:`save_index` directory per generation
     (``gen-0000``, ``gen-0001``, ...) plus a ``timeline.json`` listing them
-    in order. Returns ``path``."""
+    in order with their content fingerprints. Returns ``path``."""
     os.makedirs(path, exist_ok=True)
     names = []
     for g, (index, meta, _) in enumerate(timeline):
@@ -437,7 +514,8 @@ def save_timeline(path: str, timeline: ShardedTimeline) -> str:
     with open(os.path.join(path, "timeline.json"), "w") as f:
         json.dump({"format": _TIMELINE_FORMAT,
                    "schema_version": SCHEMA_VERSION,
-                   "generations": names}, f, indent=1)
+                   "generations": names,
+                   "fingerprints": list(timeline.fingerprints)}, f, indent=1)
     return path
 
 
@@ -468,4 +546,124 @@ def load_timeline(path: str) -> ShardedTimeline:
         raise ValueError(f"load_timeline({path!r}): empty or missing "
                          "'generations' list")
     pairs = [load_index(os.path.join(path, n)) for n in names]
-    return ShardedTimeline.of(*pairs)
+    timeline = ShardedTimeline.of(*pairs)
+    _check_timeline_fingerprints(path, version, manifest, names, timeline)
+    return timeline
+
+
+def _check_timeline_fingerprints(path: str, version: int, manifest: dict,
+                                 names: list, timeline: ShardedTimeline
+                                 ) -> None:
+    """Fingerprint round trip (schema v2+): ``load_index`` already verified
+    each generation's arrays against ITS manifest; this verifies the loaded
+    generations are the ones THIS timeline listed — a swapped or restored-
+    from-elsewhere gen-NNNN directory is internally consistent but wrong.
+
+    Reuses each generation's manifest fingerprint (just proven equal to
+    its array contents by ``load_index``) instead of re-hashing the
+    arrays — string compares, not a second sha256 pass over the timeline.
+    The verified values also seed ``timeline.fingerprints``' cache, so
+    serving a loaded timeline starts without any hashing at all.
+    """
+    if version < 2:
+        return
+    declared = manifest.get("fingerprints")
+    if not isinstance(declared, list) or len(declared) != len(names):
+        raise ValueError(
+            f"load_timeline({path!r}): timeline.json needs one fingerprint "
+            f"per generation at schema_version={version} "
+            f"(got {declared!r} for {len(names)} generation(s))")
+    actual = []
+    for g, name in enumerate(names):
+        with open(os.path.join(path, name, _MANIFEST)) as f:
+            got = json.load(f).get("fingerprint")
+        if got is None:     # a v1 generation directory: hash it this once
+            got = index_fingerprint(timeline.generations[g])
+        actual.append(got)
+    for name, want, got in zip(names, declared, actual):
+        if want != got:
+            raise ValueError(
+                f"load_timeline({path!r}): generation {name!r} has "
+                f"fingerprint {got[:12]}… but timeline.json declares "
+                f"{want[:12]}… — the generation directory was replaced "
+                "after the timeline was saved")
+    timeline.__dict__["fingerprints"] = tuple(actual)
+
+
+# ---------------------------------------------------------------------------
+# Footprint accounting — bytes_per_embedding extended to the timeline
+# (Efficient Constant-Space Multi-Vector Retrieval motivates bounding the
+# per-shard budget; a capacity plan for the streaming case needs the
+# per-generation footprint plus the manifest overhead, not just the paper's
+# per-embedding constant).
+# ---------------------------------------------------------------------------
+
+def generation_footprint(index: PackedIndex, meta: IndexMeta) -> dict:
+    """Byte footprint of ONE generation, as stored and as served.
+
+    Returns a dict with ``array_bytes`` (per ``PackedIndex`` field),
+    ``index_bytes`` (their sum — device footprint and, the arrays being
+    saved uncompressed, the ``arrays.npz`` payload), ``manifest_bytes``
+    (the serialized ``manifest.json`` overhead, fingerprint included),
+    ``total_bytes``, and two per-embedding views: ``bytes_per_embedding``
+    (the paper's Table-1 constant, :func:`~repro.core.index
+    .bytes_per_embedding`) and ``bytes_per_embedding_actual`` — the doc
+    payload (codes + PQ residuals + PLAID residuals) divided by REAL
+    tokens, so the gap to the constant is the padding + id-width tax the
+    fixed-shape layout pays.
+    """
+    arrays = {f: np.asarray(getattr(index, f)) for f in PackedIndex._fields}
+    array_bytes = {f: int(a.nbytes) for f, a in arrays.items()}
+    index_bytes = sum(array_bytes.values())
+    manifest = {
+        "format": _FORMAT,
+        "schema_version": SCHEMA_VERSION,
+        "fingerprint": "0" * 64,    # placeholder: size-accurate, hash-free
+        "meta": dataclasses.asdict(meta),
+        "arrays": {f: {"dtype": str(a.dtype), "shape": list(a.shape)}
+                   for f, a in arrays.items()},
+    }
+    manifest_bytes = len(json.dumps(manifest, indent=1).encode())
+    n_tokens = int(np.asarray(index.doc_lens).sum())
+    payload = (array_bytes["codes"] + array_bytes["res_codes"]
+               + array_bytes["plaid_res"])
+    return {
+        "n_docs": meta.n_docs,
+        "n_tokens": n_tokens,
+        "array_bytes": array_bytes,
+        "index_bytes": index_bytes,
+        "manifest_bytes": manifest_bytes,
+        "total_bytes": index_bytes + manifest_bytes,
+        "bytes_per_embedding": bytes_per_embedding(meta, "emvb"),
+        "bytes_per_embedding_actual": payload / max(n_tokens, 1),
+    }
+
+
+def timeline_footprint(timeline: ShardedTimeline) -> dict:
+    """Byte footprint of a whole timeline: per-generation footprints
+    (:func:`generation_footprint`) plus the ``timeline.json`` manifest
+    overhead, summed — the capacity-planning number for the streaming case
+    (ROADMAP), reported per snapshot by ``repro.serving.metrics``.
+    """
+    gens = [generation_footprint(g, m) for g, m, _ in timeline]
+    tj = {"format": _TIMELINE_FORMAT, "schema_version": SCHEMA_VERSION,
+          "generations": [f"gen-{g:04d}" for g in range(len(timeline))],
+          "fingerprints": ["0" * 64] * len(timeline)}
+    timeline_manifest_bytes = len(json.dumps(tj, indent=1).encode())
+    n_tokens = sum(g["n_tokens"] for g in gens)
+    index_bytes = sum(g["index_bytes"] for g in gens)
+    manifest_bytes = (sum(g["manifest_bytes"] for g in gens)
+                      + timeline_manifest_bytes)
+    payload = sum(g["bytes_per_embedding_actual"] * g["n_tokens"]
+                  for g in gens)
+    return {
+        "n_generations": len(timeline),
+        "n_docs": timeline.n_docs,
+        "n_tokens": n_tokens,
+        "generations": gens,
+        "index_bytes": index_bytes,
+        "manifest_bytes": manifest_bytes,
+        "total_bytes": index_bytes + manifest_bytes,
+        "bytes_per_embedding": gens[0]["bytes_per_embedding"],
+        "bytes_per_embedding_actual": payload / max(n_tokens, 1),
+    }

@@ -126,23 +126,25 @@ def _index_struct():
 # index generation, merged by score at the top.
 # ---------------------------------------------------------------------------
 
-def make_timeline_retriever(mesh: Mesh, cfg: EngineConfig, timeline):
-    """Sharded serving over a ``repro.core.store.ShardedTimeline``.
+def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline):
+    """Per-generation shard_map execution plans over a
+    ``repro.core.store.ShardedTimeline``.
 
     Reuses the existing shard_map plan PER GENERATION: each generation is
     doc-sharded across the whole mesh (``shard_index``), queried through
     ``make_shardmap_retriever`` (so the per-shard four-phase pipeline, the
-    kernel choices, and the two-level top-k all apply unchanged), and the
-    per-generation global top-k are merged by score with the generation's
-    doc-id offset applied — a third top-k level on top of the per-shard
-    merge. Selection budgets are clamped to each generation's PER-SHARD doc
-    count via ``engine.adapt_config_to_corpus``.
+    kernel choices, and the two-level top-k all apply unchanged), with the
+    generation's global doc-id offset applied to the result. Selection
+    budgets are clamped to each generation's PER-SHARD doc count via
+    ``engine.adapt_config_to_corpus``.
 
     Every generation's ``n_docs`` must divide the mesh size (the
-    ``shard_index`` block-partition contract). Returns
-    ``run(queries, q_masks=None) -> RetrievalResult`` over global doc ids.
+    ``shard_index`` block-partition contract). Returns one
+    ``plan(queries, q_masks=None) -> RetrievalResult`` (GLOBAL doc ids)
+    per generation — the partials ``make_timeline_retriever`` merges and
+    ``repro.serving.RetrievalService`` caches per immutable generation.
     """
-    from repro.core.engine import adapt_config_to_corpus, merge_generation_topk
+    from repro.core.engine import adapt_config_to_corpus
 
     n_shards = 1
     for a in mesh.axis_names:
@@ -152,19 +154,55 @@ def make_timeline_retriever(mesh: Mesh, cfg: EngineConfig, timeline):
     # instead of compiling G identical ones
     retrievers: dict = {}
     plans = []
-    for gen, meta, _ in timeline:
+    for gen, meta, off in timeline:
         gcfg = adapt_config_to_corpus(cfg, meta.n_docs // n_shards)
         if gcfg not in retrievers:
             retrievers[gcfg] = make_shardmap_retriever(mesh, gcfg)
-        plans.append((shard_index(gen, n_shards), retrievers[gcfg]))
-    offsets = timeline.offsets
+        stacked = shard_index(gen, n_shards)
+
+        def plan(queries, q_masks=None, *, _stacked=stacked,
+                 _retriever=retrievers[gcfg], _off=off):
+            r = _retriever(_stacked, queries, q_masks)
+            return RetrievalResult(r.scores, r.doc_ids + jnp.int32(_off))
+
+        plans.append(plan)
+    return plans
+
+
+def make_timeline_retriever(mesh: Mesh, cfg: EngineConfig, timeline):
+    """Sharded serving over a timeline: the per-generation shard_map plans
+    (``make_timeline_partial_plans``) merged by score — a third top-k level
+    on top of the per-shard merge. Returns
+    ``run(queries, q_masks=None) -> RetrievalResult`` over global doc ids.
+    """
+    from repro.core.engine import merge_partial_topk
+
+    plans = make_timeline_partial_plans(mesh, cfg, timeline)
 
     def run(queries: jax.Array, q_masks=None) -> RetrievalResult:
-        parts = [retriever(stacked, queries, q_masks)
-                 for stacked, retriever in plans]
-        return merge_generation_topk(parts, offsets, cfg.k)
+        if q_masks is None:
+            q_masks = jnp.ones(queries.shape[:2], jnp.bool_)
+        return merge_partial_topk([p(queries, q_masks) for p in plans],
+                                  cfg.k)
 
     return run
+
+
+def make_service(mesh: Mesh, cfg: EngineConfig, timeline, **service_kwargs):
+    """A ``repro.serving.RetrievalService`` whose cache-MISS lane runs the
+    sharded plans: hits are served from host memory, and only the miss
+    lane's sub-batch ever reaches the mesh. The plan factory is re-invoked
+    on every timeline swap (``add_passages``/``new_generation``), so grown
+    generations get freshly sharded plans while unchanged generations keep
+    their cache entries. ``service_kwargs`` pass through to
+    ``RetrievalService`` (cache budget, batching knobs, ...).
+    """
+    from repro.serving import RetrievalService
+
+    return RetrievalService(
+        timeline, cfg,
+        plan_factory=lambda tl: make_timeline_partial_plans(mesh, cfg, tl),
+        **service_kwargs)
 
 
 def shard_index(index: PackedIndex, n_shards: int) -> PackedIndex:

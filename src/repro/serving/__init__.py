@@ -1,0 +1,13 @@
+"""EMVB serving subsystem: per-generation result caching + micro-batching.
+
+The service loop over a ``repro.core.store.ShardedTimeline``:
+:class:`RetrievalService` (the façade), :class:`ResultCache` (per-
+immutable-generation partial top-k, LRU under a byte budget),
+:class:`MicroBatcher` (size/deadline batching with PR 3's pad+mask
+machinery) and :class:`ServiceMetrics` (hit rate, warm/cold split,
+p50/p99 latency, byte accounting). See docs/SERVING.md.
+"""
+from .batcher import MicroBatcher, Ticket, pad_query  # noqa: F401
+from .cache import ResultCache, config_fingerprint, query_fingerprint  # noqa: F401
+from .metrics import LatencyStats, ServiceMetrics  # noqa: F401
+from .service import RetrievalService  # noqa: F401

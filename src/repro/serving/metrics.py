@@ -1,0 +1,134 @@
+"""Serving telemetry: warm/cold traffic split, latency percentiles, and the
+byte accounting (cache occupancy + timeline footprint) in one snapshot.
+
+A query is **warm** when every cacheable (immutable) generation's partial
+was a cache hit — only the newest, still-mutable generation was computed —
+and **cold** otherwise. The split is the cache's effectiveness measured in
+requests rather than lookups: a Zipf-repeated stream should go warm almost
+immediately (benchmarks/fig8_serving.py tracks exactly that), while a
+stream of distinct queries stays cold no matter how large the cache.
+
+Latency is recorded per flushed batch into bounded reservoirs
+(:class:`LatencyStats`), reported as p50/p99 — the numbers a capacity plan
+actually budgets against, not means. The snapshot also folds in
+``repro.core.store.timeline_footprint`` (per-generation bytes + manifest
+overhead; ROADMAP's `bytes_per_embedding`-for-the-timeline item) next to
+the cache's byte occupancy, so one dict answers "what does this service
+cost in memory and what latency does it buy".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class LatencyStats:
+    """Bounded-reservoir latency recorder with percentile readout.
+
+    Keeps the most recent ``window`` samples (a ring buffer): long-running
+    services would otherwise grow an unbounded sample list, and recent
+    samples are the ones a serving dashboard wants anyway. ``count`` and
+    ``total_s`` stay cumulative over ALL samples.
+    """
+
+    def __init__(self, window: int = 4096):
+        """``window``: number of most-recent samples percentiles see."""
+        self._window = int(window)
+        self._samples = np.zeros(self._window, dtype=np.float64)
+        self._next = 0
+        self.count = 0
+        self.total_s = 0.0
+
+    def record(self, seconds: float) -> None:
+        """Record one latency sample (seconds)."""
+        self._samples[self._next] = seconds
+        self._next = (self._next + 1) % self._window
+        self.count += 1
+        self.total_s += seconds
+
+    def percentile(self, pct: float) -> float:
+        """The ``pct``-th percentile (seconds) over the sample window; 0.0
+        before the first sample."""
+        n = min(self.count, self._window)
+        if n == 0:
+            return 0.0
+        return float(np.percentile(self._samples[:n], pct))
+
+    def snapshot(self) -> dict:
+        """count / mean / p50 / p99, milliseconds for the readable fields."""
+        return {
+            "count": self.count,
+            "mean_ms": (self.total_s / self.count * 1e3) if self.count
+            else 0.0,
+            "p50_ms": self.percentile(50) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+        }
+
+
+class ServiceMetrics:
+    """Counters + latency reservoirs for one :class:`~repro.serving.service
+    .RetrievalService`.
+
+    ``record_batch`` is the single ingestion point: the service calls it
+    once per executed batch with the warm/cold split it just observed.
+    ``snapshot`` folds in the cache's counters and the timeline's footprint
+    so callers get the whole picture from one dict.
+    """
+
+    def __init__(self, window: int = 4096):
+        """``window`` sizes every latency reservoir (see LatencyStats)."""
+        self.batches = 0
+        self.queries = 0
+        self.warm_queries = 0
+        self.cold_queries = 0
+        self.batch_latency = LatencyStats(window)
+        self.warm_latency = LatencyStats(window)
+        self.cold_latency = LatencyStats(window)
+
+    def record_batch(self, n_queries: int, n_warm: int,
+                     seconds: float) -> None:
+        """Record one executed batch: size, how many of its queries were
+        warm (all immutable-generation partials cache-hit), wall seconds.
+
+        The batch latency lands in the warm reservoir only when the WHOLE
+        batch was warm (mixed batches pay the miss lane's compute, which is
+        cold-path latency by any honest accounting).
+        """
+        self.batches += 1
+        self.queries += n_queries
+        self.warm_queries += n_warm
+        self.cold_queries += n_queries - n_warm
+        self.batch_latency.record(seconds)
+        if n_warm == n_queries:
+            self.warm_latency.record(seconds)
+        else:
+            self.cold_latency.record(seconds)
+
+    def snapshot(self, cache=None,
+                 timeline_footprint: Optional[dict] = None) -> dict:
+        """One flat-ish dict: traffic counters, warm share, latency
+        percentiles, plus ``cache`` stats (a ``ResultCache``) and the
+        ``timeline`` footprint when provided."""
+        out = {
+            "batches": self.batches,
+            "queries": self.queries,
+            "warm_queries": self.warm_queries,
+            "cold_queries": self.cold_queries,
+            "warm_fraction": (self.warm_queries / self.queries
+                              if self.queries else 0.0),
+            "latency": self.batch_latency.snapshot(),
+            "warm_latency": self.warm_latency.snapshot(),
+            "cold_latency": self.cold_latency.snapshot(),
+        }
+        if cache is not None:
+            out["cache"] = cache.stats()
+        if timeline_footprint is not None:
+            out["timeline"] = {
+                k: timeline_footprint[k]
+                for k in ("n_generations", "n_docs", "n_tokens",
+                          "index_bytes", "manifest_bytes", "total_bytes",
+                          "bytes_per_embedding",
+                          "bytes_per_embedding_actual")
+            }
+        return out

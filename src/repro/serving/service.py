@@ -1,0 +1,266 @@
+"""`RetrievalService` — the serving façade over a ``ShardedTimeline``.
+
+Turns the one-shot :func:`repro.core.engine.retrieve_timeline` into a
+service loop:
+
+* queries arrive one at a time (``submit``/``flush``/``poll``, micro-
+  batched by ``repro.serving.batcher``) or as ready-made batches
+  (``query``);
+* per generation, the batch splits into a **cache-hit lane** (partials
+  served from ``repro.serving.cache``, host memory, no compute) and a
+  **cache-miss lane** (partials computed by the generation's execution
+  plan — the single-device engine by default, or a shard_map plan from
+  ``repro.launch.serve.make_service``), so the expensive candidate-
+  generation phases run for misses only;
+* the per-generation partials merge through the same
+  :func:`repro.core.engine.merge_partial_topk` the uncached path uses.
+
+The contract (tests/test_serving.py): ``RetrievalService(timeline,
+cfg).query(q) == retrieve_timeline(timeline, q, cfg)`` — ids AND score
+bits — cold and warm, across both candidate modes, both megakernels,
+masked/pruned queries, and across ``add_passages``/``new_generation``
+mutations. It holds because (a) an immutable generation's partial is a
+pure function of (query bytes, generation fingerprint, config), (b) the
+engine is bit-invariant to batch composition (a miss-lane sub-batch
+scores a query exactly as the full batch does), and (c) cached and fresh
+partials merge through one shared merge definition.
+
+Mutations are functional, like the store they wrap: ``add_passages`` grows
+the NEWEST generation (new fingerprint -> its never-cached partials are
+recomputed; older generations keep their cache entries), and
+``new_generation`` freezes the current newest — whose partials become
+cacheable from the next query on — and opens a fresh one.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import store
+from repro.core.engine import (EngineConfig, RetrievalResult,
+                               merge_partial_topk, retrieve_generation_topk)
+from repro.core.store import ShardedTimeline
+
+from .batcher import MicroBatcher, Ticket, pad_query
+from .cache import ResultCache, config_fingerprint, query_fingerprint
+from .metrics import ServiceMetrics
+
+# A generation's execution plan: (queries (B, n_q, d), q_masks (B, n_q)) ->
+# partial top-k with GLOBAL doc ids. A PlanFactory builds one per
+# generation for a given timeline.
+Plan = Callable[[jax.Array, jax.Array], RetrievalResult]
+PlanFactory = Callable[[ShardedTimeline], "list[Plan]"]
+
+
+class RetrievalService:
+    """Cached, micro-batched retrieval over an immutable-generation timeline.
+
+    One instance owns a timeline snapshot, a result cache, a micro-batcher
+    and its metrics. Single-threaded by design: deadlines are enforced
+    cooperatively through ``poll()`` (docs/SERVING.md discusses why that is
+    the right shape for a jit-dispatch loop).
+    """
+
+    def __init__(self, timeline: ShardedTimeline,
+                 cfg: Optional[EngineConfig] = None, *,
+                 cache: Optional[ResultCache] = None,
+                 metrics: Optional[ServiceMetrics] = None,
+                 max_batch: int = 16, max_delay_s: float = 0.002,
+                 plan_factory: Optional[PlanFactory] = None,
+                 pad_miss_lane: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        """Build a service over ``timeline``.
+
+        cfg           : retrieval configuration (default ``EngineConfig()``);
+                        hashed into every cache key.
+        cache         : injectable :class:`ResultCache` (fresh 64 MiB LRU by
+                        default). Share one across services ONLY if they use
+                        the same cfg AND execution plan.
+        metrics       : injectable :class:`ServiceMetrics`.
+        max_batch     : micro-batch size trigger.
+        max_delay_s   : micro-batch deadline trigger (from first submit).
+        plan_factory  : timeline -> per-generation execution plans; defaults
+                        to the single-device engine
+                        (:func:`~repro.core.engine.retrieve_generation_topk`
+                        per generation). ``repro.launch.serve.make_service``
+                        injects shard_map plans here.
+        pad_miss_lane : pad the miss lane to the full batch size (repeating
+                        its first row) so every flush reuses ONE compiled
+                        shape per generation config instead of recompiling
+                        per miss count. Compute cost is the cold path's
+                        either way; padding only trades FLOPs for compiles.
+        clock         : injectable monotonic clock (deadlines + latency).
+        """
+        self.cfg = cfg if cfg is not None else EngineConfig()
+        self.cache = cache if cache is not None else ResultCache()
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self.pad_miss_lane = pad_miss_lane
+        self.clock = clock
+        self._cfg_fp = config_fingerprint(self.cfg)
+        self._batcher = MicroBatcher(self.cfg.n_q, max_batch, max_delay_s,
+                                     clock=clock)
+        self._plan_factory = plan_factory
+        self.update_timeline(timeline)
+
+    # -- timeline lifecycle -------------------------------------------------
+
+    @property
+    def timeline(self) -> ShardedTimeline:
+        """The timeline snapshot currently being served."""
+        return self._timeline
+
+    def update_timeline(self, timeline: ShardedTimeline) -> None:
+        """Swap in a new timeline snapshot (rebuilds per-generation plans).
+
+        No cache flush: entries key on generation CONTENT fingerprints, so
+        unchanged generations keep serving from cache and changed ones
+        (new fingerprint) recompute — invalidation by construction.
+        """
+        self._timeline = timeline
+        self._gen_fps = timeline.fingerprints
+        if self._plan_factory is not None:
+            self._plans = list(self._plan_factory(timeline))
+        else:
+            self._plans = [
+                lambda q, m, _g=gen, _m=meta, _o=off:
+                    retrieve_generation_topk(_g, _m, _o, q, self.cfg, m)
+                for gen, meta, off in timeline]
+        if len(self._plans) != len(timeline):
+            raise ValueError(
+                f"plan_factory built {len(self._plans)} plan(s) for a "
+                f"{len(timeline)}-generation timeline")
+
+    def add_passages(self, doc_embs: np.ndarray,
+                     doc_lens: np.ndarray) -> None:
+        """Grow the NEWEST (still-mutable) generation with new passages.
+
+        The grown generation's content fingerprint changes, so its (never
+        cached) partials are recomputed with the new docs visible on the
+        very next query; older generations' cache entries stay live.
+        """
+        tl = self._timeline
+        grown, gmeta = store.add_passages(
+            tl.generations[-1], tl.metas[-1], doc_embs, doc_lens)
+        self.update_timeline(tl.with_newest(grown, gmeta))
+
+    def new_generation(self, doc_embs: np.ndarray,
+                       doc_lens: np.ndarray) -> None:
+        """Freeze the current newest generation and open a fresh one.
+
+        From the next query on, the previously-newest generation is
+        immutable and therefore CACHEABLE: its partials start populating
+        the cache (first lookup per query misses, later ones hit).
+        """
+        tl = self._timeline
+        gen, meta = store.new_generation(
+            tl.generations[0], tl.metas[0], doc_embs, doc_lens)
+        self.update_timeline(tl.append(gen, meta))
+
+    # -- query paths --------------------------------------------------------
+
+    def query(self, queries, q_masks=None) -> RetrievalResult:
+        """Retrieve a ready-made batch, bypassing the micro-batcher.
+
+        queries : (B, t, d) with t <= cfg.n_q (zero-padded up to n_q here)
+        q_masks : optional (B, t) bool per-term masks (True = live)
+        -> RetrievalResult (scores (B, k), global doc ids (B, k)) — bit-
+        exact to ``retrieve_timeline(timeline, queries, cfg, q_masks)``.
+        """
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim != 3:
+            raise ValueError(f"queries have shape {q.shape}: expected "
+                             "(batch, terms, d)")
+        padded, masks = [], []
+        for i in range(q.shape[0]):
+            pq, pm = pad_query(q[i], self.cfg.n_q,
+                               None if q_masks is None
+                               else np.asarray(q_masks)[i])
+            padded.append(pq)
+            masks.append(pm)
+        return self._execute(np.stack(padded), np.stack(masks))
+
+    def submit(self, query: np.ndarray,
+               q_mask: Optional[np.ndarray] = None) -> Ticket:
+        """Enqueue one (t, d) query; flushes immediately when the batch
+        fills to ``max_batch``. -> a :class:`Ticket` (``result()`` after
+        the flush that computes it)."""
+        ticket = self._batcher.submit(query, q_mask)
+        if len(self._batcher) >= self._batcher.max_batch:
+            self.flush()
+        return ticket
+
+    def flush(self) -> None:
+        """Execute ALL pending micro-batches now, filling their tickets."""
+        while True:
+            drained = self._batcher.drain()
+            if drained is None:
+                return
+            q, masks, tickets = drained
+            res = self._execute(q, masks)
+            scores = np.asarray(res.scores)
+            ids = np.asarray(res.doc_ids)
+            for j, t in enumerate(tickets):
+                t._fill(scores[j], ids[j])
+
+    def poll(self) -> None:
+        """Flush iff a pending batch is due (full or past its deadline) —
+        the cooperative deadline hook; call it from the serving loop."""
+        if self._batcher.due():
+            self.flush()
+
+    def stats(self) -> dict:
+        """Metrics snapshot: traffic + latency + cache bytes + timeline
+        footprint (one dict; see ``repro.serving.metrics``)."""
+        return self.metrics.snapshot(
+            cache=self.cache,
+            timeline_footprint=store.timeline_footprint(self._timeline))
+
+    # -- the hit/miss lane split --------------------------------------------
+
+    def _execute(self, q: np.ndarray, masks: np.ndarray) -> RetrievalResult:
+        """Run one dense batch through the per-generation lanes + merge."""
+        t0 = self.clock()
+        n = q.shape[0]
+        n_gens = len(self._timeline)
+        qfps = [query_fingerprint(q[i], masks[i]) for i in range(n)]
+        warm = np.full(n, n_gens > 1)   # a 1-gen timeline has no warm path
+        parts = []
+        for g, plan in enumerate(self._plans):
+            cacheable = g < n_gens - 1  # the newest gen is still mutable
+            gen_fp = self._gen_fps[g]
+            rows: list = [None] * n
+            miss = []
+            for i in range(n):
+                hit = self.cache.get((qfps[i], gen_fp, self._cfg_fp)) \
+                    if cacheable else None
+                if hit is None:
+                    miss.append(i)
+                else:
+                    rows[i] = hit
+            if miss:
+                if cacheable:
+                    warm[miss] = False
+                mq, mm = q[miss], masks[miss]
+                if self.pad_miss_lane and len(miss) < n:
+                    pad = n - len(miss)   # repeat row 0: one shape per cfg
+                    mq = np.concatenate([mq, np.repeat(mq[:1], pad, axis=0)])
+                    mm = np.concatenate([mm, np.repeat(mm[:1], pad, axis=0)])
+                res = plan(jnp.asarray(mq), jnp.asarray(mm))
+                ms = np.asarray(res.scores)[:len(miss)]
+                mi = np.asarray(res.doc_ids)[:len(miss)]
+                for j, i in enumerate(miss):
+                    rows[i] = (ms[j], mi[j])
+                    if cacheable:
+                        self.cache.put((qfps[i], gen_fp, self._cfg_fp),
+                                       ms[j], mi[j])
+            parts.append(RetrievalResult(
+                jnp.asarray(np.stack([r[0] for r in rows])),
+                jnp.asarray(np.stack([r[1] for r in rows]))))
+        merged = merge_partial_topk(parts, self.cfg.k)
+        jax.block_until_ready(merged)
+        self.metrics.record_batch(n, int(warm.sum()), self.clock() - t0)
+        return merged

@@ -94,6 +94,32 @@ def test_timeline_retriever_matches_single_device(small_corpus, small_index):
                                np.asarray(out.scores), rtol=1e-5)
 
 
+def test_make_service_shardmap_miss_lane(small_corpus, small_index):
+    """launch.serve.make_service: a RetrievalService whose miss lane runs
+    the per-generation shard_map plans. Cold and warm results equal the
+    sharded uncached retriever (the caching layer is plan-agnostic: it
+    stores whatever partials the plan produced)."""
+    from repro.core import ShardedTimeline, new_generation
+    from repro.launch.serve import make_service
+
+    idx, meta = small_index
+    gen1 = new_generation(idx, meta, np.asarray(small_corpus.doc_embs[:300]),
+                          np.asarray(small_corpus.doc_lens[:300]))
+    tl = ShardedTimeline.of((idx, meta), gen1)
+    q = jnp.asarray(small_corpus.queries[:8])
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ref = make_timeline_retriever(mesh, CFG, tl)(q)
+    svc = make_service(mesh, CFG, tl)
+    cold = svc.query(np.asarray(q))
+    warm = svc.query(np.asarray(q))
+    for out in (cold, warm):
+        np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                      np.asarray(out.doc_ids))
+        np.testing.assert_array_equal(np.asarray(ref.scores),
+                                      np.asarray(out.scores))
+    assert svc.cache.hits == 8          # warm pass, 1 immutable generation
+
+
 def test_per_shard_topk_merge_recovers_global(small_corpus, small_index):
     """Two-level top-k invariant: with EXHAUSTIVE per-shard budgets (every
     local doc late-interacted), the merged union must equal the brute-force

@@ -23,9 +23,9 @@ import numpy as np
 import pytest
 
 from repro.core import (EngineConfig, ShardedTimeline, add_passages,
-                        build_index, engine, load_index, load_timeline,
-                        new_generation, prune_queries, retrieve_timeline,
-                        save_index, save_timeline)
+                        build_index, engine, index_fingerprint, load_index,
+                        load_timeline, new_generation, prune_queries,
+                        retrieve_timeline, save_index, save_timeline)
 from repro.core.store import SCHEMA_VERSION
 from repro.data.synthetic import make_corpus
 
@@ -102,7 +102,8 @@ def test_round_trip_retrieval_masked_pruned(small_corpus, small_index, saved):
 # Persistence: every corruption raises an actionable ValueError
 # ---------------------------------------------------------------------------
 
-def _resave(src, dst, mutate_manifest=None, drop_array=None):
+def _resave(src, dst, mutate_manifest=None, drop_array=None,
+            mutate_arrays=None):
     with open(os.path.join(src, "manifest.json")) as f:
         manifest = json.load(f)
     with np.load(os.path.join(src, "arrays.npz")) as npz:
@@ -111,6 +112,8 @@ def _resave(src, dst, mutate_manifest=None, drop_array=None):
         mutate_manifest(manifest)
     if drop_array:
         del arrays[drop_array]
+    if mutate_arrays:
+        mutate_arrays(arrays)
     os.makedirs(dst, exist_ok=True)
     np.savez(os.path.join(dst, "arrays.npz"), **arrays)
     with open(os.path.join(dst, "manifest.json"), "w") as f:
@@ -202,6 +205,73 @@ def test_load_corrupt_npz(tmp_path, saved):
     (dst / "arrays.npz").write_bytes(b"\x00" * 64)
     with pytest.raises(ValueError, match="corrupt arrays.npz"):
         load_index(str(dst))
+
+
+# ---------------------------------------------------------------------------
+# Content fingerprints (schema v2): the serving cache's generation ids
+# ---------------------------------------------------------------------------
+
+def test_manifest_fingerprint_matches_contents(small_index, saved):
+    idx, _ = small_index
+    with open(os.path.join(saved, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["schema_version"] == SCHEMA_VERSION
+    assert manifest["fingerprint"] == index_fingerprint(idx)
+
+
+def test_load_flipped_array_bytes(tmp_path, saved):
+    """Same dtype, same shape, different BYTES: only the fingerprint can
+    catch this corruption — the dtype/shape manifest checks cannot."""
+    def flip(arrays):
+        arrays["codes"] = arrays["codes"].copy()
+        arrays["codes"][0, 0] += 1
+
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst, mutate_arrays=flip)
+    with pytest.raises(ValueError, match="disagrees with the array "
+                                         "contents"):
+        load_index(dst)
+
+
+def test_load_missing_fingerprint_at_v2(tmp_path, saved):
+    dst = str(tmp_path / "bad")
+    _resave(saved, dst, mutate_manifest=lambda m: m.pop("fingerprint"))
+    with pytest.raises(ValueError, match="no 'fingerprint'"):
+        load_index(dst)
+
+
+def test_load_v1_file_without_fingerprint(small_corpus, small_index, tmp_path,
+                                          saved):
+    """A schema-v1 save (pre-fingerprint) still loads, bit-exactly — the
+    fingerprint is additive; only v2+ manifests are required to carry it."""
+    def downgrade(m):
+        m.pop("fingerprint")
+        m["schema_version"] = 1
+
+    dst = str(tmp_path / "v1")
+    _resave(saved, dst, mutate_manifest=downgrade)
+    loaded, _ = load_index(dst)
+    idx, _ = small_index
+    q = jnp.asarray(small_corpus.queries[:4])
+    a = engine.retrieve(idx, q, CFG)
+    b = engine.retrieve(loaded, q, CFG)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_fingerprint_tracks_mutation(stream_corpus, gen0):
+    """add_passages changes the contents, so it must change the fingerprint
+    (the serving cache's invalidation rule) — and with_newest swaps it into
+    the timeline tail."""
+    c = stream_corpus
+    idx, meta = gen0
+    fp0 = index_fingerprint(idx)
+    grown, gmeta = add_passages(idx, meta, c.doc_embs[200:232],
+                                c.doc_lens[200:232])
+    assert index_fingerprint(grown) != fp0
+    assert index_fingerprint(idx) == fp0          # input untouched
+    tl = ShardedTimeline.of((idx, meta)).with_newest(grown, gmeta)
+    assert tl.fingerprints == (index_fingerprint(grown),)
 
 
 # ---------------------------------------------------------------------------
@@ -390,6 +460,9 @@ def test_timeline_save_load_round_trip(stream_corpus, timeline, tmp_path):
     loaded = load_timeline(path)
     assert len(loaded) == len(timeline)
     assert loaded.offsets == timeline.offsets
+    # generation fingerprints round-trip (the serving cache's generation
+    # ids survive persistence, so a reloaded timeline re-hits a warm cache)
+    assert loaded.fingerprints == timeline.fingerprints
     q = jnp.asarray(stream_corpus.queries[:8])
     a = retrieve_timeline(timeline, q, CFG)
     b = retrieve_timeline(loaded, q, CFG)
@@ -407,3 +480,26 @@ def test_load_timeline_errors(tmp_path):
          "schema_version": SCHEMA_VERSION + 1, "generations": ["g"]}))
     with pytest.raises(ValueError, match="schema_version"):
         load_timeline(str(bad))
+
+
+def test_load_timeline_swapped_generation(timeline, tmp_path):
+    """A gen-NNNN directory replaced by a DIFFERENT (internally consistent)
+    saved index must be refused: per-directory checks pass, only the
+    timeline.json fingerprint list can see the swap."""
+    import shutil
+
+    path = str(tmp_path / "tl")
+    save_timeline(path, timeline)
+    shutil.rmtree(os.path.join(path, "gen-0002"))
+    shutil.copytree(os.path.join(path, "gen-0001"),
+                    os.path.join(path, "gen-0002"))
+    with pytest.raises(ValueError, match="was replaced"):
+        load_timeline(path)
+    # a v1 timeline manifest (no fingerprints) skips the check and loads
+    with open(os.path.join(path, "timeline.json")) as f:
+        manifest = json.load(f)
+    manifest.pop("fingerprints")
+    manifest["schema_version"] = 1
+    with open(os.path.join(path, "timeline.json"), "w") as f:
+        json.dump(manifest, f)
+    assert len(load_timeline(path)) == 3
