@@ -12,9 +12,22 @@ latency tracks the cost of the per-generation fan-out + merge:
     fig7,streaming,gens=<g>,docs=<n>,retrieve,<us_per_query>,mrr=<m>,drift=x<r>
 
 ``drift`` is the newest generation's ``IndexMeta.drift`` (quantization error
-vs the gen-0 training baseline — the re-train signal). The final row times
-one monolithic index built over the union corpus at the same budgets, so
-the artifact tracks the price of temporal sharding vs a full re-index:
+vs the gen-0 training baseline — the re-train signal). After the growth
+loop, the fully-grown timeline is compacted to ONE generation with
+``store.merge_generations`` (the maintenance loop's offline half) and timed
+again — the row quantifies how much of the fan-out cost compaction claws
+back. (Compaction is bit-exact under cut-lossless budgets; under this
+benchmark's TIGHT budgets the merged index selects from one shared pool
+where the sharded timeline gave each generation its own — the documented
+relative-selection caveat — so the compacted MRR tracks the
+monolithic-selection regime, not the gens=N row.)
+
+    fig7,streaming,compacted,docs=<n>,retrieve,<us_per_query>,mrr=<m>
+
+The final row times one monolithic index built over the union corpus at
+the same budgets, so the artifact tracks the price of temporal sharding vs
+a full re-index — compacted-vs-monolithic isolates what frozen-codebook
+quantization costs once the fan-out is gone:
 
     fig7,streaming,monolithic,docs=<n>,retrieve,<us_per_query>,mrr=<m>
 """
@@ -25,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (EngineConfig, ShardedTimeline, build_index,
-                        new_generation, retrieve_timeline)
+                        merge_generations, new_generation, retrieve_timeline)
 from repro.core import engine as emvb
 from repro.data.synthetic import mrr_at_k
 
@@ -61,6 +74,15 @@ def run() -> list[str]:
             f"fig7,streaming,gens={g},docs={timeline.n_docs},retrieve",
             t / b * 1e6,
             f"mrr={mrr:.3f},drift=x{timeline.metas[-1].drift:.2f}"))
+
+    # online compaction: merge the N generations back into one (bit-exact,
+    # no re-quantization) and measure the reclaimed fan-out latency
+    compacted = merge_generations(timeline, 0, len(timeline))
+    t = time_fn(lambda: retrieve_timeline(compacted, queries, cfg))
+    ids = np.asarray(retrieve_timeline(compacted, queries, cfg).doc_ids)
+    rows.append(row(
+        f"fig7,streaming,compacted,docs={compacted.n_docs},retrieve",
+        t / b * 1e6, f"mrr={mrr_at_k(ids, corpus.gt_doc):.3f}"))
 
     # the full re-index alternative: one monolithic build over the union
     mono, _ = bench_index("msmarco", m=16)

@@ -3,7 +3,7 @@ from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual
 from .engine import EngineConfig, prune_queries, retrieve, retrieve_timeline  # noqa: F401
 from .index import PackedIndex, IndexMeta, build_index, bytes_per_embedding  # noqa: F401
 from .plaid import PlaidConfig  # noqa: F401
-from .store import (ShardedTimeline, add_passages, generation_footprint,  # noqa: F401
-                    index_fingerprint, load_index, load_timeline,
-                    new_generation, save_index, save_timeline,
-                    timeline_footprint)
+from .store import (EpochedTimeline, ShardedTimeline, add_passages,  # noqa: F401
+                    generation_footprint, index_fingerprint, load_index,
+                    load_timeline, merge_generations, new_generation,
+                    save_index, save_timeline, timeline_footprint)

@@ -454,7 +454,8 @@ def phase34_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
 # immutable index generation, merge per-generation top-k by score.
 # ---------------------------------------------------------------------------
 
-def adapt_config_to_corpus(cfg: EngineConfig, n_docs: int) -> EngineConfig:
+def adapt_config_to_corpus(cfg: EngineConfig, n_docs: int,
+                           cap: Optional[int] = None) -> EngineConfig:
     """Clamp a config's selection budgets to a (small) corpus of ``n_docs``.
 
     Timeline generations can be smaller than ``n_filter``/``n_docs``/
@@ -464,6 +465,15 @@ def adapt_config_to_corpus(cfg: EngineConfig, n_docs: int) -> EngineConfig:
     top-min(n_filter, n_docs) cut over n_docs docs keeps everything the
     unclamped cut would. ``k`` is NOT clamped — a generation smaller than
     ``k`` cannot fill a top-k and raises an actionable error instead.
+
+    ``cap`` (the index's per-doc token capacity, ``meta.cap``) additionally
+    clamps ``compact_cap``: the per-token compaction buffer selects
+    ``compact_cap`` tokens per doc out of ``cap``, so a ``compact_cap``
+    above ``cap`` dies in ``lax.top_k`` over the token axis. The clamp is
+    lossless too — a buffer covering every token reproduces Eq. 6 exactly
+    (tests/test_interaction.py) — and preserves the
+    ``compact_cap``-requires-``th_r`` invariant (``None`` stays ``None``,
+    a clamped value keeps needing the threshold it already had).
     """
     if n_docs < cfg.k:
         raise ValueError(
@@ -472,9 +482,12 @@ def adapt_config_to_corpus(cfg: EngineConfig, n_docs: int) -> EngineConfig:
             "top-k — batch tiny additions with store.add_passages instead "
             "of opening a new generation")
     nf = min(cfg.n_filter, n_docs)
+    cc = cfg.compact_cap
+    if cc is not None and cap is not None:
+        cc = min(cc, cap)
     return dataclasses.replace(
         cfg, n_filter=nf, n_docs=min(cfg.n_docs, nf),
-        cand_cap=max(min(cfg.cand_cap, n_docs), nf))
+        cand_cap=max(min(cfg.cand_cap, n_docs), nf), compact_cap=cc)
 
 
 def merge_partial_topk(parts: list[RetrievalResult],
@@ -495,6 +508,38 @@ def merge_partial_topk(parts: list[RetrievalResult],
     top_scores, pos = jax.lax.top_k(scores, k)
     return RetrievalResult(top_scores,
                            jnp.take_along_axis(ids, pos, axis=1))
+
+
+def merge_partial_topk_by_rank(parts: list[RetrievalResult],
+                               k: int) -> RetrievalResult:
+    """Merge per-EPOCH top-k results whose scores are NOT comparable.
+
+    Scores from different codebook epochs live on different quantization
+    grids (each epoch's PQ/centroid codebooks define their own error
+    profile), so a by-score merge across epochs would silently prefer
+    whichever epoch's codebooks happen to inflate scores — ranks are the
+    only calibration-free common currency. The merge interleaves by
+    per-epoch rank, NEWEST epoch first at every rank (its codebooks were
+    trained on the freshest slice of the distribution, so its rank-r doc is
+    the best-informed rank-r claim), and truncates to ``k``:
+
+        rank 0 of epoch E-1, rank 0 of epoch E-2, ..., rank 1 of E-1, ...
+
+    Doc-id sets are disjoint across epochs (each owns a global id range),
+    so no dedup is needed. The returned ``scores`` are each doc's OWN-epoch
+    score — diagnostic only: they are not sorted and not mutually
+    comparable; consumers must rank by position. A single part passes
+    through unchanged (the common non-re-epoched case stays bit-exact).
+    docs/MAINTENANCE.md discusses the semantics.
+    """
+    if len(parts) == 1:
+        return parts[0]
+    ids = jnp.stack([p.doc_ids for p in reversed(parts)], axis=1)  # (B, E, k)
+    sc = jnp.stack([p.scores for p in reversed(parts)], axis=1)
+    b = ids.shape[0]
+    return RetrievalResult(
+        jnp.swapaxes(sc, 1, 2).reshape(b, -1)[:, :k],
+        jnp.swapaxes(ids, 1, 2).reshape(b, -1)[:, :k])
 
 
 def merge_generation_topk(parts: list[RetrievalResult], offsets,
@@ -525,7 +570,8 @@ def retrieve_generation_topk(index: PackedIndex, meta, offset: int,
     it cacheable (``repro.serving.cache``): a cached partial merges
     bit-identically with freshly computed ones.
     """
-    part = retrieve(index, queries, adapt_config_to_corpus(cfg, meta.n_docs),
+    part = retrieve(index, queries,
+                    adapt_config_to_corpus(cfg, meta.n_docs, meta.cap),
                     q_masks)
     return RetrievalResult(part.scores, part.doc_ids + jnp.int32(offset))
 
@@ -563,7 +609,22 @@ def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
     layer (``repro.serving``) can cache them per immutable generation and
     merge cached + fresh partials through the same
     :func:`merge_partial_topk`.
+
+    Also accepts an :class:`~repro.core.store.EpochedTimeline` (codebook
+    epochs opened by drift-triggered re-epoching —
+    ``repro.serving.maintenance``): each epoch retrieves as above, its
+    local doc ids shift by the epoch's global offset, and the per-epoch
+    top-k merge BY RANK through :func:`merge_partial_topk_by_rank` —
+    scores from different codebooks are not bit-comparable, ranks are.
+    A single-epoch EpochedTimeline is bit-exact to its plain timeline.
     """
+    epochs = getattr(timeline, "epochs", None)
+    if epochs is not None:
+        parts = [
+            RetrievalResult(r.scores, r.doc_ids + jnp.int32(eoff))
+            for tl, eoff in timeline
+            for r in (retrieve_timeline(tl, queries, cfg, q_masks),)]
+        return merge_partial_topk_by_rank(parts, cfg.k)
     parts = [retrieve_generation_topk(gen, meta, off, queries, cfg, q_masks)
              for gen, meta, off in timeline]
     return merge_partial_topk(parts, cfg.k)

@@ -501,6 +501,219 @@ class ShardedTimeline:
         return cls(tuple(i for i, _ in pairs), tuple(m for _, m in pairs))
 
 
+# ---------------------------------------------------------------------------
+# Maintenance primitives — generation compaction + codebook epochs
+# (policy/orchestration live in repro.serving.maintenance; docs/MAINTENANCE.md)
+# ---------------------------------------------------------------------------
+
+def merge_generations(timeline: ShardedTimeline, lo: int,
+                      hi: int) -> ShardedTimeline:
+    """Compact generations ``[lo, hi)`` of a timeline into ONE generation.
+
+    The offline half of PLAID SHIRTTT's hierarchical merge schedule: many
+    small temporal shards re-materialize as one bigger shard, cutting the
+    per-query fan-out (fig7: latency grows ~linearly with generation count)
+    without touching any doc's quantization. All generations of a timeline
+    share the frozen codebooks (``ShardedTimeline.__post_init__`` enforces
+    it), so the merge is pure bookkeeping:
+
+    * **arrays** — codes / doc_lens / res_codes / plaid_res concatenate in
+      generation order, so every doc keeps its GLOBAL id (offsets of the
+      untouched generations before and after the range are unchanged too);
+    * **IVF** — per centroid, the per-generation lists concatenate with
+      each generation's local doc-id offset added (the candidate bitmap
+      unions lists, so within-list order is irrelevant); entries a
+      generation's own build dropped stay dropped — the merge never
+      resurrects or loses reachability, which is what makes the
+      equivalence contract below exact;
+    * **meta** — ``n_docs``/``n_dropped`` sum; ``list_cap`` re-sizes to the
+      longest merged list; the drift statistic merges token-weighted over
+      the grown SUFFIX of the range (``n_grown`` counts "the last n_grown
+      docs", so grown docs of a partially-grown generation buried under a
+      later generation's docs can no longer be represented and fold into
+      the untracked prefix — a conservative under-count, never a wrong
+      ratio).
+
+    Contract (tests/test_maintenance.py): under cut-lossless budgets,
+    ``retrieve_timeline(merge_generations(tl, lo, hi)) ==
+    retrieve_timeline(tl)`` — ids AND score bits, jnp reference and both
+    megakernels. Every phase's score is per-document given the shared
+    codebooks, and ``lax.top_k`` ties resolve toward the lower global doc
+    id on both paths (generations concatenate in id order).
+
+    The merged generation has a NEW content fingerprint (its cached
+    partials recompute); generations outside ``[lo, hi)`` keep theirs (their
+    cache entries keep serving — the hot-swap warm path).
+    """
+    n_gens = len(timeline)
+    if not (isinstance(lo, int) and isinstance(hi, int)
+            and 0 <= lo < hi <= n_gens):
+        raise ValueError(
+            f"merge_generations range [lo={lo}, hi={hi}) is not a valid "
+            f"generation slice of a {n_gens}-generation timeline")
+    if hi - lo < 2:
+        raise ValueError(
+            f"merge_generations range [lo={lo}, hi={hi}) spans a single "
+            "generation — nothing to compact")
+    gens = timeline.generations[lo:hi]
+    metas = timeline.metas[lo:hi]
+    n_total = sum(m.n_docs for m in metas)
+    for g, (gen, m) in enumerate(zip(gens, metas), start=lo):
+        if np.asarray(gen.plaid_res).shape[0] != m.n_docs:
+            raise ValueError(
+                f"generation {g} carries placeholder PLAID residuals "
+                f"(shape {np.asarray(gen.plaid_res).shape} for "
+                f"{m.n_docs} docs) — only full generations can be merged")
+
+    codes = np.concatenate([np.asarray(g.codes) for g in gens], axis=0)
+    doc_lens = np.concatenate([np.asarray(g.doc_lens) for g in gens])
+    res_codes = np.concatenate([np.asarray(g.res_codes) for g in gens],
+                               axis=0)
+    plaid_res = np.concatenate([np.asarray(g.plaid_res) for g in gens],
+                               axis=0)
+
+    # IVF: concatenate per-centroid lists with local doc-id offset fixup
+    n_c = metas[0].n_centroids
+    lens = np.stack([np.asarray(g.ivf_lens) for g in gens])      # (R, n_c)
+    need = lens.sum(axis=0)
+    list_cap = max(8, int(need.max()))
+    ivf = np.full((n_c, list_cap), n_total, dtype=np.int32)      # sentinel
+    cursor = np.zeros(n_c, dtype=np.int64)
+    off = 0
+    for r, (gen, m) in enumerate(zip(gens, metas)):
+        g_ivf = np.asarray(gen.ivf)
+        for c in np.nonzero(lens[r])[0]:
+            ln = lens[r, c]
+            ivf[c, cursor[c]:cursor[c] + ln] = g_ivf[c, :ln] + off
+            cursor[c] += ln
+        off += m.n_docs
+
+    # drift statistic: token-weighted over the grown suffix of the range
+    n_grown, num, tok = 0, 0.0, 0
+    tail_open = True
+    for gen, m in zip(reversed(gens), reversed(metas)):
+        if not tail_open or m.n_grown == 0:
+            tail_open = False
+            continue
+        n_grown += m.n_grown
+        lens_g = np.asarray(gen.doc_lens)
+        t = int(lens_g[m.n_docs - m.n_grown:].sum())
+        num += m.grown_quant_mse * t
+        tok += t
+        if m.n_grown < m.n_docs:
+            tail_open = False
+
+    first = gens[0]
+    merged = PackedIndex(
+        centroids=first.centroids,
+        codes=jnp.asarray(codes),
+        doc_lens=jnp.asarray(doc_lens),
+        res_codes=jnp.asarray(res_codes),
+        pq_codebooks=first.pq_codebooks,
+        ivf=jnp.asarray(ivf),
+        ivf_lens=jnp.asarray(need.astype(np.int32)),
+        plaid_res=jnp.asarray(plaid_res),
+        plaid_cutoffs=first.plaid_cutoffs,
+        plaid_weights=first.plaid_weights,
+        opq_rotation=first.opq_rotation,
+    )
+    merged_meta = dataclasses.replace(
+        metas[0], n_docs=n_total, list_cap=list_cap,
+        n_dropped=sum(m.n_dropped for m in metas), n_grown=n_grown,
+        grown_quant_mse=float(num / tok) if tok else 0.0)
+    return ShardedTimeline(
+        timeline.generations[:lo] + (merged,) + timeline.generations[hi:],
+        timeline.metas[:lo] + (merged_meta,) + timeline.metas[hi:])
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochedTimeline:
+    """An ordered sequence of codebook EPOCHS, each a :class:`ShardedTimeline`.
+
+    ``ShardedTimeline`` refuses generations quantized against different
+    codebooks — their scores are not bit-comparable and a merged-by-score
+    top-k would be silently wrong. Re-epoching (a fresh ``build_index``
+    over a drifted corpus slice — ``repro.serving.maintenance``) therefore
+    opens a NEW timeline rather than appending a generation, and this class
+    is the container: epoch 0 is the oldest codebook regime, the last epoch
+    is the live one (only ITS newest generation is mutable).
+
+    Global doc ids concatenate across epochs (``epoch_offsets``), exactly
+    like generations concatenate within one. Retrieval
+    (``repro.core.engine.retrieve_timeline``) merges BY SCORE within an
+    epoch and BY RANK across epochs
+    (``repro.core.engine.merge_partial_topk_by_rank`` — scores from
+    different codebooks are not comparable, ranks are; docs/MAINTENANCE.md
+    has the semantics).
+    """
+
+    epochs: tuple[ShardedTimeline, ...]
+
+    def __post_init__(self):
+        """Validate epoch types and the shared query geometry (d, cap)."""
+        if not self.epochs:
+            raise ValueError("an EpochedTimeline needs >= 1 epoch")
+        for e, tl in enumerate(self.epochs):
+            if not isinstance(tl, ShardedTimeline):
+                raise ValueError(
+                    f"epoch {e} is a {type(tl).__name__}, expected a "
+                    "ShardedTimeline (wrap single indexes with "
+                    "ShardedTimeline.of)")
+        m0 = self.epochs[0].metas[0]
+        for e, tl in enumerate(self.epochs[1:], start=1):
+            m = tl.metas[0]
+            if (m.d, m.cap) != (m0.d, m0.cap):
+                raise ValueError(
+                    f"epoch {e} has (d={m.d}, cap={m.cap}) but epoch 0 has "
+                    f"(d={m0.d}, cap={m0.cap}); every epoch serves the same "
+                    "queries, so the embedding geometry must match "
+                    "(codebooks MAY differ — that is what epochs are for)")
+
+    @classmethod
+    def of(cls, timeline) -> "EpochedTimeline":
+        """Wrap a plain ``ShardedTimeline`` as one epoch (idempotent on an
+        ``EpochedTimeline``)."""
+        if isinstance(timeline, cls):
+            return timeline
+        return cls((timeline,))
+
+    @property
+    def epoch_offsets(self) -> tuple[int, ...]:
+        """Global doc-id offset of each epoch (cumulative epoch n_docs)."""
+        offs, acc = [], 0
+        for tl in self.epochs:
+            offs.append(acc)
+            acc += tl.n_docs
+        return tuple(offs)
+
+    @property
+    def n_docs(self) -> int:
+        """Total docs across all epochs."""
+        return sum(tl.n_docs for tl in self.epochs)
+
+    @property
+    def n_generations(self) -> int:
+        """Total generations across all epochs."""
+        return sum(len(tl) for tl in self.epochs)
+
+    def __len__(self) -> int:
+        """Number of epochs."""
+        return len(self.epochs)
+
+    def __iter__(self) -> Iterator[tuple[ShardedTimeline, int]]:
+        """Yield (epoch timeline, global doc-id offset), oldest first."""
+        return iter(zip(self.epochs, self.epoch_offsets))
+
+    def with_newest_epoch(self, tl: ShardedTimeline) -> "EpochedTimeline":
+        """A new EpochedTimeline with the LIVE (last) epoch replaced —
+        the growth/compaction step; older epochs are sealed by contract."""
+        return EpochedTimeline(self.epochs[:-1] + (tl,))
+
+    def append_epoch(self, tl: ShardedTimeline) -> "EpochedTimeline":
+        """A new EpochedTimeline with ``tl`` opened as the live epoch."""
+        return EpochedTimeline(self.epochs + (tl,))
+
+
 def save_timeline(path: str, timeline: ShardedTimeline) -> str:
     """Persist a timeline: one :func:`save_index` directory per generation
     (``gen-0000``, ``gen-0001``, ...) plus a ``timeline.json`` listing them
@@ -639,12 +852,32 @@ def generation_footprint(index: PackedIndex, meta: IndexMeta) -> dict:
     }
 
 
-def timeline_footprint(timeline: ShardedTimeline) -> dict:
+def timeline_footprint(timeline) -> dict:
     """Byte footprint of a whole timeline: per-generation footprints
     (:func:`generation_footprint`) plus the ``timeline.json`` manifest
     overhead, summed — the capacity-planning number for the streaming case
     (ROADMAP), reported per snapshot by ``repro.serving.metrics``.
+
+    Accepts a :class:`ShardedTimeline` or an :class:`EpochedTimeline` (the
+    latter sums its epochs and adds ``n_epochs``).
     """
+    if isinstance(timeline, EpochedTimeline):
+        per = [timeline_footprint(tl) for tl in timeline.epochs]
+        n_tokens = sum(p["n_tokens"] for p in per)
+        payload = sum(p["bytes_per_embedding_actual"] * p["n_tokens"]
+                      for p in per)
+        return {
+            "n_epochs": len(per),
+            "n_generations": sum(p["n_generations"] for p in per),
+            "n_docs": timeline.n_docs,
+            "n_tokens": n_tokens,
+            "generations": [g for p in per for g in p["generations"]],
+            "index_bytes": sum(p["index_bytes"] for p in per),
+            "manifest_bytes": sum(p["manifest_bytes"] for p in per),
+            "total_bytes": sum(p["total_bytes"] for p in per),
+            "bytes_per_embedding": per[0]["bytes_per_embedding"],
+            "bytes_per_embedding_actual": payload / max(n_tokens, 1),
+        }
     gens = [generation_footprint(g, m) for g, m, _ in timeline]
     tj = {"format": _TIMELINE_FORMAT, "schema_version": SCHEMA_VERSION,
           "generations": [f"gen-{g:04d}" for g in range(len(timeline))],

@@ -126,7 +126,8 @@ def _index_struct():
 # index generation, merged by score at the top.
 # ---------------------------------------------------------------------------
 
-def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline):
+def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline, *,
+                                shard_cache: dict = None):
     """Per-generation shard_map execution plans over a
     ``repro.core.store.ShardedTimeline``.
 
@@ -135,8 +136,17 @@ def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline):
     ``make_shardmap_retriever`` (so the per-shard four-phase pipeline, the
     kernel choices, and the two-level top-k all apply unchanged), with the
     generation's global doc-id offset applied to the result. Selection
-    budgets are clamped to each generation's PER-SHARD doc count via
-    ``engine.adapt_config_to_corpus``.
+    budgets are clamped to each generation's PER-SHARD doc count AND token
+    cap via ``engine.adapt_config_to_corpus``.
+
+    ``shard_cache`` (optional dict the caller owns) memoizes the stacked
+    shard arrays by generation CONTENT fingerprint: across timeline swaps
+    (growth, compaction, re-epoching) only generations whose content
+    actually changed are re-sharded — the same invalidation-by-construction
+    rule the result cache uses. Pass the SAME dict on every rebuild (and
+    across epochs — the service invokes the factory once per epoch with
+    one dict); it is kept LRU-bounded here, so stale fingerprints age out
+    without ever evicting another epoch's still-live entries first.
 
     Every generation's ``n_docs`` must divide the mesh size (the
     ``shard_index`` block-partition contract). Returns one
@@ -149,16 +159,24 @@ def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline):
     n_shards = 1
     for a in mesh.axis_names:
         n_shards *= mesh.shape[a]
+    fps = timeline.fingerprints if shard_cache is not None else None
     # one retriever per DISTINCT clamped config: equal-size generations (the
     # steady-state stream) share a single traced/compiled shard_map program
     # instead of compiling G identical ones
     retrievers: dict = {}
     plans = []
-    for gen, meta, off in timeline:
-        gcfg = adapt_config_to_corpus(cfg, meta.n_docs // n_shards)
+    for g, (gen, meta, off) in enumerate(timeline):
+        gcfg = adapt_config_to_corpus(cfg, meta.n_docs // n_shards, meta.cap)
         if gcfg not in retrievers:
             retrievers[gcfg] = make_shardmap_retriever(mesh, gcfg)
-        stacked = shard_index(gen, n_shards)
+        if shard_cache is None:
+            stacked = shard_index(gen, n_shards)
+        else:
+            ckey = (fps[g], n_shards)
+            stacked = shard_cache.pop(ckey, None)
+            if stacked is None:
+                stacked = shard_index(gen, n_shards)
+            shard_cache[ckey] = stacked   # (re)insert at LRU tail
 
         def plan(queries, q_masks=None, *, _stacked=stacked,
                  _retriever=retrievers[gcfg], _off=off):
@@ -166,6 +184,13 @@ def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline):
             return RetrievalResult(r.scores, r.doc_ids + jnp.int32(_off))
 
         plans.append(plan)
+    if shard_cache is not None:
+        # LRU bound (insertion order = recency after the pop/reinsert
+        # above): stale fingerprints from superseded timelines age out;
+        # never evicts this timeline's own entries (they were just
+        # refreshed) as long as the bound exceeds one epoch's generations
+        while len(shard_cache) > max(32, 2 * len(plans)):
+            del shard_cache[next(iter(shard_cache))]
     return plans
 
 
@@ -192,16 +217,20 @@ def make_service(mesh: Mesh, cfg: EngineConfig, timeline, **service_kwargs):
     """A ``repro.serving.RetrievalService`` whose cache-MISS lane runs the
     sharded plans: hits are served from host memory, and only the miss
     lane's sub-batch ever reaches the mesh. The plan factory is re-invoked
-    on every timeline swap (``add_passages``/``new_generation``), so grown
-    generations get freshly sharded plans while unchanged generations keep
-    their cache entries. ``service_kwargs`` pass through to
+    on every timeline swap (``add_passages``/``new_generation``/
+    maintenance), so changed generations get freshly sharded plans while
+    unchanged generations reuse their stacked shard arrays (memoized by
+    content fingerprint in a cache this factory owns) AND keep their
+    result-cache entries. ``service_kwargs`` pass through to
     ``RetrievalService`` (cache budget, batching knobs, ...).
     """
     from repro.serving import RetrievalService
 
+    shard_cache: dict = {}
     return RetrievalService(
         timeline, cfg,
-        plan_factory=lambda tl: make_timeline_partial_plans(mesh, cfg, tl),
+        plan_factory=lambda tl: make_timeline_partial_plans(
+            mesh, cfg, tl, shard_cache=shard_cache),
         **service_kwargs)
 
 

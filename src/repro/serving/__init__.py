@@ -1,13 +1,20 @@
-"""EMVB serving subsystem: per-generation result caching + micro-batching.
+"""EMVB serving subsystem: caching, micro-batching, online maintenance.
 
-The service loop over a ``repro.core.store.ShardedTimeline``:
-:class:`RetrievalService` (the façade), :class:`ResultCache` (per-
-immutable-generation partial top-k, LRU under a byte budget),
-:class:`MicroBatcher` (size/deadline batching with PR 3's pad+mask
-machinery) and :class:`ServiceMetrics` (hit rate, warm/cold split,
-p50/p99 latency, byte accounting). See docs/SERVING.md.
+The service loop over a ``repro.core.store.ShardedTimeline`` (or, once
+re-epoching opens codebook epochs, an ``EpochedTimeline``):
+:class:`RetrievalService` (the façade, double-buffered timeline hot
+swap), :class:`ResultCache` (per-immutable-generation partial top-k, LRU
+under a byte budget), :class:`MicroBatcher` (size/deadline batching with
+PR 3's pad+mask machinery), :class:`ServiceMetrics` (hit rate, warm/cold
+split, p50/p99 latency, maintenance counters, byte accounting) and the
+maintenance loop (:class:`MaintenancePolicy` deciding generation
+compaction vs drift-triggered re-epoching, :class:`MaintenanceRunner`
+applying it off the serving path). See docs/SERVING.md and
+docs/MAINTENANCE.md.
 """
 from .batcher import MicroBatcher, Ticket, pad_query  # noqa: F401
 from .cache import ResultCache, config_fingerprint, query_fingerprint  # noqa: F401
+from .maintenance import (MaintenanceAction, MaintenancePolicy,  # noqa: F401
+                          MaintenanceRunner, reepoch_tail)
 from .metrics import LatencyStats, ServiceMetrics  # noqa: F401
 from .service import RetrievalService  # noqa: F401

@@ -14,11 +14,13 @@ Batching policy (cooperative, no background thread — docs/SERVING.md):
 
 * **size** — a batch closes as soon as ``max_batch`` queries are pending
   (the service flushes it immediately);
-* **deadline** — otherwise it closes ``max_delay_s`` after its FIRST
-  query was submitted: ``due()`` turns True and the next ``poll()``/
-  ``flush()`` drains it. A lone query therefore waits at most
-  ``max_delay_s`` for company; the clock is injectable for deterministic
-  tests.
+* **deadline** — otherwise it closes ``max_delay_s`` after its OLDEST
+  PENDING query was submitted: ``due()`` turns True and the next
+  ``poll()``/``flush()`` drains it. The anchor is per query, not per
+  batch: a query left behind when a full ``max_batch`` drains keeps its
+  original submit time, so EVERY query — lone, batched, or overflowed —
+  waits at most ``max_delay_s`` for company. The clock is injectable for
+  deterministic tests.
 
 The cache-hit/cache-miss lane split happens per generation downstream
 (``RetrievalService._execute``): the batcher's job ends at a dense
@@ -112,7 +114,7 @@ class MicroBatcher:
                  clock: Callable[[], float] = time.monotonic):
         """``n_q``: static term count queries are padded to. ``max_batch``:
         size trigger. ``max_delay_s``: deadline trigger, measured from the
-        first pending submit. ``clock``: injectable monotonic clock."""
+        oldest pending submit. ``clock``: injectable monotonic clock."""
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} < 1")
         self.n_q = n_q
@@ -122,7 +124,7 @@ class MicroBatcher:
         self._queries: list[np.ndarray] = []
         self._masks: list[np.ndarray] = []
         self._tickets: list[Ticket] = []
-        self._opened_at: Optional[float] = None
+        self._submits: list[float] = []     # submit time per pending query
 
     def __len__(self) -> int:
         """Number of pending (not yet drained) queries."""
@@ -132,30 +134,32 @@ class MicroBatcher:
                q_mask: Optional[np.ndarray] = None) -> Ticket:
         """Enqueue one (t, d) query (padded to n_q) -> its :class:`Ticket`."""
         q, m = pad_query(query, self.n_q, q_mask)
-        if self._opened_at is None:
-            self._opened_at = self.clock()
         self._queries.append(q)
         self._masks.append(m)
+        self._submits.append(self.clock())
         ticket = Ticket()
         self._tickets.append(ticket)
         return ticket
 
     def due(self) -> bool:
-        """True when the pending batch should flush: full, or older than
-        ``max_delay_s``."""
+        """True when the pending batch should flush: full, or the OLDEST
+        pending query is older than ``max_delay_s``."""
         if not self._queries:
             return False
         if len(self._queries) >= self.max_batch:
             return True
-        return self.clock() - self._opened_at >= self.max_delay_s
+        return self.clock() - self._submits[0] >= self.max_delay_s
 
     def drain(self) -> Optional[tuple[np.ndarray, np.ndarray, list[Ticket]]]:
         """Pop up to ``max_batch`` pending queries as dense arrays.
 
         -> ((B, n_q, d) f32, (B, n_q) bool, the B tickets to fill), or
         ``None`` when nothing is pending. Queries beyond ``max_batch``
-        stay queued (their deadline re-anchors to now — they start a new
-        batch).
+        stay queued with their ORIGINAL submit times: the deadline is a
+        per-query latency promise ("a lone query waits at most
+        ``max_delay_s``"), so a query left behind by a full batch keeps
+        aging — re-anchoring its deadline to the drain would let it wait
+        up to twice the promise.
         """
         if not self._queries:
             return None
@@ -163,6 +167,6 @@ class MicroBatcher:
         q = np.stack(self._queries[:n])
         m = np.stack(self._masks[:n])
         tickets = self._tickets[:n]
-        del self._queries[:n], self._masks[:n], self._tickets[:n]
-        self._opened_at = self.clock() if self._queries else None
+        del self._queries[:n], self._masks[:n], self._tickets[:n], \
+            self._submits[:n]
         return q, m, tickets

@@ -85,6 +85,13 @@ class ServiceMetrics:
         self.batch_latency = LatencyStats(window)
         self.warm_latency = LatencyStats(window)
         self.cold_latency = LatencyStats(window)
+        # maintenance counters (docs/MAINTENANCE.md): timeline snapshot
+        # swaps (and how many had to wait for a flush boundary), plus the
+        # actions the maintenance loop applied
+        self.swaps = 0
+        self.deferred_swaps = 0
+        self.merges = 0
+        self.reepochs = 0
 
     def record_batch(self, n_queries: int, n_warm: int,
                      seconds: float) -> None:
@@ -105,6 +112,26 @@ class ServiceMetrics:
         else:
             self.cold_latency.record(seconds)
 
+    def record_swap(self, deferred: bool = False) -> None:
+        """Record one installed timeline snapshot swap; ``deferred=True``
+        when the swap was staged behind pending queries and applied at the
+        next flush boundary (the double-buffered hot-swap path)."""
+        self.swaps += 1
+        if deferred:
+            self.deferred_swaps += 1
+
+    def record_maintenance(self, kind: str) -> None:
+        """Record one applied maintenance action: ``"merge"`` (generation
+        compaction) or ``"reepoch"`` (drift-triggered codebook rebuild)."""
+        if kind == "merge":
+            self.merges += 1
+        elif kind == "reepoch":
+            self.reepochs += 1
+        else:
+            raise ValueError(
+                f"unknown maintenance action kind {kind!r}: expected "
+                "'merge' or 'reepoch'")
+
     def snapshot(self, cache=None,
                  timeline_footprint: Optional[dict] = None) -> dict:
         """One flat-ish dict: traffic counters, warm share, latency
@@ -120,6 +147,12 @@ class ServiceMetrics:
             "latency": self.batch_latency.snapshot(),
             "warm_latency": self.warm_latency.snapshot(),
             "cold_latency": self.cold_latency.snapshot(),
+            "maintenance": {
+                "swaps": self.swaps,
+                "deferred_swaps": self.deferred_swaps,
+                "merges": self.merges,
+                "reepochs": self.reepochs,
+            },
         }
         if cache is not None:
             out["cache"] = cache.stats()

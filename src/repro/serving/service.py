@@ -1,4 +1,4 @@
-"""`RetrievalService` — the serving façade over a ``ShardedTimeline``.
+"""`RetrievalService` — the serving façade over a timeline of generations.
 
 Turns the one-shot :func:`repro.core.engine.retrieve_timeline` into a
 service loop:
@@ -13,7 +13,11 @@ service loop:
   ``repro.launch.serve.make_service``), so the expensive candidate-
   generation phases run for misses only;
 * the per-generation partials merge through the same
-  :func:`repro.core.engine.merge_partial_topk` the uncached path uses.
+  :func:`repro.core.engine.merge_partial_topk` the uncached path uses —
+  and, when drift-triggered re-epoching has opened codebook epochs
+  (``repro.serving.maintenance``), per-epoch results merge by RANK
+  through :func:`repro.core.engine.merge_partial_topk_by_rank`, exactly
+  as ``retrieve_timeline`` does.
 
 The contract (tests/test_serving.py): ``RetrievalService(timeline,
 cfg).query(q) == retrieve_timeline(timeline, q, cfg)`` — ids AND score
@@ -30,11 +34,22 @@ the NEWEST generation (new fingerprint -> its never-cached partials are
 recomputed; older generations keep their cache entries), and
 ``new_generation`` freezes the current newest — whose partials become
 cacheable from the next query on — and opens a fresh one.
+
+**Hot swap (double-buffered).** ``update_timeline`` builds the new
+snapshot's per-generation plans FIRST, while the current snapshot keeps
+serving, then swaps one reference atomically. If queries are pending in
+the micro-batcher the swap is STAGED and applied when the batcher drains
+(end of the next ``flush``): a submitted query is always answered against
+the snapshot it was accepted under. Maintenance (compaction /
+re-epoching, ``repro.serving.maintenance``) rides this path: merged or
+re-epoched generations carry new content fingerprints and recompute,
+untouched generations keep their fingerprints AND their warm cache
+entries across the swap — invalidation by construction, no flush.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -42,18 +57,22 @@ import numpy as np
 
 from repro.core import store
 from repro.core.engine import (EngineConfig, RetrievalResult,
-                               merge_partial_topk, retrieve_generation_topk)
-from repro.core.store import ShardedTimeline
+                               merge_partial_topk, merge_partial_topk_by_rank,
+                               retrieve_generation_topk)
+from repro.core.store import EpochedTimeline, ShardedTimeline
 
 from .batcher import MicroBatcher, Ticket, pad_query
 from .cache import ResultCache, config_fingerprint, query_fingerprint
 from .metrics import ServiceMetrics
 
 # A generation's execution plan: (queries (B, n_q, d), q_masks (B, n_q)) ->
-# partial top-k with GLOBAL doc ids. A PlanFactory builds one per
-# generation for a given timeline.
+# partial top-k with doc ids GLOBAL within its epoch. A PlanFactory builds
+# one per generation for a given (one-epoch) timeline; the service invokes
+# it once per epoch, so factories written for plain timelines keep working.
 Plan = Callable[[jax.Array, jax.Array], RetrievalResult]
 PlanFactory = Callable[[ShardedTimeline], "list[Plan]"]
+
+Timeline = Union[ShardedTimeline, EpochedTimeline]
 
 
 class RetrievalService:
@@ -62,10 +81,12 @@ class RetrievalService:
     One instance owns a timeline snapshot, a result cache, a micro-batcher
     and its metrics. Single-threaded by design: deadlines are enforced
     cooperatively through ``poll()`` (docs/SERVING.md discusses why that is
-    the right shape for a jit-dispatch loop).
+    the right shape for a jit-dispatch loop), and the staged timeline swap
+    relies on the same discipline — "atomically between flushes" means no
+    batch is ever computed against a half-installed snapshot.
     """
 
-    def __init__(self, timeline: ShardedTimeline,
+    def __init__(self, timeline: Timeline,
                  cfg: Optional[EngineConfig] = None, *,
                  cache: Optional[ResultCache] = None,
                  metrics: Optional[ServiceMetrics] = None,
@@ -73,7 +94,8 @@ class RetrievalService:
                  plan_factory: Optional[PlanFactory] = None,
                  pad_miss_lane: bool = True,
                  clock: Callable[[], float] = time.monotonic):
-        """Build a service over ``timeline``.
+        """Build a service over ``timeline`` (a ``ShardedTimeline`` or an
+        ``EpochedTimeline``).
 
         cfg           : retrieval configuration (default ``EngineConfig()``);
                         hashed into every cache key.
@@ -82,12 +104,14 @@ class RetrievalService:
                         the same cfg AND execution plan.
         metrics       : injectable :class:`ServiceMetrics`.
         max_batch     : micro-batch size trigger.
-        max_delay_s   : micro-batch deadline trigger (from first submit).
-        plan_factory  : timeline -> per-generation execution plans; defaults
-                        to the single-device engine
+        max_delay_s   : micro-batch deadline trigger (from the oldest
+                        pending submit).
+        plan_factory  : one-epoch timeline -> per-generation execution
+                        plans; defaults to the single-device engine
                         (:func:`~repro.core.engine.retrieve_generation_topk`
                         per generation). ``repro.launch.serve.make_service``
-                        injects shard_map plans here.
+                        injects shard_map plans here. Invoked once per
+                        epoch on every swap.
         pad_miss_lane : pad the miss lane to the full batch size (repeating
                         its first row) so every flush reuses ONE compiled
                         shape per generation config instead of recompiling
@@ -104,35 +128,95 @@ class RetrievalService:
         self._batcher = MicroBatcher(self.cfg.n_q, max_batch, max_delay_s,
                                      clock=clock)
         self._plan_factory = plan_factory
+        self._staged: Optional[tuple] = None
         self.update_timeline(timeline)
 
     # -- timeline lifecycle -------------------------------------------------
 
     @property
-    def timeline(self) -> ShardedTimeline:
-        """The timeline snapshot currently being served."""
-        return self._timeline
+    def timeline(self) -> Timeline:
+        """The snapshot currently being served: the plain
+        ``ShardedTimeline`` while the service has a single codebook epoch
+        (the common case), the full ``EpochedTimeline`` once re-epoching
+        has opened more."""
+        if len(self._epoched) == 1:
+            return self._epoched.epochs[0]
+        return self._epoched
 
-    def update_timeline(self, timeline: ShardedTimeline) -> None:
-        """Swap in a new timeline snapshot (rebuilds per-generation plans).
+    @property
+    def epoched(self) -> EpochedTimeline:
+        """The snapshot currently being served, always epoch-shaped."""
+        return self._epoched
 
-        No cache flush: entries key on generation CONTENT fingerprints, so
-        unchanged generations keep serving from cache and changed ones
-        (new fingerprint) recompute — invalidation by construction.
+    @property
+    def latest_timeline(self) -> EpochedTimeline:
+        """The newest accepted snapshot: the STAGED one when a swap is
+        waiting for pending queries to drain, else the serving snapshot.
+        Mutations (and the maintenance loop) must compose on this — basing
+        a new snapshot on the serving one while another is staged would
+        silently drop the staged changes."""
+        return self._staged[0] if self._staged is not None else self._epoched
+
+    def update_timeline(self, timeline: Timeline) -> None:
+        """Swap in a new timeline snapshot — double-buffered.
+
+        The expensive half (per-generation plan builds, fingerprints) runs
+        first, against the NEW snapshot, while the current one keeps
+        serving; the swap itself is an atomic reference switch. With
+        queries pending in the micro-batcher the prepared snapshot is
+        STAGED instead and installed when the batcher drains (end of the
+        next ``flush``/``poll``/``query``), so a submitted query is always
+        answered against the snapshot it was accepted under. Staging twice
+        before a flush keeps the LATEST snapshot only.
+
+        No cache flush, ever: entries key on generation CONTENT
+        fingerprints, so unchanged generations keep serving from cache and
+        changed ones (grown / merged / re-epoched -> new fingerprint)
+        recompute — invalidation by construction.
         """
-        self._timeline = timeline
-        self._gen_fps = timeline.fingerprints
-        if self._plan_factory is not None:
-            self._plans = list(self._plan_factory(timeline))
+        staged = self._prepare(timeline)
+        if len(self._batcher) == 0:
+            self._install(staged)
         else:
-            self._plans = [
-                lambda q, m, _g=gen, _m=meta, _o=off:
-                    retrieve_generation_topk(_g, _m, _o, q, self.cfg, m)
-                for gen, meta, off in timeline]
-        if len(self._plans) != len(timeline):
-            raise ValueError(
-                f"plan_factory built {len(self._plans)} plan(s) for a "
-                f"{len(timeline)}-generation timeline")
+            self._staged = staged
+
+    def _prepare(self, timeline: Timeline) -> tuple:
+        """Build everything a swap needs, off the serving path."""
+        epoched = EpochedTimeline.of(timeline)
+        plans, fps = [], []
+        for tl, _ in epoched:
+            if self._plan_factory is not None:
+                eplans = list(self._plan_factory(tl))
+            else:
+                eplans = [
+                    lambda q, m, _g=gen, _m=meta, _o=off:
+                        retrieve_generation_topk(_g, _m, _o, q, self.cfg, m)
+                    for gen, meta, off in tl]
+            if len(eplans) != len(tl):
+                raise ValueError(
+                    f"plan_factory built {len(eplans)} plan(s) for a "
+                    f"{len(tl)}-generation epoch")
+            plans.append(eplans)
+            fps.append(tl.fingerprints)
+        return epoched, plans, fps, list(epoched.epoch_offsets)
+
+    def _install(self, staged: tuple) -> None:
+        """Atomically switch the serving snapshot to a prepared one."""
+        swap = hasattr(self, "_epoched")        # constructor install is free
+        deferred = self._staged is not None
+        self._staged = None
+        self._epoched, self._plans, self._gen_fps, self._epoch_offsets = \
+            staged
+        # only the open generation (last of the live epoch) is mutable
+        self._n_cacheable = sum(len(p) for p in self._plans) - 1
+        if swap:
+            self.metrics.record_swap(deferred=deferred)
+
+    def _maybe_install(self) -> None:
+        """Install a staged snapshot once no query is pending against the
+        old one — the flush-boundary half of the double buffer."""
+        if self._staged is not None and len(self._batcher) == 0:
+            self._install(self._staged)
 
     def add_passages(self, doc_embs: np.ndarray,
                      doc_lens: np.ndarray) -> None:
@@ -142,23 +226,27 @@ class RetrievalService:
         cached) partials are recomputed with the new docs visible on the
         very next query; older generations' cache entries stay live.
         """
-        tl = self._timeline
+        et = self.latest_timeline
+        tl = et.epochs[-1]
         grown, gmeta = store.add_passages(
             tl.generations[-1], tl.metas[-1], doc_embs, doc_lens)
-        self.update_timeline(tl.with_newest(grown, gmeta))
+        self.update_timeline(
+            et.with_newest_epoch(tl.with_newest(grown, gmeta)))
 
     def new_generation(self, doc_embs: np.ndarray,
                        doc_lens: np.ndarray) -> None:
-        """Freeze the current newest generation and open a fresh one.
+        """Freeze the current newest generation and open a fresh one
+        (quantized against the LIVE epoch's codebooks).
 
         From the next query on, the previously-newest generation is
         immutable and therefore CACHEABLE: its partials start populating
         the cache (first lookup per query misses, later ones hit).
         """
-        tl = self._timeline
+        et = self.latest_timeline
+        tl = et.epochs[-1]
         gen, meta = store.new_generation(
             tl.generations[0], tl.metas[0], doc_embs, doc_lens)
-        self.update_timeline(tl.append(gen, meta))
+        self.update_timeline(et.with_newest_epoch(tl.append(gen, meta)))
 
     # -- query paths --------------------------------------------------------
 
@@ -170,10 +258,16 @@ class RetrievalService:
         -> RetrievalResult (scores (B, k), global doc ids (B, k)) — bit-
         exact to ``retrieve_timeline(timeline, queries, cfg, q_masks)``.
         """
+        self._maybe_install()
         q = np.asarray(queries, dtype=np.float32)
         if q.ndim != 3:
             raise ValueError(f"queries have shape {q.shape}: expected "
                              "(batch, terms, d)")
+        if q.shape[0] == 0:
+            raise ValueError(
+                "empty query batch (B=0): query() needs at least one "
+                "query — guard the caller, or use submit()/flush() for "
+                "streams that may be idle")
         padded, masks = [], []
         for i in range(q.shape[0]):
             pq, pm = pad_query(q[i], self.cfg.n_q,
@@ -194,10 +288,13 @@ class RetrievalService:
         return ticket
 
     def flush(self) -> None:
-        """Execute ALL pending micro-batches now, filling their tickets."""
+        """Execute ALL pending micro-batches now, filling their tickets;
+        then install any staged timeline swap (the batcher is empty — the
+        double buffer's safe point)."""
         while True:
             drained = self._batcher.drain()
             if drained is None:
+                self._maybe_install()
                 return
             q, masks, tickets = drained
             res = self._execute(q, masks)
@@ -211,56 +308,77 @@ class RetrievalService:
         the cooperative deadline hook; call it from the serving loop."""
         if self._batcher.due():
             self.flush()
+        else:
+            self._maybe_install()
 
     def stats(self) -> dict:
-        """Metrics snapshot: traffic + latency + cache bytes + timeline
-        footprint (one dict; see ``repro.serving.metrics``)."""
+        """Metrics snapshot: traffic + latency + maintenance counters +
+        cache bytes + timeline footprint (one dict; see
+        ``repro.serving.metrics``)."""
         return self.metrics.snapshot(
             cache=self.cache,
-            timeline_footprint=store.timeline_footprint(self._timeline))
+            timeline_footprint=store.timeline_footprint(self.timeline))
 
     # -- the hit/miss lane split --------------------------------------------
 
     def _execute(self, q: np.ndarray, masks: np.ndarray) -> RetrievalResult:
-        """Run one dense batch through the per-generation lanes + merge."""
+        """Run one dense batch through the per-generation lanes, merge by
+        score within each epoch and by rank across epochs."""
         t0 = self.clock()
         n = q.shape[0]
-        n_gens = len(self._timeline)
+        if n == 0:
+            raise ValueError(
+                "empty query batch (B=0): nothing to retrieve (the "
+                "micro-batcher never drains an empty batch; direct "
+                "callers must pass >= 1 query)")
         qfps = [query_fingerprint(q[i], masks[i]) for i in range(n)]
-        warm = np.full(n, n_gens > 1)   # a 1-gen timeline has no warm path
-        parts = []
-        for g, plan in enumerate(self._plans):
-            cacheable = g < n_gens - 1  # the newest gen is still mutable
-            gen_fp = self._gen_fps[g]
-            rows: list = [None] * n
-            miss = []
-            for i in range(n):
-                hit = self.cache.get((qfps[i], gen_fp, self._cfg_fp)) \
-                    if cacheable else None
-                if hit is None:
-                    miss.append(i)
-                else:
-                    rows[i] = hit
-            if miss:
-                if cacheable:
-                    warm[miss] = False
-                mq, mm = q[miss], masks[miss]
-                if self.pad_miss_lane and len(miss) < n:
-                    pad = n - len(miss)   # repeat row 0: one shape per cfg
-                    mq = np.concatenate([mq, np.repeat(mq[:1], pad, axis=0)])
-                    mm = np.concatenate([mm, np.repeat(mm[:1], pad, axis=0)])
-                res = plan(jnp.asarray(mq), jnp.asarray(mm))
-                ms = np.asarray(res.scores)[:len(miss)]
-                mi = np.asarray(res.doc_ids)[:len(miss)]
-                for j, i in enumerate(miss):
-                    rows[i] = (ms[j], mi[j])
+        warm = np.full(n, self._n_cacheable > 0)
+        n_epochs = len(self._plans)
+        epoch_parts = []
+        for e, (plans, fps, eoff) in enumerate(
+                zip(self._plans, self._gen_fps, self._epoch_offsets)):
+            parts = []
+            for g, plan in enumerate(plans):
+                # only the live epoch's newest generation is still mutable
+                cacheable = e < n_epochs - 1 or g < len(plans) - 1
+                gen_fp = fps[g]
+                rows: list = [None] * n
+                miss = []
+                for i in range(n):
+                    hit = self.cache.get((qfps[i], gen_fp, self._cfg_fp)) \
+                        if cacheable else None
+                    if hit is None:
+                        miss.append(i)
+                    else:
+                        rows[i] = hit
+                if miss:
                     if cacheable:
-                        self.cache.put((qfps[i], gen_fp, self._cfg_fp),
-                                       ms[j], mi[j])
-            parts.append(RetrievalResult(
-                jnp.asarray(np.stack([r[0] for r in rows])),
-                jnp.asarray(np.stack([r[1] for r in rows]))))
-        merged = merge_partial_topk(parts, self.cfg.k)
+                        warm[miss] = False
+                    mq, mm = q[miss], masks[miss]
+                    if self.pad_miss_lane and len(miss) < n:
+                        pad = n - len(miss)   # repeat row 0: 1 shape per cfg
+                        mq = np.concatenate(
+                            [mq, np.repeat(mq[:1], pad, axis=0)])
+                        mm = np.concatenate(
+                            [mm, np.repeat(mm[:1], pad, axis=0)])
+                    res = plan(jnp.asarray(mq), jnp.asarray(mm))
+                    ms = np.asarray(res.scores)[:len(miss)]
+                    # epoch-local -> global ids BEFORE caching, so cached
+                    # and fresh partials merge identically (epoch offsets
+                    # are stable: compaction and re-epoching both preserve
+                    # every surviving doc's global id)
+                    mi = np.asarray(res.doc_ids)[:len(miss)] + np.int32(eoff)
+                    for j, i in enumerate(miss):
+                        rows[i] = (ms[j], mi[j])
+                        if cacheable:
+                            self.cache.put((qfps[i], gen_fp, self._cfg_fp),
+                                           ms[j], mi[j])
+                parts.append(RetrievalResult(
+                    jnp.asarray(np.stack([r[0] for r in rows])),
+                    jnp.asarray(np.stack([r[1] for r in rows]))))
+            epoch_parts.append(merge_partial_topk(parts, self.cfg.k))
+        merged = epoch_parts[0] if n_epochs == 1 else \
+            merge_partial_topk_by_rank(epoch_parts, self.cfg.k)
         jax.block_until_ready(merged)
         self.metrics.record_batch(n, int(warm.sum()), self.clock() - t0)
         return merged

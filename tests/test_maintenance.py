@@ -1,0 +1,380 @@
+"""Online maintenance contract (repro.serving.maintenance + the store/engine
+primitives it drives):
+
+* ``merge_generations`` compaction is BIT-exact: retrieval over the
+  compacted timeline equals retrieval over the original (ids AND score
+  bits) under cut-lossless budgets, jnp reference and both megakernels;
+* ``MaintenancePolicy`` decides drift-retrain over merge, hierarchical
+  same-tier merges, and the frozen-generation size bound — in that order;
+* ``reepoch_tail`` opens a fresh codebook epoch over the drifted tail while
+  preserving every surviving doc's GLOBAL id (what keeps caches valid);
+* cross-epoch results merge by RANK, newest epoch first
+  (``merge_partial_topk_by_rank``);
+* end to end: a drift-crossing growth stream through ``RetrievalService``
+  fires the policy, re-epochs OFF the serving path, hot-swaps at a flush
+  boundary (deferred behind a pending ticket), and keeps untouched
+  generations' cache entries warm across the swap.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, EpochedTimeline, ShardedTimeline,
+                        build_index, merge_generations, new_generation,
+                        retrieve_timeline, timeline_footprint)
+from repro.core.engine import RetrievalResult, merge_partial_topk_by_rank
+from repro.data.synthetic import make_corpus
+from repro.serving import (MaintenancePolicy, MaintenanceRunner,
+                           RetrievalService, reepoch_tail)
+
+# Tight serving config (same constants as tests/test_serving.py) and the
+# cut-lossless config the bit-exact merge contract needs (every candidate
+# late-interacted; same as tests/test_store.py's equivalence tests).
+CFG = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48, k=10)
+LOSSLESS = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=600, n_docs=600,
+                        k=10)
+
+MERGE_CFGS = {
+    "jnp-ref": LOSSLESS,
+    "prefilter-megakernel": dataclasses.replace(
+        LOSSLESS, use_kernels=True, fused_late_interaction=False),
+    "pqinter-megakernel": dataclasses.replace(
+        LOSSLESS, use_kernels=True, fused_prefilter=False),
+}
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(7, n_docs=600, cap=24, min_len=8, n_queries=16,
+                       n_topics=24)
+
+
+@pytest.fixture(scope="module")
+def timeline(corpus):
+    """Three generations of 200 docs sharing gen 0's frozen codebooks."""
+    c = corpus
+    idx0, m0 = build_index(jax.random.PRNGKey(0), c.doc_embs[:200],
+                           c.doc_lens[:200], n_centroids=128, m=8, nbits=4,
+                           kmeans_iters=3)
+    tl = ShardedTimeline.of((idx0, m0))
+    tl = tl.append(*new_generation(idx0, m0, c.doc_embs[200:400],
+                                   c.doc_lens[200:400]))
+    return tl.append(*new_generation(idx0, m0, c.doc_embs[400:600],
+                                     c.doc_lens[400:600]))
+
+
+# ---------------------------------------------------------------------------
+# Compaction: merge_generations is bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(MERGE_CFGS))
+def test_merge_generations_bit_exact(corpus, timeline, name):
+    """retrieve_timeline(merge_generations(tl, 0, 3)) equals
+    retrieve_timeline(tl) — ids AND score bits — under cut-lossless
+    budgets, for the jnp reference and both megakernels."""
+    cfg = MERGE_CFGS[name]
+    q = jnp.asarray(corpus.queries[:8])
+    ref = retrieve_timeline(timeline, q, cfg)
+    merged = merge_generations(timeline, 0, len(timeline))
+    assert len(merged) == 1
+    got = retrieve_timeline(merged, q, cfg)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(got.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(got.scores))
+
+
+def test_merge_generations_partial_ranges(corpus, timeline):
+    """Interior and prefix ranges compact bit-exactly too, and the
+    untouched generations keep their identity (fingerprints unchanged)."""
+    q = jnp.asarray(corpus.queries[:8])
+    ref = retrieve_timeline(timeline, q, LOSSLESS)
+    for lo, hi in ((0, 2), (1, 3)):
+        merged = merge_generations(timeline, lo, hi)
+        assert len(merged) == 2
+        got = retrieve_timeline(merged, q, LOSSLESS)
+        np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                      np.asarray(got.doc_ids))
+        np.testing.assert_array_equal(np.asarray(ref.scores),
+                                      np.asarray(got.scores))
+    untouched = merge_generations(timeline, 0, 2)
+    assert untouched.fingerprints[-1] == timeline.fingerprints[-1]
+    assert untouched.fingerprints[0] not in timeline.fingerprints
+
+
+def test_merge_generations_meta_accounting(timeline):
+    """The merged IndexMeta sums docs and keeps the drift statistic
+    consistent: the merged generation's grown tail is the union of the
+    merged generations' grown tails (gen 0 was TRAINED, not grown)."""
+    m = merge_generations(timeline, 1, 3)
+    assert m.metas[1].n_docs == 400
+    assert m.n_docs == timeline.n_docs
+    assert m.offsets == (0, 200)
+    # gens 1 and 2 were fully grown against gen 0's codebooks
+    assert m.metas[1].n_grown == 400
+    assert m.metas[1].train_quant_mse == timeline.metas[1].train_quant_mse
+    full = merge_generations(timeline, 0, 3)
+    # the walk stops at gen 0 (n_grown=0): only gens 1+2 count as grown
+    assert full.metas[0].n_grown == 400
+    assert full.metas[0].n_docs == 600
+
+
+def test_merge_generations_validation(timeline):
+    with pytest.raises(ValueError, match="single generation"):
+        merge_generations(timeline, 0, 1)
+    with pytest.raises(ValueError, match="not a valid"):
+        merge_generations(timeline, 2, 1)
+    with pytest.raises(ValueError, match="not a valid"):
+        merge_generations(timeline, 0, 5)
+    with pytest.raises(ValueError, match="not a valid"):
+        merge_generations(timeline, 0.0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Policy: drift > merge > size bound
+# ---------------------------------------------------------------------------
+
+def _with_drift(tl: ShardedTimeline, gen: int,
+                ratio: float) -> ShardedTimeline:
+    """A copy of ``tl`` whose ``gen``-th meta reports the given drift."""
+    metas = list(tl.metas)
+    metas[gen] = dataclasses.replace(
+        metas[gen], n_grown=max(metas[gen].n_grown, 1),
+        train_quant_mse=1.0, grown_quant_mse=float(ratio))
+    return ShardedTimeline(tl.generations, tuple(metas))
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="merge_factor"):
+        MaintenancePolicy(merge_factor=1)
+    with pytest.raises(ValueError, match="max_frozen_generations"):
+        MaintenancePolicy(max_frozen_generations=0)
+    with pytest.raises(ValueError, match="drift_threshold"):
+        MaintenancePolicy(drift_threshold=1.0)
+
+
+def test_policy_tiers():
+    p = MaintenancePolicy(merge_factor=4)
+    assert p.tier(1) == 0 and p.tier(3) == 0
+    assert p.tier(4) == 1 and p.tier(15) == 1
+    assert p.tier(16) == 2 and p.tier(200) == 3
+
+
+def test_policy_drift_outranks_merge(timeline):
+    """A drifted generation triggers a tail re-epoch even when a merge run
+    is also available — compacting stale quantization helps nothing."""
+    p = MaintenancePolicy(merge_factor=2, drift_threshold=1.5)
+    drifted = _with_drift(timeline, 1, 2.0)
+    a = p.decide(drifted)
+    assert a.kind == "reepoch" and (a.lo, a.hi) == (1, 3)
+    assert "drift" in a.reason
+    # the same timeline without drift falls through to the merge rule
+    a2 = p.decide(timeline)
+    assert a2.kind == "merge" and (a2.lo, a2.hi) == (0, 2)
+
+
+def test_policy_hierarchical_and_size_bound(timeline):
+    """Same-tier runs merge hierarchically; otherwise the frozen-count
+    bound compacts the oldest generations; a timeline in shape yields
+    None."""
+    # 2 frozen gens of 200 docs: same tier, but no run of 4 -> the size
+    # bound (max 1 frozen) fires instead, compacting the oldest two
+    p = MaintenancePolicy(merge_factor=4, max_frozen_generations=1)
+    a = p.decide(timeline)
+    assert a.kind == "merge" and (a.lo, a.hi) == (0, 2)
+    assert "frozen" in a.reason
+    # relaxed bound: nothing to do
+    assert MaintenancePolicy(merge_factor=4,
+                             max_frozen_generations=8).decide(timeline) \
+        is None
+    # merge_factor=2: the two tier-3 frozen gens form a run -> hierarchical
+    a3 = MaintenancePolicy(merge_factor=2).decide(timeline)
+    assert a3.kind == "merge" and (a3.lo, a3.hi) == (0, 2)
+    assert "tier" in a3.reason
+
+
+def test_policy_accepts_epoched(timeline):
+    """decide() sees through an EpochedTimeline to its newest epoch."""
+    et = EpochedTimeline.of(timeline)
+    a = MaintenancePolicy(merge_factor=2).decide(et)
+    assert a.kind == "merge" and (a.lo, a.hi) == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Cross-epoch rank merge
+# ---------------------------------------------------------------------------
+
+def test_merge_by_rank_interleaves_newest_first():
+    old = RetrievalResult(jnp.asarray([[9.0, 8.0, 7.0]]),
+                          jnp.asarray([[0, 1, 2]], dtype=jnp.int32))
+    new = RetrievalResult(jnp.asarray([[5.0, 4.0, 3.0]]),
+                          jnp.asarray([[100, 101, 102]], dtype=jnp.int32))
+    # parts are oldest-first; the merge must put the NEWEST epoch's rank-r
+    # doc before the older epoch's at every rank, despite its lower scores
+    m = merge_partial_topk_by_rank([old, new], 4)
+    np.testing.assert_array_equal(np.asarray(m.doc_ids),
+                                  [[100, 0, 101, 1]])
+    np.testing.assert_array_equal(np.asarray(m.scores),
+                                  [[5.0, 9.0, 4.0, 8.0]])
+    # a single part passes through bit-identically (the common case)
+    solo = merge_partial_topk_by_rank([old], 3)
+    assert solo is old
+
+
+# ---------------------------------------------------------------------------
+# Re-epoching: fresh codebooks, stable global ids
+# ---------------------------------------------------------------------------
+
+def test_reepoch_tail_structure(corpus, timeline):
+    """Rebuilding the tail [1:] opens a second epoch holding those docs
+    under fresh codebooks; the truncated epoch keeps its generation
+    (fingerprint unchanged) and every global id is preserved."""
+    et = reepoch_tail(timeline, 1, corpus.doc_embs[200:600],
+                      corpus.doc_lens[200:600], key=jax.random.PRNGKey(1),
+                      n_centroids=64, kmeans_iters=2)
+    assert isinstance(et, EpochedTimeline) and len(et) == 2
+    assert et.epoch_offsets == (0, 200)
+    assert et.n_docs == 600 and et.n_generations == 2
+    assert et.epochs[0].fingerprints == timeline.fingerprints[:1]
+    new_meta = et.epochs[1].metas[0]
+    assert new_meta.n_docs == 400 and new_meta.drift == 1.0
+    assert new_meta.n_centroids == 64
+    fp = timeline_footprint(et)
+    assert fp["n_epochs"] == 2 and fp["n_docs"] == 600
+
+    # retrieval over the epoched timeline: rank-level merge puts the new
+    # epoch's rank-0 docs (global ids >= 200) first
+    q = jnp.asarray(corpus.queries[:8])
+    res = retrieve_timeline(et, q, CFG)
+    ids = np.asarray(res.doc_ids)
+    assert ids.shape == (8, CFG.k)
+    assert np.all((ids >= 0) & (ids < 600))
+    assert np.all(ids[:, 0] >= 200)
+    new_only = retrieve_timeline(et.epochs[1], q, CFG)
+    np.testing.assert_array_equal(ids[:, 0],
+                                  np.asarray(new_only.doc_ids)[:, 0] + 200)
+
+
+def test_reepoch_tail_full_rebuild(corpus, timeline):
+    """lo=0 replaces the whole epoch: one fresh-codebook epoch, no stub."""
+    et = reepoch_tail(timeline, 0, corpus.doc_embs[:600],
+                      corpus.doc_lens[:600], key=jax.random.PRNGKey(2),
+                      n_centroids=64, kmeans_iters=2)
+    assert len(et) == 1 and et.n_docs == 600
+    assert len(et.epochs[0]) == 1
+
+
+def test_reepoch_tail_validation(corpus, timeline):
+    key = jax.random.PRNGKey(3)
+    with pytest.raises(ValueError, match="out of range"):
+        reepoch_tail(timeline, 3, corpus.doc_embs[:0], corpus.doc_lens[:0],
+                     key=key)
+    with pytest.raises(ValueError, match="EXACTLY the tail"):
+        reepoch_tail(timeline, 1, corpus.doc_embs[200:500],
+                     corpus.doc_lens[200:500], key=key)
+    with pytest.raises(ValueError, match="do not match"):
+        reepoch_tail(timeline, 1, corpus.doc_embs[100:500],
+                     corpus.doc_lens[100:500], key=key)
+    with pytest.raises(ValueError, match="expected"):
+        reepoch_tail(timeline, 1, corpus.doc_embs[200:600, :, :64],
+                     corpus.doc_lens[200:600], key=key)
+
+
+# ---------------------------------------------------------------------------
+# The maintenance loop against a live service
+# ---------------------------------------------------------------------------
+
+def test_runner_merges_through_hot_swap(corpus, timeline):
+    """run_once applies the policy's merge via update_timeline: the swap
+    is immediate (no pending queries), results stay bit-exact vs the
+    uncached path, and the maintenance counters record it."""
+    svc = RetrievalService(timeline, CFG)
+    q = np.asarray(corpus.queries[:8])
+    svc.query(q)
+    runner = MaintenanceRunner(svc, MaintenancePolicy(merge_factor=2))
+    applied = runner.run_once()
+    assert [a.kind for a in applied] == ["merge"]
+    assert len(svc.timeline) == 2 and svc.timeline.n_docs == 600
+    assert svc.metrics.merges == 1 and svc.metrics.swaps == 1
+    assert svc.metrics.deferred_swaps == 0
+    res = svc.query(q)
+    ref = retrieve_timeline(svc.timeline, jnp.asarray(q), CFG)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(res.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(res.scores))
+    # nothing left to do
+    assert runner.run_once() == []
+
+
+def test_runner_requires_fetcher_for_reepoch(timeline):
+    svc = RetrievalService(_with_drift(timeline, 0, 9.0), CFG)
+    runner = MaintenanceRunner(
+        svc, MaintenancePolicy(merge_factor=4, max_frozen_generations=8))
+    with pytest.raises(RuntimeError, match="fetch_embeddings"):
+        runner.run_once()
+
+
+def test_drift_stream_end_to_end():
+    """The whole loop: an in-domain service grows an out-of-distribution
+    generation, the drift statistic crosses the threshold, the runner
+    re-epochs OFF the serving path, the swap defers behind a pending
+    ticket and installs at the flush boundary — and the untouched
+    generation's cache entries stay warm across it all."""
+    c = make_corpus(5, n_docs=256, cap=16, min_len=8, n_queries=4,
+                    n_topics=16, token_noise=0.05)
+    idx0, m0 = build_index(jax.random.PRNGKey(0), c.doc_embs[:128],
+                           c.doc_lens[:128], n_centroids=32, m=8, nbits=4,
+                           kmeans_iters=3)
+    # uniform random directions: nothing gen 0's centroids could fit
+    rng = np.random.default_rng(99)
+    ood_embs = rng.normal(size=(64, m0.cap, m0.d)).astype(np.float32)
+    ood_embs /= np.linalg.norm(ood_embs, axis=-1, keepdims=True)
+    ood_lens = np.full(64, m0.cap, np.int32)
+    all_embs = np.concatenate([c.doc_embs[:128], ood_embs])
+    all_lens = np.concatenate([c.doc_lens[:128], ood_lens])
+
+    svc = RetrievalService(ShardedTimeline.of((idx0, m0)), CFG)
+    q = np.asarray(c.queries)
+    before = svc.query(q)
+    assert np.asarray(before.doc_ids).max() < 128
+
+    svc.new_generation(ood_embs, ood_lens)
+    assert svc.timeline.metas[-1].drift > 1.5
+    svc.query(q)                              # cold fill for frozen gen 0
+    svc.query(q)                              # warm: gen 0 hits
+    hits0 = svc.cache.hits
+    assert hits0 >= 4
+
+    runner = MaintenanceRunner(
+        svc, MaintenancePolicy(),
+        fetch_embeddings=lambda a, b: (all_embs[a:b], all_lens[a:b]),
+        build_key=jax.random.PRNGKey(3),
+        build_kwargs=dict(n_centroids=32, kmeans_iters=3))
+
+    # a pending ticket forces the swap to stage rather than install
+    ticket = svc.submit(c.queries[0])
+    applied = runner.run_once()
+    assert [a.kind for a in applied] == ["reepoch"]
+    assert svc.metrics.reepochs == 1
+    assert len(svc.epoched) == 1              # still serving the old snap
+    assert len(svc.latest_timeline) == 2      # the re-epoched one is staged
+    assert not ticket.done
+
+    svc.flush()                               # serve the ticket, then swap
+    assert ticket.done
+    assert len(svc.epoched) == 2
+    assert svc.metrics.swaps >= 1 and svc.metrics.deferred_swaps == 1
+    new_epoch = svc.epoched.epochs[-1]
+    assert new_epoch.metas[0].drift == 1.0 and new_epoch.n_docs == 64
+    # drift cured: the policy is satisfied
+    assert runner.run_once() == []
+
+    after = svc.query(q)
+    ids = np.asarray(after.doc_ids)
+    assert ids.shape == (4, CFG.k) and np.all((ids >= 0) & (ids < 192))
+    # gen 0's fingerprint never changed: its entries survived the swap
+    assert svc.cache.hits >= hits0 + 4

@@ -217,6 +217,72 @@ def test_compact_masked_terms_exact_when_kept_fit(seed):
 
 
 # ---------------------------------------------------------------------------
+# Serving ResultCache: byte accounting + LRU order under arbitrary churn
+# ---------------------------------------------------------------------------
+
+_CACHE_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 5),
+                  st.sampled_from([2, 8, 16, 40])),
+        st.tuples(st.just("get"), st.integers(0, 5)),
+        st.tuples(st.just("clear")),
+    ), min_size=1, max_size=60)
+
+
+@settings(**SETTINGS)
+@given(_CACHE_OPS)
+def test_result_cache_accounting_matches_model(ops):
+    """Under ANY interleaving of put / re-put-same-key / get / clear,
+    ``cache.bytes`` equals the sum of resident entry nbytes, the entry
+    order is true LRU (gets refresh recency, re-puts move to MRU), an
+    oversized put is rejected WITHOUT disturbing the existing entry at
+    that key, and hits return exactly the latest payload stored."""
+    from collections import OrderedDict
+
+    from repro.serving.cache import ResultCache
+
+    budget = 256                     # a size-40 entry (320 B) is oversized
+    cache = ResultCache(max_bytes=budget)
+    model: "OrderedDict[tuple, tuple[int, int]]" = OrderedDict()
+    stamp = 0
+    for op in ops:
+        if op[0] == "put":
+            _, ki, n = op
+            stamp += 1
+            key = (f"q{ki}", "g", "c")
+            scores = np.full(n, float(stamp), np.float32)
+            ids = np.arange(n, dtype=np.int32) + stamp
+            cache.put(key, scores, ids)
+            nbytes = scores.nbytes + ids.nbytes
+            if nbytes <= budget:     # oversized: no change, old key survives
+                model.pop(key, None)
+                model[key] = (nbytes, stamp)
+                while sum(v[0] for v in model.values()) > budget:
+                    model.popitem(last=False)
+        elif op[0] == "get":
+            key = (f"q{op[1]}", "g", "c")
+            got = cache.get(key)
+            if key in model:
+                model.move_to_end(key)
+                nb, s = model[key]
+                n = nb // 8
+                np.testing.assert_array_equal(
+                    got[0], np.full(n, float(s), np.float32))
+                np.testing.assert_array_equal(
+                    got[1], np.arange(n, dtype=np.int32) + s)
+            else:
+                assert got is None
+        else:
+            cache.clear()
+            model.clear()
+        assert cache.bytes == sum(v[0] for v in model.values())
+        assert cache.bytes == sum(e.nbytes
+                                  for e in cache._entries.values())
+        assert list(cache._entries.keys()) == list(model.keys())
+        assert cache.bytes <= cache.max_bytes
+
+
+# ---------------------------------------------------------------------------
 # MoE dispatch modes: grouped (GShard) == capacity-gather at ample capacity
 # ---------------------------------------------------------------------------
 

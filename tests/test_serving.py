@@ -312,6 +312,45 @@ def test_batcher_size_and_deadline_triggers(serve_corpus, base_timeline):
     assert mb.due()
 
 
+def test_batcher_overflow_keeps_original_deadline(serve_corpus):
+    """A query left behind when a full max_batch drains keeps its ORIGINAL
+    submit time: the deadline is a per-query promise, so it must come due
+    max_delay_s after ITS submit — not max_delay_s after the drain (which
+    would let an overflow query wait up to twice the promise)."""
+    c = serve_corpus
+    now = [0.0]
+    mb = MicroBatcher(n_q=32, max_batch=2, max_delay_s=0.01,
+                      clock=lambda: now[0])
+    for i in range(3):                       # all submitted at t=0
+        mb.submit(c.queries[i])
+    now[0] = 0.008
+    q, _, _ = mb.drain()                     # full batch of 2 leaves at t=8ms
+    assert q.shape[0] == 2 and len(mb) == 1
+    now[0] = 0.012                           # 12ms after the overflow submit
+    assert mb.due()                          # NOT re-anchored to the drain
+    # and the deadline was not due early either
+    mb.drain()
+    mb.submit(c.queries[0])
+    now[0] = 0.0215
+    assert not mb.due()
+    now[0] = 0.023
+    assert mb.due()
+
+
+def test_query_empty_batch_raises_actionable(base_timeline):
+    """A zero-length batch fails at the service entry point with an
+    actionable message, not numpy's bare 'need at least one array to
+    stack' from deep inside the pad loop."""
+    svc = RetrievalService(base_timeline, CFG)
+    with pytest.raises(ValueError, match="empty query batch"):
+        svc.query(np.zeros((0, 32, 128), np.float32))
+    with pytest.raises(ValueError, match="empty query batch"):
+        svc._execute(np.zeros((0, 32, 128), np.float32),
+                     np.zeros((0, 32), bool))
+    with pytest.raises(ValueError, match="expected"):
+        svc.query(np.zeros((32, 128), np.float32))   # missing batch dim
+
+
 # ---------------------------------------------------------------------------
 # Metrics + footprint accounting
 # ---------------------------------------------------------------------------

@@ -439,6 +439,29 @@ def test_timeline_small_final_generation(stream_corpus, gen0):
         engine.adapt_config_to_corpus(CFG, CFG.k - 1)
 
 
+def test_timeline_compact_cap_clamped_to_generation_cap(stream_corpus,
+                                                        timeline):
+    """Regression: candidate_mode=compact with ``compact_cap`` above a
+    generation's token cap used to die in ``lax.top_k`` over the token
+    axis ("k argument to top_k must be no larger than minor dimension");
+    ``adapt_config_to_corpus`` now clamps it per generation. The clamp is
+    lossless — a buffer covering every token reproduces Eq. 6 exactly, so
+    the result is bit-equal to ``compact_cap=None``."""
+    base = dataclasses.replace(CFG, candidate_mode="compact", cand_cap=600)
+    over = dataclasses.replace(base, compact_cap=40)      # > cap=24
+    q = jnp.asarray(stream_corpus.queries[:8])
+    a = retrieve_timeline(timeline, q, over)              # crashed pre-fix
+    b = retrieve_timeline(timeline, q, base)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    # clamp semantics: shrinks to cap, preserves th_r, leaves None alone,
+    # and without a cap (monolithic retrieve path) nothing changes
+    g = engine.adapt_config_to_corpus(over, 200, 24)
+    assert g.compact_cap == 24 and g.th_r == over.th_r
+    assert engine.adapt_config_to_corpus(base, 200, 24).compact_cap is None
+    assert engine.adapt_config_to_corpus(over, 200, None).compact_cap == 40
+
+
 def test_timeline_rejects_mismatched_generations(stream_corpus, gen0):
     idx0, m0 = gen0
     bad_meta = dataclasses.replace(m0, n_centroids=m0.n_centroids * 2)
