@@ -13,6 +13,14 @@ fused-vs-unfused megakernel comparisons at both ends of the pipeline:
     XLA-compiled jnp path; the ``*_kernels``/``*_fused`` rows run the Pallas
     kernels in the session's kernel mode (interpret on CPU, Mosaic on TPU —
     only the TPU numbers are launch-overhead-faithful).
+
+Plus the batch sweep (batch_sweep rows): full fused ``retrieve`` on the
+batch-native megakernels (ONE launch per phase pair for the whole batch,
+``cfg.batched_kernels``) against the per-query vmap path at B in {1, 4, 16}
+— the batched-vs-vmap speedup is the perf signal that replaces
+interpret-mode fused-vs-unfused guesses (the two paths are bit-exact, so
+the ratio is pure launch/operand-reload amortization). Per-kernel rooflines
+for the same sweep live in ``benchmarks/roofline.py``.
 """
 from __future__ import annotations
 
@@ -47,15 +55,18 @@ def run() -> list[str]:
 
         ecfg = EngineConfig(k=k, n_filter=max(512, 2 * k), n_docs=max(64, k),
                             th=TH, th_r=TH_R)
-        cs, bits, bmap = emvb.phase1_candidates(idx, q, ecfg)
-        sel1 = emvb.phase2_prefilter(idx, bits, bmap, ecfg)
-        sel2e = emvb.phase3_centroid_interaction(idx, cs, sel1, ecfg)
-        e1 = time_fn(lambda: emvb.phase1_candidates(idx, q, ecfg))
-        e2 = time_fn(lambda: emvb.phase2_prefilter(idx, bits, bmap, ecfg))
+        qb = q[None]                         # the unified convention batches
+        cs, bits, bmap = emvb.phase1_candidates(idx, qb, ecfg)
+        sel1 = emvb.phase2_prefilter(idx, qb, ecfg, bits=bits, bitmap=bmap)
+        sel2e = emvb.phase3_centroid_interaction(idx, qb, ecfg, cs=cs,
+                                                 sel1=sel1)
+        e1 = time_fn(lambda: emvb.phase1_candidates(idx, qb, ecfg))
+        e2 = time_fn(lambda: emvb.phase2_prefilter(idx, qb, ecfg, bits=bits,
+                                                   bitmap=bmap))
         e3 = time_fn(lambda: emvb.phase3_centroid_interaction(
-            idx, cs, sel1, ecfg))
+            idx, qb, ecfg, cs=cs, sel1=sel1))
         e4 = time_fn(lambda: emvb.phase4_late_interaction(
-            idx, q, cs, sel2e, ecfg))
+            idx, qb, ecfg, cs=cs, sel2=sel2e))
         for name, t in (("candidates", e1), ("bitvector_prefilter", e2),
                         ("centroid_interaction", e3), ("pq_maxsim", e4)):
             rows.append(row(f"fig1,emvb,k={k},{name}", t * 1e6))
@@ -65,8 +76,8 @@ def run() -> list[str]:
         fcfg = dataclasses.replace(ecfg, use_kernels=True,
                                    fused_prefilter=True)
         ucfg = dataclasses.replace(fcfg, fused_prefilter=False)
-        ef = time_fn(lambda: emvb.phase12_prefilter(idx, q, fcfg))
-        eu = time_fn(lambda: emvb.phase12_prefilter(idx, q, ucfg))
+        ef = time_fn(lambda: emvb.phase12_prefilter(idx, qb, fcfg))
+        eu = time_fn(lambda: emvb.phase12_prefilter(idx, qb, ucfg))
         rows.append(row(f"fig1,emvb,k={k},p12_unfused_ref", (e1 + e2) * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p12_unfused_kernels", eu * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p12_fused", ef * 1e6))
@@ -77,14 +88,42 @@ def run() -> list[str]:
                                   fused_late_interaction=True)
         u34 = dataclasses.replace(f34, fused_late_interaction=False)
         ef34 = time_fn(lambda: emvb.phase34_late_interaction(
-            idx, q, cs, sel1, f34))
+            idx, qb, f34, cs=cs, sel1=sel1))
         eu34 = time_fn(lambda: emvb.phase34_late_interaction(
-            idx, q, cs, sel1, u34))
+            idx, qb, u34, cs=cs, sel1=sel1))
         rows.append(row(f"fig1,emvb,k={k},p34_unfused_ref", (e3 + e4) * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p34_unfused_kernels", eu34 * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p34_fused", ef34 * 1e6))
         rows.append(row(f"fig1,emvb,k={k},p34_fused_speedup_vs_kernels", 0.0,
                         f"x{eu34 / ef34:.2f}"))
+    rows += batch_sweep(idx, np.asarray(corpus.queries))
+    return rows
+
+
+def batch_sweep(idx, queries: np.ndarray,
+                batch_sizes: tuple[int, ...] = (1, 4, 16)) -> list[str]:
+    """Fused retrieve, batch-native megakernels vs per-query vmap, per B.
+
+    Bit-exact by the engine contract, so the ratio isolates what batching
+    buys: ONE kernel launch per phase pair with the index-resident operands
+    loaded once, vs B launches each re-reading them. B=1 rides the vmap
+    path by design (the dispatch falls back), so its speedup is ~x1.
+    """
+    bcfg = EngineConfig(k=10, n_filter=512, n_docs=64, th=TH, th_r=TH_R,
+                        use_kernels=True, fused_prefilter=True,
+                        fused_late_interaction=True)
+    vcfg = dataclasses.replace(bcfg, batched_kernels=False)
+    rows = []
+    for b in batch_sizes:
+        qb = np.asarray(queries[:b])
+        tb = time_fn(lambda: emvb.retrieve(idx, qb, bcfg), iters=3)
+        tv = time_fn(lambda: emvb.retrieve(idx, qb, vcfg), iters=3)
+        rows.append(row(f"fig1,batch_sweep,B={b},retrieve_batched", tb * 1e6,
+                        f"per_q_us={tb / b * 1e6:.1f}"))
+        rows.append(row(f"fig1,batch_sweep,B={b},retrieve_vmap", tv * 1e6,
+                        f"per_q_us={tv / b * 1e6:.1f}"))
+        rows.append(row(f"fig1,batch_sweep,B={b},batched_speedup", 0.0,
+                        f"x{tv / tb:.2f}"))
     return rows
 
 

@@ -38,24 +38,22 @@ def run() -> list[str]:
     rows.append(row("fig5,eq5_baseline", 0.0, f"mrr10={base_mrr:.4f},"
                     "terms=100%"))
 
-    # phase-1..3 selection per query (the docs whose terms phase 4 scores)
+    # phase-1..3 selection (the docs whose terms phase 4 scores) — one
+    # batched pass through the unified entry points
     token_mask = idx.token_mask()
-    sel2_per_q, cs_per_q = [], []
-    for b in range(min(8, len(queries))):
-        q = jnp.asarray(queries[b])
-        cs, bits, bmap = emvb.phase1_candidates(idx, q, base_cfg)
-        sel1 = emvb.phase2_prefilter(idx, bits, bmap, base_cfg)
-        sel2 = emvb.phase3_centroid_interaction(idx, cs, sel1, base_cfg)
-        sel2_per_q.append(sel2)
-        cs_per_q.append(cs)
+    qb = jnp.asarray(queries[:min(8, len(queries))])
+    cs_per_q, bits_b, bmap_b = emvb.phase1_candidates(idx, qb, base_cfg)
+    sel1_b = emvb.phase2_prefilter(idx, qb, base_cfg, bits=bits_b,
+                                   bitmap=bmap_b)
+    sel2_per_q = emvb.phase3_centroid_interaction(idx, qb, base_cfg,
+                                                  cs=cs_per_q, sel1=sel1_b)
 
     # p34 tail latency in the two filter modes (Eq. 5 all-terms vs Eq. 6 at
     # the operating point), one representative query each — every th_r value
     # would recompile the whole phase-3/4 stack per config for no extra
     # signal (the filter mode, not the threshold value, changes the math)
-    q0 = jnp.asarray(queries[0])
-    cs0, bits0, bmap0 = emvb.phase1_candidates(idx, q0, base_cfg)
-    sel1_0 = emvb.phase2_prefilter(idx, bits0, bmap0, base_cfg)
+    qb0 = qb[:1]
+    cs0, sel1_0 = cs_per_q[:1], sel1_b[:1]
 
     def p34_rows(th_r):
         rcfg = dataclasses.replace(base_cfg, th_r=th_r)
@@ -66,7 +64,7 @@ def run() -> list[str]:
         for name, cfg in (("unfused_ref", rcfg), ("unfused_kernels", ucfg),
                           ("fused", fcfg)):
             t = time_fn(lambda: emvb.phase34_late_interaction(
-                idx, q0, cs0, sel1_0, cfg))
+                idx, qb0, cfg, cs=cs0, sel1=sel1_0))
             rows.append(row(f"fig5,p34_{name},{tag}", t * 1e6))
 
     p34_rows(None)

@@ -4,14 +4,17 @@ report. ``PYTHONPATH=src python -m benchmarks.run [name ...]``.
 Emits ``name,us_per_call,derived`` CSV rows (absolute times are single-core
 CPU; the EMVB/PLAID *ratios* are the reproduction target).
 
-``--smoke`` runs the fast default subset (fig1: the phase breakdown plus the
-fused-vs-unfused megakernel rows; fig6: the query-pruning latency/MRR sweep;
-fig7: latency + MRR@10 as the corpus grows 1 -> N streaming generations;
-fig8: serving-cache throughput/hit-rate, cold vs warm vs uncached)
-and writes the rows to ``BENCH_smoke.json`` so CI can upload the perf
-trajectory as a per-push artifact; ``--json PATH`` does the same for any
-suite selection. BENCH_*.json is gitignored by design — machine-dependent
-numbers belong in artifacts, not history.
+``--smoke`` runs the fast default subset (fig1: the phase breakdown, the
+fused-vs-unfused megakernel rows and the batched-vs-vmap batch sweep; fig6:
+the query-pruning latency/MRR sweep; fig7: latency + MRR@10 as the corpus
+grows 1 -> N streaming generations; fig8: serving-cache throughput/hit-rate,
+cold vs warm vs uncached; roofline: per-megakernel batched-vs-vmap wall time
++ analytic arithmetic intensity at B in {1,4,16,64}) and writes the rows to
+``BENCH_smoke.json`` — with the roofline suite split out to its own
+``BENCH_roofline.json`` so the kernel-lane trajectory is a separate CI
+artifact — ``--json PATH`` does the same for any suite selection.
+BENCH_*.json is gitignored by design — machine-dependent numbers belong in
+artifacts, not history.
 """
 
 import argparse
@@ -36,7 +39,7 @@ SUITES = {
     "fig8": fig8_serving,
     "roofline": roofline,
 }
-SMOKE_SUITES = ["fig1", "fig6", "fig7", "fig8"]
+SMOKE_SUITES = ["fig1", "fig6", "fig7", "fig8", "roofline"]
 
 
 def main() -> None:
@@ -72,17 +75,28 @@ def main() -> None:
     if json_path:
         import jax
 
+        meta = {
+            "unix_time": int(time.time()),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "argv": sys.argv[1:],
+        }
+        # the roofline suite ships as its own artifact (the kernel-lane
+        # perf trajectory) next to the figure smoke rows
+        if args.smoke and "roofline" in results:
+            roof = {"suites": {"roofline": results.pop("roofline")},
+                    "suite_seconds":
+                        {"roofline": round(timings.pop("roofline"), 1)},
+                    "meta": meta}
+            with open("BENCH_roofline.json", "w") as f:
+                json.dump(roof, f, indent=1)
+            print("# wrote BENCH_roofline.json", flush=True)
         payload = {
             "suites": results,
             "suite_seconds": {k: round(v, 1) for k, v in timings.items()},
-            "meta": {
-                "unix_time": int(time.time()),
-                "jax": jax.__version__,
-                "backend": jax.default_backend(),
-                "python": platform.python_version(),
-                "machine": platform.machine(),
-                "argv": sys.argv[1:],
-            },
+            "meta": meta,
         }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=1)

@@ -28,15 +28,20 @@ from repro.data.synthetic import make_corpus
 from repro.serving import RetrievalService
 
 
-def main() -> None:
-    corpus = make_corpus(0, n_docs=2048, cap=48, n_queries=64)
-    cfg = EngineConfig(k=10, n_filter=256, n_docs=64, th=0.2, th_r=0.3)
-    per = 512
+def main(n_docs: int = 2048, n_centroids: int = 512,
+         n_queries: int = 64) -> None:
+    """Sizes are parameters so the tier-1 examples smoke test
+    (tests/test_examples.py) can run the same code on a tiny corpus."""
+    corpus = make_corpus(0, n_docs=n_docs, cap=48, n_queries=n_queries)
+    per = n_docs // 4                     # generation size
+    # selection budgets clamp to the generation size on tiny corpora
+    cfg = EngineConfig(k=10, n_filter=min(256, per), n_docs=min(64, per),
+                       th=0.2, th_r=0.3)
 
     print("1) stream 3 generations and stand up the service ...")
     gen0, meta0 = build_index(
         jax.random.PRNGKey(0), corpus.doc_embs[:per], corpus.doc_lens[:per],
-        n_centroids=512, m=16, nbits=8, kmeans_iters=4)
+        n_centroids=n_centroids, m=16, nbits=8, kmeans_iters=4)
     timeline = ShardedTimeline.of((gen0, meta0))
     for g in range(1, 3):
         lo = g * per
@@ -44,10 +49,11 @@ def main() -> None:
             gen0, meta0, corpus.doc_embs[lo:lo + per],
             corpus.doc_lens[lo:lo + per]))
     service = RetrievalService(timeline, cfg)
-    queries = corpus.queries[:16]
+    nq = min(16, n_queries - 2)
+    queries = corpus.queries[:nq]
 
     print("2) cold -> warm on repeated queries ...")
-    ref = retrieve_timeline(timeline, corpus.queries[:16], cfg)
+    ref = retrieve_timeline(timeline, corpus.queries[:nq], cfg)
     t0 = time.perf_counter()
     cold = service.query(queries)
     t_cold = time.perf_counter() - t0
@@ -63,23 +69,24 @@ def main() -> None:
           f"(ids AND scores, both passes): {exact}")
 
     print("3) micro-batch heterogeneous queries via submit/flush ...")
-    short = service.submit(corpus.queries[20][:12])     # 12-term query
-    full = service.submit(corpus.queries[21])           # all 32 terms
+    qa = min(20, n_queries - 2)           # two queries past the warm set
+    short = service.submit(corpus.queries[qa][:12])     # 12-term query
+    full = service.submit(corpus.queries[qa + 1])       # all 32 terms
     service.flush()
-    ref12 = retrieve_timeline(timeline, corpus.queries[20:21, :12], cfg)
+    ref12 = retrieve_timeline(timeline, corpus.queries[qa:qa + 1, :12], cfg)
     print(f"   12-term ticket == unpadded-prefix retrieval: "
           f"{np.array_equal(short.result()[1], np.asarray(ref12.doc_ids)[0])}"
           f"; full-length ticket done: {full.done}")
 
     print("4) mutate: add_passages on the open generation, then freeze ...")
     h0 = service.cache.hits
-    service.add_passages(corpus.doc_embs[3 * per:3 * per + 256],
-                         corpus.doc_lens[3 * per:3 * per + 256])
+    grow = 3 * per + per // 2             # grow by half a slice, then freeze
+    service.add_passages(corpus.doc_embs[3 * per:grow],
+                         corpus.doc_lens[3 * per:grow])
     service.query(queries)      # old gens hit, grown gen recomputed
     print(f"   after add_passages: {service.cache.hits - h0} cache hits "
           "(old generations), grown generation recomputed fresh")
-    service.new_generation(corpus.doc_embs[3 * per + 256:],
-                           corpus.doc_lens[3 * per + 256:])
+    service.new_generation(corpus.doc_embs[grow:], corpus.doc_lens[grow:])
     service.query(queries)      # previously-open gen now caching too
     service.query(queries)
     print(f"   after new_generation: {len(service.timeline)} generations, "

@@ -24,16 +24,21 @@ from repro.data.synthetic import make_corpus, mrr_at_k  # noqa: E402
 from repro.launch.serve import make_shardmap_retriever, shard_index  # noqa: E402
 
 
-def main() -> None:
+def main(n_docs: int = 2048, n_centroids: int = 512,
+         n_queries: int = 32) -> None:
+    """Sizes are parameters so the tier-1 examples smoke test
+    (tests/test_examples.py) can run the same code on a tiny corpus."""
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}")
-    corpus = make_corpus(3, n_docs=2048, cap=32, n_queries=32)
+    corpus = make_corpus(3, n_docs=n_docs, cap=32, n_queries=n_queries)
     index, _ = build_index(jax.random.PRNGKey(0), corpus.doc_embs,
-                           corpus.doc_lens, n_centroids=512, m=8,
+                           corpus.doc_lens, n_centroids=n_centroids, m=8,
                            kmeans_iters=4)
 
     mesh = Mesh(np.array(jax.devices()).reshape(n_dev), ("shard",))
-    cfg = EngineConfig(k=10, n_filter=128, n_docs=32, th=0.2, th_r=0.3)
+    # selection budgets clamp to the per-device shard size on tiny corpora
+    nf, nd = min(128, n_docs // n_dev), min(32, n_docs // n_dev)
+    cfg = EngineConfig(k=10, n_filter=nf, n_docs=nd, th=0.2, th_r=0.3)
 
     print("sharding index across devices (local IVFs, two-level top-k) ...")
     stacked = shard_index(index, n_dev)
@@ -53,7 +58,7 @@ def main() -> None:
 
     # single-device reference on the unsharded index
     ref = engine.retrieve(index, queries, EngineConfig(
-        k=10, n_filter=128 * n_dev, n_docs=32 * n_dev, th=0.2, th_r=0.3))
+        k=10, n_filter=nf * n_dev, n_docs=nd * n_dev, th=0.2, th_r=0.3))
     ids_ref = np.asarray(ref.doc_ids)
 
     mrr_s = mrr_at_k(ids_sharded, corpus.gt_doc)

@@ -25,17 +25,22 @@ from repro.core import (EngineConfig, ShardedTimeline, add_passages,
 from repro.data.synthetic import make_corpus, mrr_at_k
 
 
-def main() -> None:
-    corpus = make_corpus(0, n_docs=2048, cap=48, n_queries=64)
+def main(n_docs: int = 2048, n_centroids: int = 512,
+         n_queries: int = 64) -> None:
+    """Sizes are parameters so the tier-1 examples smoke test
+    (tests/test_examples.py) can run the same code on a tiny corpus."""
+    corpus = make_corpus(0, n_docs=n_docs, cap=48, n_queries=n_queries)
     queries = jnp.asarray(corpus.queries)
-    cfg = EngineConfig(k=10, n_filter=256, n_docs=64, th=0.2, th_r=0.3)
-    per = 512
+    per = n_docs // 4                     # the corpus arrives in 4 slices
+    # selection budgets clamp to the slice size on tiny corpora
+    cfg = EngineConfig(k=10, n_filter=min(256, per), n_docs=min(64, per),
+                       th=0.2, th_r=0.3)
 
     print("1) build generation 0 over the first slice ...")
     t0 = time.time()
     gen0, meta0 = build_index(
         jax.random.PRNGKey(0), corpus.doc_embs[:per], corpus.doc_lens[:per],
-        n_centroids=512, m=16, nbits=8, kmeans_iters=4)
+        n_centroids=n_centroids, m=16, nbits=8, kmeans_iters=4)
     print(f"   {meta0.n_docs} docs, {meta0.n_centroids} centroids "
           f"in {time.time() - t0:.1f}s "
           f"(train_quant_mse={meta0.train_quant_mse:.3f})")

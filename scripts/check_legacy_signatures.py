@@ -1,0 +1,86 @@
+"""Forbid new in-tree callers of the deprecated pre-batch phase signatures.
+
+PR 7 unified the six phase entry points on one convention —
+``phaseN(index, queries, cfg, *, q_mask=None, ...)`` over batched queries,
+intermediates (``bits``/``bitmap``/``cs``/``sel1``/``sel2``) keyword-only.
+The old single-query signatures (config trailing the positional
+intermediates, loose positional ``q_mask``) survive as DeprecationWarning
+shims for external callers, but nothing in this tree may use them.
+
+The enforceable static rule: a call to any of the six entry points with
+MORE THAN three positional arguments is legacy — every old form threads at
+least one intermediate or the mask positionally past ``(index, queries,
+cfg)``, and the new convention admits exactly those three positionals.
+(The one legacy form this cannot see — three positionals with a 2-D query
+— is covered dynamically: the test suite runs the engine paths with
+DeprecationWarnings escalated.)
+
+Usage: python scripts/check_legacy_signatures.py [root ...]
+Exits 1 listing offending call sites, 0 when clean.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ENTRY_POINTS = frozenset({
+    "phase1_candidates", "phase2_prefilter", "phase12_prefilter",
+    "phase3_centroid_interaction", "phase4_late_interaction",
+    "phase34_late_interaction",
+})
+MAX_POSITIONAL = 3          # (index, queries, cfg)
+DEFAULT_ROOTS = ("src", "tests", "benchmarks", "examples")
+# the shims themselves and their direct tests legitimately exercise the
+# legacy forms
+ALLOWED = {"src/repro/core/engine.py", "tests/test_batched_kernels.py"}
+
+
+def _called_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def check_file(path: pathlib.Path, repo: pathlib.Path) -> list[str]:
+    rel = path.relative_to(repo).as_posix()
+    if rel in ALLOWED:
+        return []
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno}: syntax error while scanning: {e.msg}"]
+    bad = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _called_name(node)
+        if name in ENTRY_POINTS and len(node.args) > MAX_POSITIONAL:
+            bad.append(
+                f"{rel}:{node.lineno}: {name} called with {len(node.args)} "
+                f"positional args — the unified signature takes at most "
+                f"{MAX_POSITIONAL} ((index, queries, cfg)); pass "
+                "intermediates/q_mask as keywords")
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    roots = argv[1:] or [str(repo / r) for r in DEFAULT_ROOTS]
+    offenders: list[str] = []
+    for root in roots:
+        for path in sorted(pathlib.Path(root).rglob("*.py")):
+            offenders += check_file(path, repo)
+    for line in offenders:
+        print(line)
+    if offenders:
+        print(f"\n{len(offenders)} legacy phase-signature call site(s); "
+              "see docs/ARCHITECTURE.md §entry points", file=sys.stderr)
+    return 1 if offenders else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

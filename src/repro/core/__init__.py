@@ -1,6 +1,7 @@
 """EMVB core — the paper's contribution as composable JAX modules."""
 from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual, store  # noqa: F401
-from .engine import EngineConfig, prune_queries, retrieve, retrieve_timeline  # noqa: F401
+from .engine import (EngineConfig, QueryBatch, RetrievalResult,  # noqa: F401
+                     prune_queries, retrieve, retrieve_timeline)
 from .index import PackedIndex, IndexMeta, build_index, bytes_per_embedding  # noqa: F401
 from .plaid import PlaidConfig  # noqa: F401
 from .store import (EpochedTimeline, ShardedTimeline, add_passages,  # noqa: F401

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import TYPE_CHECKING, NamedTuple, Optional
 
 import jax
@@ -84,6 +85,14 @@ class EngineConfig:
     fused_late_interaction: bool = True
     # Pallas interpret mode (CPU validation) vs compiled Mosaic (TPU).
     kernel_interpret: bool = True
+    # With use_kernels + a fused megakernel: run each micro-batch as ONE
+    # batch-native kernel launch (kernels/prefilter.py::prefilter_batched,
+    # kernels/pqinter.py::pqinter_batched) that loads the index-resident
+    # operands into VMEM once and iterates queries in-kernel, instead of
+    # ``jax.vmap`` over single-query launches. Bit-exact to the vmap path
+    # (ids AND score bits, tie order); B = 1 and non-kernel configs always
+    # take the vmap path.
+    batched_kernels: bool = True
     # 'score_all' evaluates F on every (local) doc masked by the candidate
     # bitmap (TPU-friendly); 'compact' gathers candidates into a fixed buffer
     # of size cand_cap first (closer to the paper's CPU loop).
@@ -147,6 +156,34 @@ class RetrievalResult(NamedTuple):
 
     scores: jax.Array   # (B, k)
     doc_ids: jax.Array  # (B, k) int32
+
+
+class QueryBatch(NamedTuple):
+    """A batch of queries with its optional per-term mask — the one value
+    that travels everywhere ``q`` + ``q_mask`` used to travel as parallel
+    loose arrays (engine entry points, the serving batcher, the launch/serve
+    plan factories).
+
+    ``q`` is (B, n_q, d); ``q_mask`` is (B, n_q) bool (True = live term) or
+    None for all-live. A plain array still works wherever a QueryBatch is
+    accepted — ``QueryBatch(q)`` and ``q`` are interchangeable inputs.
+    """
+
+    q: jax.Array                       # (B, n_q, d)
+    q_mask: Optional[jax.Array] = None  # (B, n_q) bool, None = all live
+
+
+def _as_query_batch(queries, q_masks=None) -> QueryBatch:
+    """Normalize ``queries`` (array or QueryBatch) + optional loose
+    ``q_masks`` into one QueryBatch; reject conflicting masks."""
+    if isinstance(queries, QueryBatch):
+        if q_masks is not None and queries.q_mask is not None:
+            raise ValueError(
+                "got a q_mask both inside the QueryBatch and as a separate "
+                "argument — pass exactly one")
+        return QueryBatch(queries.q,
+                          queries.q_mask if q_masks is None else q_masks)
+    return QueryBatch(queries, q_masks)
 
 
 def _kops(cfg: EngineConfig):
@@ -364,89 +401,342 @@ def _retrieve_one(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
     return RetrievalResult(top_scores, top_ids)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def retrieve(index: PackedIndex, queries: jax.Array, cfg: EngineConfig,
-             q_masks: Optional[jax.Array] = None) -> RetrievalResult:
-    """queries (B, n_q, d) -> top-k (scores, ids) per query.
+# ---------------------------------------------------------------------------
+# Batched phase helpers — ONE launch per micro-batch on the batch-native
+# megakernels when ``cfg.batched_kernels`` applies, ``jax.vmap`` over the
+# single-query helpers otherwise. The pre-kernel math (centroid scores,
+# probes, bitmaps, gathers, LUTs) is vmapped over the SAME single-query
+# functions in both branches, so the two paths are bit-identical by
+# construction everywhere but the (bit-exact) kernel swap.
+# ---------------------------------------------------------------------------
 
-    q_masks : optional (B, n_q) bool — True for live query terms. Masked
-    (zero-padded / pruned) terms are excluded from every phase: they pack no
-    bit into the Eq. 4 bit vectors, probe no IVF lists, contribute no row to
-    S̄ and no MaxSim term to Eq. 5/6. Retrieval of a padded query with its
-    mask is bit-exact to retrieval of the unpadded prefix; omitting the mask
-    (or passing all-True) reproduces the unmasked pipeline bit for bit.
-    """
-    token_mask = index.token_mask()
+def _vmap1(fn, queries, q_masks):
+    """vmap ``fn(q, q_mask)`` over the batch, eliding a ``None`` mask."""
     if q_masks is None:
-        return jax.vmap(
-            lambda q: _retrieve_one(q, index, token_mask, cfg))(queries)
-    return jax.vmap(
-        lambda q, m: _retrieve_one(q, index, token_mask, cfg, m)
-    )(queries, q_masks)
+        return jax.vmap(lambda q: fn(q, None))(queries)
+    return jax.vmap(fn)(queries, q_masks)
+
+
+def _phase12_batch(index: PackedIndex, token_mask: jax.Array,
+                   queries: jax.Array, cfg: EngineConfig,
+                   q_masks: Optional[jax.Array] = None):
+    """Batched phases 1-2 -> (cs (B, n_q, n_c), sel1 (B, n_filter))."""
+    kops = _kops(cfg)
+    nb = queries.shape[0]
+    if (kops is None or not cfg.fused_prefilter or not cfg.batched_kernels
+            or nb <= 1):
+        return _vmap1(
+            lambda q, m: _phase12(q, index, token_mask, cfg, m),
+            queries, q_masks)
+    cs = jax.vmap(
+        lambda q: centroid_scores(q, index.centroids, cfg.cs_dtype))(queries)
+    probe_ids = _vmap1(
+        lambda c, m: bitvector.masked_topk_centroids(c, cfg.th, cfg.nprobe,
+                                                     m), cs, q_masks)
+    bitmap = jax.vmap(
+        lambda p: candidate_bitmap(index.ivf, index.ivf_lens, p,
+                                   index.codes.shape[0]))(probe_ids)
+    if cfg.candidate_mode == "compact":
+        cand_ids, cand_valid = jax.vmap(
+            lambda b: _compact_candidates(b, cfg))(bitmap)
+        c_codes = jnp.take(index.codes, cand_ids, axis=0)  # (B, cand_cap, cap)
+        c_mask = jnp.take(token_mask, cand_ids, axis=0)
+        _, sel1_local, _ = kops.prefilter_batched(
+            cs, cfg.th, c_codes, c_mask, cand_valid, cfg.n_filter, q_masks,
+            interpret=cfg.kernel_interpret)
+        sel1 = jnp.take_along_axis(cand_ids, sel1_local, axis=1)
+    else:
+        _, sel1, _ = kops.prefilter_batched(
+            cs, cfg.th, index.codes, token_mask, bitmap, cfg.n_filter,
+            q_masks, interpret=cfg.kernel_interpret)
+    return cs, sel1.astype(jnp.int32)
+
+
+def _phase34_batch(index: PackedIndex, token_mask: jax.Array,
+                   queries: jax.Array, cs: jax.Array, sel1: jax.Array,
+                   cfg: EngineConfig,
+                   q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+    """Batched phases 3-4 -> RetrievalResult with (B, k) scores/ids."""
+    kops = _kops(cfg)
+    nb = queries.shape[0]
+    if (kops is None or not cfg.fused_late_interaction
+            or not cfg.batched_kernels or nb <= 1):
+        if q_masks is None:
+            scores, ids = jax.vmap(
+                lambda q, c, s: _phase34(index, token_mask, q, c, s, cfg)
+            )(queries, cs, sel1)
+        else:
+            scores, ids = jax.vmap(
+                lambda q, c, s, m: _phase34(index, token_mask, q, c, s, cfg,
+                                            m))(queries, cs, sel1, q_masks)
+        return RetrievalResult(scores, ids)
+    q_rot = jax.vmap(lambda q: q @ index.opq_rotation)(queries)
+    lut = jax.vmap(lambda qr: build_lut(qr, index.pq))(q_rot)
+    s1_codes = jnp.take(index.codes, sel1, axis=0)           # (B, nf, cap)
+    s1_res = jnp.take(index.res_codes, sel1, axis=0)
+    s1_mask = jnp.take(token_mask, sel1, axis=0)
+    top_scores, top_pos, _, _ = kops.pqinter_batched(
+        jnp.swapaxes(cs, -1, -2), lut, s1_codes, s1_res, s1_mask, cfg.th_r,
+        cfg.n_docs, cfg.k, q_masks, interpret=cfg.kernel_interpret)
+    return RetrievalResult(top_scores,
+                           jnp.take_along_axis(sel1, top_pos, axis=1))
+
+
+def _retrieve_batch(index: PackedIndex, queries: jax.Array,
+                    cfg: EngineConfig,
+                    q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+    """The full batched pipeline — shared by ``retrieve`` and the shard_map
+    plan in launch/serve.py (so sharded serving rides the batched kernels
+    too)."""
+    token_mask = index.token_mask()
+    cs, sel1 = _phase12_batch(index, token_mask, queries, cfg, q_masks)
+    return _phase34_batch(index, token_mask, queries, cs, sel1, cfg, q_masks)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _retrieve_jit(index: PackedIndex, queries: jax.Array, cfg: EngineConfig,
+                  q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+    return _retrieve_batch(index, queries, cfg, q_masks)
+
+
+def retrieve(index: PackedIndex, queries, cfg: EngineConfig,
+             q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+    """queries (B, n_q, d) or QueryBatch -> RetrievalResult, (B, k) each.
+
+    q_masks : optional (B, n_q) bool — True for live query terms (or carry
+    it inside a :class:`QueryBatch`). Masked (zero-padded / pruned) terms
+    are excluded from every phase: they pack no bit into the Eq. 4 bit
+    vectors, probe no IVF lists, contribute no row to S̄ and no MaxSim term
+    to Eq. 5/6. Retrieval of a padded query with its mask is bit-exact to
+    retrieval of the unpadded prefix; omitting the mask (or passing
+    all-True) reproduces the unmasked pipeline bit for bit.
+
+    With ``cfg.use_kernels`` + fused megakernels + ``cfg.batched_kernels``
+    and B > 1, the batch runs as ONE batch-native kernel launch per fused
+    phase pair; otherwise each query runs under ``jax.vmap``. The two paths
+    are bit-identical — ids AND score bits, including tie order.
+    """
+    qb = _as_query_batch(queries, q_masks)
+    return _retrieve_jit(index, qb.q, cfg, qb.q_mask)
 
 
 # ---------------------------------------------------------------------------
 # Phase-split entry points (benchmarks: paper Fig. 1-style breakdown).
-# Thin jit wrappers over the SAME _phaseN internals retrieve() composes.
+#
+# ONE convention: ``phaseN(index, queries, cfg, *, q_mask=None, ...)`` on
+# BATCHED queries ((B, n_q, d) array or QueryBatch), intermediates riding as
+# keyword-only arguments with a leading batch axis, results batched. Each is
+# a plain-Python normalizer over a jit'd batched internal that composes the
+# SAME _phaseN helpers retrieve() uses, so composing the split phases
+# reproduces ``retrieve`` exactly by construction.
+#
+# The pre-PR-7 single-query signatures (mixed index-first/array-first orders,
+# loose positional q/q_mask) still work through deprecation shims for one
+# release: they warn ``DeprecationWarning``, lift to B=1 and squeeze the
+# result. scripts/check_legacy_signatures.py keeps new in-tree callers out.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def phase1_candidates(index: PackedIndex, q: jax.Array, cfg: EngineConfig,
-                      q_mask: Optional[jax.Array] = None):
-    """Phase 1 (paper §4.1): centroid scores, the stacked Eq. 4 bit vectors,
-    and the IVF candidate bitmap -> (cs, bits, bitmap)."""
-    return _phase1(q, index, cfg, q_mask)
+def _warn_legacy(name: str, hint: str) -> None:
+    warnings.warn(
+        f"{name} with the pre-batch single-query signature is deprecated "
+        f"and will be removed; call {name}({hint}) on batched queries "
+        "(a (B, n_q, d) array or a QueryBatch) instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def _squeeze0(tree):
+    return jax.tree_util.tree_map(lambda x: x[0], tree)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase2_prefilter(index: PackedIndex, bits: jax.Array, bitmap: jax.Array,
-                     cfg: EngineConfig):
-    """Phase 2 (paper §4.2): the bit-vector pre-filter — score F(P, q)
-    (paper Eq. 4) for every candidate and select the top-n_filter doc ids.
-
-    Takes no q_mask: masked terms are already 0 bits in ``bits`` (phase 1),
-    so Eq. 4's popcount structurally cannot count them."""
-    return _phase2(index, index.token_mask(), bits, bitmap, cfg)
+def _phase1_entry(index, queries, cfg, q_masks=None):
+    return _vmap1(lambda q, m: _phase1(q, index, cfg, m), queries, q_masks)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase12_prefilter(index: PackedIndex, q: jax.Array, cfg: EngineConfig,
-                      q_mask: Optional[jax.Array] = None):
-    """Fused phases 1-2 -> (cs, sel1); with a fused-prefilter config this is
-    the single megakernel launch the breakdown benchmark times against the
-    phase1_candidates + phase2_prefilter pair."""
-    return _phase12(q, index, index.token_mask(), cfg, q_mask)
+def _phase2_entry(index, cfg, bits, bitmap):
+    token_mask = index.token_mask()
+    return jax.vmap(
+        lambda b, bm: _phase2(index, token_mask, b, bm, cfg))(bits, bitmap)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase3_centroid_interaction(index: PackedIndex, cs: jax.Array,
-                                sel1: jax.Array, cfg: EngineConfig,
-                                q_mask: Optional[jax.Array] = None):
-    """Phase 3 (paper §4.3): centroid interaction S̄ (the Eq. 2 proxy score)
-    on the phase-2 survivors; select the top-n_docs for late interaction."""
-    return _phase3(index, index.token_mask(), cs, sel1, cfg, q_mask)
+def _phase12_entry(index, queries, cfg, q_masks=None):
+    return _phase12_batch(index, index.token_mask(), queries, cfg, q_masks)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase4_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
-                            sel2: jax.Array, cfg: EngineConfig,
-                            q_mask: Optional[jax.Array] = None):
-    """Phase 4 (paper §4.4): PQ late interaction on the phase-3 survivors —
-    paper Eq. 5, or Eq. 6 with the dynamic per-term filter when ``cfg.th_r``
-    is set — and the final top-k selection."""
-    return _phase4(index, index.token_mask(), q, cs, sel2, cfg, q_mask)
+def _phase3_entry(index, cfg, cs, sel1, q_masks=None):
+    token_mask = index.token_mask()
+    if q_masks is None:
+        return jax.vmap(
+            lambda c, s: _phase3(index, token_mask, c, s, cfg))(cs, sel1)
+    return jax.vmap(
+        lambda c, s, m: _phase3(index, token_mask, c, s, cfg, m)
+    )(cs, sel1, q_masks)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def phase34_late_interaction(index: PackedIndex, q: jax.Array, cs: jax.Array,
-                             sel1: jax.Array, cfg: EngineConfig,
-                             q_mask: Optional[jax.Array] = None):
-    """Fused phases 3-4 -> (scores, ids); with a fused-late-interaction
-    config this is the single megakernel launch the breakdown benchmark
-    times against the phase3_centroid_interaction + phase4_late_interaction
-    pair (which keep their unfused behavior, mirroring how phase1/phase2
-    relate to phase12_prefilter)."""
-    return _phase34(index, index.token_mask(), q, cs, sel1, cfg, q_mask)
+def _phase4_entry(index, queries, cfg, cs, sel2, q_masks=None):
+    token_mask = index.token_mask()
+    if q_masks is None:
+        scores, ids = jax.vmap(
+            lambda q, c, s: _phase4(index, token_mask, q, c, s, cfg)
+        )(queries, cs, sel2)
+    else:
+        scores, ids = jax.vmap(
+            lambda q, c, s, m: _phase4(index, token_mask, q, c, s, cfg, m)
+        )(queries, cs, sel2, q_masks)
+    return RetrievalResult(scores, ids)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _phase34_entry(index, queries, cfg, cs, sel1, q_masks=None):
+    return _phase34_batch(index, index.token_mask(), queries, cs, sel1, cfg,
+                          q_masks)
+
+
+def _legacy_call(args, kwargs, cfg_pos: int):
+    """Detect a legacy positional call: EngineConfig sitting at the OLD
+    position (``cfg_pos``) in the post-``index`` positional args."""
+    if len(args) > cfg_pos:
+        return isinstance(args[cfg_pos], EngineConfig)
+    return False
+
+
+def phase1_candidates(index: PackedIndex, *args, **kwargs):
+    """Phase 1 (paper §4.1) — ``(index, queries, cfg, *, q_mask=None)`` ->
+    (cs (B, n_q, n_c), bits (B, n_c) u32, bitmap (B, n_docs) bool): centroid
+    scores, the stacked Eq. 4 bit vectors, and the IVF candidate bitmap."""
+    queries, cfg = args[0], args[1]
+    legacy = (not isinstance(queries, QueryBatch)
+              and getattr(queries, "ndim", 3) == 2) or len(args) > 2
+    if legacy:
+        _warn_legacy("phase1_candidates", "index, queries, cfg")
+        q_mask = args[2] if len(args) > 2 else kwargs.get("q_mask")
+        qm = None if q_mask is None else q_mask[None]
+        return _squeeze0(_phase1_entry(index, queries[None], cfg, qm))
+    qb = _as_query_batch(queries, kwargs.get("q_mask"))
+    return _phase1_entry(index, qb.q, cfg, qb.q_mask)
+
+
+def phase2_prefilter(index: PackedIndex, *args, **kwargs):
+    """Phase 2 (paper §4.2) — ``(index, queries, cfg, *, bits, bitmap)`` ->
+    sel1 (B, n_filter) int32: the bit-vector pre-filter — score F(P, q)
+    (paper Eq. 4) for every candidate, select the top-n_filter doc ids.
+
+    ``bits``/``bitmap`` are phase 1's batched outputs; omitted, phase 1
+    runs internally. Takes no q_mask: masked terms are already 0 bits in
+    ``bits``, so Eq. 4's popcount structurally cannot count them (the
+    ``queries`` mask only feeds the internal phase-1 run)."""
+    if _legacy_call(args, kwargs, 2):
+        _warn_legacy("phase2_prefilter",
+                     "index, queries, cfg, bits=..., bitmap=...")
+        bits, bitmap, cfg = args
+        return _squeeze0(
+            _phase2_entry(index, cfg, bits[None], bitmap[None]))
+    queries, cfg = args[0], args[1]
+    bits, bitmap = kwargs.get("bits"), kwargs.get("bitmap")
+    if bits is None or bitmap is None:
+        qb = _as_query_batch(queries, kwargs.get("q_mask"))
+        _, bits, bitmap = _phase1_entry(index, qb.q, cfg, qb.q_mask)
+    return _phase2_entry(index, cfg, bits, bitmap)
+
+
+def phase12_prefilter(index: PackedIndex, *args, **kwargs):
+    """Fused phases 1-2 — ``(index, queries, cfg, *, q_mask=None)`` ->
+    (cs (B, n_q, n_c), sel1 (B, n_filter)); with a fused-prefilter config
+    this is the megakernel launch (ONE batch-native launch when
+    ``cfg.batched_kernels`` applies) the breakdown benchmark times against
+    the phase1_candidates + phase2_prefilter pair."""
+    queries, cfg = args[0], args[1]
+    legacy = (not isinstance(queries, QueryBatch)
+              and getattr(queries, "ndim", 3) == 2) or len(args) > 2
+    if legacy:
+        _warn_legacy("phase12_prefilter", "index, queries, cfg")
+        q_mask = args[2] if len(args) > 2 else kwargs.get("q_mask")
+        qm = None if q_mask is None else q_mask[None]
+        return _squeeze0(_phase12_entry(index, queries[None], cfg, qm))
+    qb = _as_query_batch(queries, kwargs.get("q_mask"))
+    return _phase12_entry(index, qb.q, cfg, qb.q_mask)
+
+
+def phase3_centroid_interaction(index: PackedIndex, *args, **kwargs):
+    """Phase 3 (paper §4.3) — ``(index, queries, cfg, *, q_mask=None, cs,
+    sel1)`` -> sel2 (B, n_docs) int32: centroid interaction S̄ (the Eq. 2
+    proxy) on the phase-2 survivors; select the top-n_docs for late
+    interaction. ``cs``/``sel1`` are phase 1-2's batched outputs; omitted,
+    phases 1-2 run internally."""
+    if _legacy_call(args, kwargs, 2):
+        _warn_legacy("phase3_centroid_interaction",
+                     "index, queries, cfg, cs=..., sel1=...")
+        cs, sel1 = args[0], args[1]
+        cfg = args[2]
+        q_mask = args[3] if len(args) > 3 else kwargs.get("q_mask")
+        qm = None if q_mask is None else q_mask[None]
+        return _phase3_entry(index, cfg, cs[None], sel1[None], qm)[0]
+    queries, cfg = args[0], args[1]
+    qb = _as_query_batch(queries, kwargs.get("q_mask"))
+    cs, sel1 = kwargs.get("cs"), kwargs.get("sel1")
+    if cs is None or sel1 is None:
+        cs_c, sel1_c = _phase12_entry(index, qb.q, cfg, qb.q_mask)
+        cs = cs_c if cs is None else cs
+        sel1 = sel1_c if sel1 is None else sel1
+    return _phase3_entry(index, cfg, cs, sel1, qb.q_mask)
+
+
+def phase4_late_interaction(index: PackedIndex, *args, **kwargs):
+    """Phase 4 (paper §4.4) — ``(index, queries, cfg, *, q_mask=None, cs,
+    sel2)`` -> RetrievalResult ((B, k) scores/ids): PQ late interaction on
+    the phase-3 survivors — paper Eq. 5, or Eq. 6 with the dynamic per-term
+    filter when ``cfg.th_r`` is set — and the final top-k selection.
+    ``cs``/``sel2`` are phase 1-3's batched outputs; omitted, phases 1-3
+    run internally."""
+    if _legacy_call(args, kwargs, 3):
+        _warn_legacy("phase4_late_interaction",
+                     "index, queries, cfg, cs=..., sel2=...")
+        q, cs, sel2, cfg = args[0], args[1], args[2], args[3]
+        q_mask = args[4] if len(args) > 4 else kwargs.get("q_mask")
+        qm = None if q_mask is None else q_mask[None]
+        return _squeeze0(
+            _phase4_entry(index, q[None], cfg, cs[None], sel2[None], qm))
+    queries, cfg = args[0], args[1]
+    qb = _as_query_batch(queries, kwargs.get("q_mask"))
+    cs, sel2 = kwargs.get("cs"), kwargs.get("sel2")
+    if cs is None or sel2 is None:
+        cs_c, sel1 = _phase12_entry(index, qb.q, cfg, qb.q_mask)
+        cs = cs_c if cs is None else cs
+        if sel2 is None:
+            sel2 = _phase3_entry(index, cfg, cs, sel1, qb.q_mask)
+    return _phase4_entry(index, qb.q, cfg, cs, sel2, qb.q_mask)
+
+
+def phase34_late_interaction(index: PackedIndex, *args, **kwargs):
+    """Fused phases 3-4 — ``(index, queries, cfg, *, q_mask=None, cs,
+    sel1)`` -> RetrievalResult ((B, k) scores/ids); with a
+    fused-late-interaction config this is the megakernel launch (ONE
+    batch-native launch when ``cfg.batched_kernels`` applies) the breakdown
+    benchmark times against the phase3_centroid_interaction +
+    phase4_late_interaction pair (which keep their unfused behavior,
+    mirroring how phase1/phase2 relate to phase12_prefilter). ``cs``/
+    ``sel1`` are phase 1-2's batched outputs; omitted, phases 1-2 run
+    internally."""
+    if _legacy_call(args, kwargs, 3):
+        _warn_legacy("phase34_late_interaction",
+                     "index, queries, cfg, cs=..., sel1=...")
+        q, cs, sel1, cfg = args[0], args[1], args[2], args[3]
+        q_mask = args[4] if len(args) > 4 else kwargs.get("q_mask")
+        qm = None if q_mask is None else q_mask[None]
+        return _squeeze0(
+            _phase34_entry(index, q[None], cfg, cs[None], sel1[None], qm))
+    queries, cfg = args[0], args[1]
+    qb = _as_query_batch(queries, kwargs.get("q_mask"))
+    cs, sel1 = kwargs.get("cs"), kwargs.get("sel1")
+    if cs is None or sel1 is None:
+        cs_c, sel1_c = _phase12_entry(index, qb.q, cfg, qb.q_mask)
+        cs = cs_c if cs is None else cs
+        sel1 = sel1_c if sel1 is None else sel1
+    return _phase34_entry(index, qb.q, cfg, cs, sel1, qb.q_mask)
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,29 @@ def sbar_block(cs_t: jax.Array, codes: jax.Array, valid: jax.Array,
     return term_sum(colmax)                                # (BD,)
 
 
+def sbar_block_batched(cs_t: jax.Array, codes: jax.Array, valid: jax.Array,
+                       qlive: jax.Array) -> jax.Array:
+    """Batched ``sbar_block``: cs_t (B, n_c, n_q), codes/valid (B, BD, cap),
+    qlive (B, n_q) -> (B, BD).
+
+    Row b is bitwise equal to ``sbar_block(cs_t[b], codes[b], valid[b],
+    qlive[b])`` — the gather/mask/max/sum sequence is the same per-query
+    computation vectorized over a leading batch axis (``take_along_axis``
+    gathers the same rows ``jnp.take`` does per query; the max and the
+    ``term_sum`` chain reduce each row independently in the same order).
+    Used by the pass-1 stream of the batched ``pqinter`` kernel — keep in
+    lockstep with ``sbar_block`` and the jnp reference."""
+    nb, bd, cap = codes.shape
+    n_q = cs_t.shape[2]
+    idx = jnp.clip(codes, 0, cs_t.shape[1] - 1)
+    pt = jnp.take_along_axis(cs_t, idx.reshape(nb, bd * cap, 1), axis=1)
+    pt = pt.reshape(nb, bd, cap, n_q)
+    pt = jnp.where(valid[..., None], pt, NEG)
+    colmax = jnp.max(pt, axis=2)                           # (B, BD, n_q)
+    colmax = jnp.where(qlive[:, None, :], colmax, 0.0)
+    return term_sum(colmax)                                # (B, BD)
+
+
 def _cinter_kernel(cs_t_ref, codes_ref, mask_ref, qm_ref, out_ref):
     cs_t = cs_t_ref[...]                                   # (n_c, n_q)
     codes = codes_ref[...]                                 # (BD, cap)

@@ -66,3 +66,29 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     """Fused phases 3-4 megakernel -> (scores, pos, sel2, sbar)."""
     return _pqinter.pqinter(cs_t, lut, codes, res_codes, token_mask, th_r,
                             n_docs, k, q_mask, interpret=interpret)
+
+
+def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
+                      token_mask: jax.Array, bitmap: jax.Array,
+                      n_filter: int, q_masks: jax.Array | None = None, *,
+                      interpret: bool = True):
+    """Batch-native phases 1b-2 megakernel -> (scores, doc_ids, bits), each
+    with a leading batch axis; row b bit-identical to ``prefilter`` on
+    query b.  ``codes``/``token_mask`` are (n_docs, cap) shared or
+    (B, n_docs, cap) per-query candidate blocks."""
+    return _prefilter.prefilter_batched(cs, th, codes, token_mask, bitmap,
+                                        n_filter, q_masks,
+                                        interpret=interpret)
+
+
+def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+                    res_codes: jax.Array, token_mask: jax.Array,
+                    th_r: float | None, n_docs: int, k: int,
+                    q_masks: jax.Array | None = None, *,
+                    interpret: bool = True):
+    """Batch-native phases 3-4 megakernel -> (scores, pos, sel2, sbar),
+    each with a leading batch axis; row b bit-identical to ``pqinter`` on
+    query b."""
+    return _pqinter.pqinter_batched(cs_t, lut, codes, res_codes, token_mask,
+                                    th_r, n_docs, k, q_masks,
+                                    interpret=interpret)

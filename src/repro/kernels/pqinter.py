@@ -75,11 +75,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .cinter import sbar_block
-from .pqscore import eq56_block
+from .cinter import sbar_block, sbar_block_batched
+from .pqscore import eq56_block, eq56_block_batched
 
 MAX_BD1 = 512         # pass-1 block cap (S̄ is cheap: one gather + max/sum)
 MAX_BD2 = 64          # pass-2 block cap (PQ scoring is the heavy stage)
+MAX_BB = 8            # batched kernel: queries per grid step (VMEM bound)
 NEG_INF = float("-inf")  # buffer init / padding: below any real score
 
 
@@ -174,6 +175,10 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     _, m, ksub = lut.shape
     assert k <= n_docs <= nf, \
         f"need k <= n_docs <= n_filter, got {k}/{n_docs}/{nf}"
+    # NOTE: keep this wrapper in lockstep with ``pqinter_batched`` below —
+    # the batched kernel is the same two-pass algorithm vectorized over a
+    # leading batch axis, and bit-exactness between them is a tested
+    # contract.
     if block_d1 is None:
         block_d1 = min(MAX_BD1, nf + (-nf) % 8)
     if block_d2 is None:
@@ -220,3 +225,159 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
         interpret=interpret,
     )(thr, cs_t, lut2, codesp, resp, maskp, qm)
     return tops[0], topp[0], pos[0, :n_docs], sbar[0, :n_docs]
+
+
+def _pqinter_batched_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
+                            mask_ref, qm_ref, sbar_ref, pos_ref, tops_ref,
+                            topp_ref, *, m: int, ksub: int, use_filter: bool,
+                            n_docs: int, k: int, bd1: int, bd2: int, nf: int,
+                            nd_pad: int):
+    cs_t = cs_t_ref[...]                                    # (BB, n_c, n_q)
+    codes = codes_ref[...]                                  # (BB, nfp, cap)
+    valid_all = mask_ref[...] != 0                          # (BB, nfp, cap)
+    qlive = qm_ref[...] != 0                                # (BB, n_q)
+    bb, nfp, _ = codes.shape
+
+    # ---- pass 1: batched S̄ blocks + per-row running top-n_docs -----------
+    sbar_buf = jnp.full((bb, nd_pad), NEG_INF, jnp.float32)
+    pos_buf = jnp.zeros((bb, nd_pad), jnp.int32)
+    for i in range(nfp // bd1):                             # static unroll
+        start = i * bd1
+        c = jax.lax.slice_in_dim(codes, start, start + bd1, axis=1)
+        v = jax.lax.slice_in_dim(valid_all, start, start + bd1, axis=1)
+        sbar = sbar_block_batched(cs_t, c, v, qlive)        # (BB, BD1)
+        rows = start + jax.lax.broadcasted_iota(jnp.int32, (1, bd1), 1)
+        sbar = jnp.where(rows < nf, sbar.astype(jnp.float32), NEG_INF)
+        merged_s = jnp.concatenate([sbar_buf, sbar], axis=1)
+        merged_p = jnp.concatenate(
+            [pos_buf, jnp.broadcast_to(rows, (bb, bd1))], axis=1)
+        # per-row top_k: same lowest-index tie-breaking as the single-query
+        # merge, applied to each query's buffer independently
+        sbar_buf, sel = jax.lax.top_k(merged_s, nd_pad)
+        pos_buf = jnp.take_along_axis(merged_p, sel, axis=1)
+    sbar_ref[...] = sbar_buf
+    pos_ref[...] = pos_buf
+
+    # ---- pass 2: batched Eq. 5/6 in phase-3 rank order + running top-k ----
+    lut2 = lut2_ref[...]                                    # (BB, m*K, n_q)
+    res_all = res_ref[...]                                  # (BB, nfp, cap, m)
+    tops_buf = jnp.full((bb, k), NEG_INF, jnp.float32)
+    topp_buf = jnp.zeros((bb, k), jnp.int32)
+    for j in range(nd_pad // bd2):                          # static unroll
+        start = j * bd2
+        pos = jax.lax.slice_in_dim(pos_buf, start, start + bd2, axis=1)
+        lane = start + jax.lax.broadcasted_iota(jnp.int32, (1, bd2), 1)
+        live = lane < n_docs                                # (1, BD2)
+        posc = jnp.clip(pos, 0, nfp - 1)
+        c = jnp.take_along_axis(codes, posc[..., None], axis=1)
+        res = jnp.take_along_axis(res_all, posc[..., None, None], axis=1)
+        valid = (jnp.take_along_axis(valid_all, posc[..., None], axis=1)
+                 & live[..., None])
+        score = eq56_block_batched(cs_t, lut2, c, res, valid, thr_ref[0],
+                                   m=m, ksub=ksub, use_filter=use_filter,
+                                   qlive=qlive)
+        score = jnp.where(live, score, NEG_INF)
+        merged_s = jnp.concatenate([tops_buf, score], axis=1)
+        merged_p = jnp.concatenate([topp_buf, pos], axis=1)
+        tops_buf, sel = jax.lax.top_k(merged_s, k)
+        topp_buf = jnp.take_along_axis(merged_p, sel, axis=1)
+    tops_ref[...] = tops_buf
+    topp_ref[...] = topp_buf
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("th_r", "n_docs", "k", "block_b",
+                                    "block_d1", "block_d2", "interpret"))
+def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
+                    res_codes: jax.Array, token_mask: jax.Array,
+                    th_r: float | None, n_docs: int, k: int,
+                    q_masks: jax.Array | None = None, *,
+                    block_b: int | None = None, block_d1: int | None = None,
+                    block_d2: int | None = None,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array,
+                                                     jax.Array, jax.Array]:
+    """Batch-native fused phases 3-4: one launch for a whole micro-batch.
+
+    cs_t       : (B, n_c, n_q) per-query transposed centroid scores
+    lut        : (B, n_q, m, K) per-query PQ LUTs
+    codes      : (B, n_filter, cap) survivors' token centroid ids
+    res_codes  : (B, n_filter, cap, m) survivors' PQ residual codes
+    token_mask : (B, n_filter, cap) bool
+    th_r, n_docs, k : as in ``pqinter`` (shared across the batch)
+    q_masks    : optional (B, n_q) bool per-query term masks
+    -> (scores (B, k), pos (B, k), sel2 (B, n_docs), sbar (B, n_docs))
+
+    Row b of every output is bit-identical to ``pqinter(cs_t[b], lut[b],
+    ..., q_mask=q_masks[b])``.  The grid walks the batch in ``block_b``-query
+    steps; within a step the two statically unrolled block passes run the
+    SAME running-merge algorithm as the single-query kernel, vectorized over
+    the step's queries (batched ``lax.top_k`` reduces each row independently
+    with identical tie-breaking).  Versus ``jax.vmap(pqinter)`` — which in
+    interpret mode re-slices every resident operand once per query — this
+    launch slices each query's operands exactly once and amortizes the
+    interpreter's per-step overhead over ``block_b`` queries of vectorized
+    VPU work.  VMEM contract: ``block_b`` times the single-query residency
+    (CS^T + LUT + survivor arrays), so ~``block_b`` * 2.5 MiB at paper
+    shapes — the default ``MAX_BB = 8`` keeps that within a v5e core's
+    16 MiB VMEM.
+    """
+    nb, nf, cap = codes.shape
+    _, n_c, n_q = cs_t.shape
+    _, _, m, ksub = lut.shape
+    assert k <= n_docs <= nf, \
+        f"need k <= n_docs <= n_filter, got {k}/{n_docs}/{nf}"
+    if block_b is None:
+        block_b = min(MAX_BB, nb)
+    if block_d1 is None:
+        block_d1 = min(MAX_BD1, nf + (-nf) % 8)
+    if block_d2 is None:
+        block_d2 = min(MAX_BD2, n_docs + (-n_docs) % 8)
+    pad1 = (-nf) % block_d1
+    nd_pad = n_docs + ((-n_docs) % block_d2)
+    padb = (-nb) % block_b
+    nbp = nb + padb
+    # Pad the batch with all-zero queries (zero CS, zero LUT, all-masked
+    # tokens and terms): their rows compute finite garbage that is sliced
+    # off below and never mixes into real rows (all reductions are per-row).
+    csp = jnp.pad(cs_t, ((0, padb), (0, 0), (0, 0)))
+    lutp = jnp.pad(lut, ((0, padb), (0, 0), (0, 0), (0, 0)))
+    codesp = jnp.pad(codes, ((0, padb), (0, pad1), (0, 0)))
+    resp = jnp.pad(res_codes, ((0, padb), (0, pad1), (0, 0), (0, 0)))
+    maskp = jnp.pad(token_mask.astype(jnp.int8),
+                    ((0, padb), (0, pad1), (0, 0)))
+    nfp = nf + pad1
+    lut2 = lutp.transpose(0, 2, 3, 1).reshape(nbp, m * ksub, n_q)
+    thr = jnp.asarray([0.0 if th_r is None else th_r], jnp.float32)
+    qm = (jnp.ones((nb, n_q), jnp.int8) if q_masks is None
+          else q_masks.astype(jnp.int8).reshape(nb, n_q))
+    qm = jnp.pad(qm, ((0, padb), (0, 0)))
+    kern = functools.partial(
+        _pqinter_batched_kernel, m=m, ksub=ksub, use_filter=th_r is not None,
+        n_docs=n_docs, k=k, bd1=block_d1, bd2=block_d2, nf=nf, nd_pad=nd_pad)
+    sbar, pos, tops, topp = pl.pallas_call(
+        kern,
+        grid=(nbp // block_b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),              # th_r
+            pl.BlockSpec((block_b, n_c, n_q), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, m * ksub, n_q), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, nfp, cap), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, nfp, cap, m), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((block_b, nfp, cap), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, n_q), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, nd_pad), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, nd_pad), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, k), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, k), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, nd_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nbp, nd_pad), jnp.int32),
+            jax.ShapeDtypeStruct((nbp, k), jnp.float32),
+            jax.ShapeDtypeStruct((nbp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, csp, lut2, codesp, resp, maskp, qm)
+    return (tops[:nb], topp[:nb], pos[:nb, :n_docs], sbar[:nb, :n_docs])

@@ -71,6 +71,48 @@ def eq56_block(cs_t: jax.Array, lut2: jax.Array, codes: jax.Array,
     return term_sum(colmax)
 
 
+def eq56_block_batched(cs_t: jax.Array, lut2: jax.Array, codes: jax.Array,
+                       res: jax.Array, valid: jax.Array, thr: jax.Array, *,
+                       m: int, ksub: int, use_filter: bool,
+                       qlive: jax.Array) -> jax.Array:
+    """Batched ``eq56_block``: cs_t (B, n_c, n_q), lut2 (B, m*K, n_q),
+    codes/valid (B, BD, cap), res (B, BD, cap, m), qlive (B, n_q) -> (B, BD).
+
+    Row b is bitwise equal to ``eq56_block(cs_t[b], lut2[b], ...)``: the
+    subspace accumulation is the SAME static unroll in the SAME s = 0..m-1
+    order (per-row gathers via ``take_along_axis`` fetch the rows
+    ``jnp.take`` fetches per query), the Eq. 6 comparison happens in the
+    centroid dtype, and the max/``term_sum`` reductions act per row.  Used
+    by the pass-2 stream of the batched ``pqinter`` kernel — keep in
+    lockstep with ``eq56_block`` and the jnp reference."""
+    nb, bd, cap = codes.shape
+    n_q = cs_t.shape[2]
+    idx = jnp.clip(codes, 0, cs_t.shape[1] - 1)
+    centroid = jnp.take_along_axis(
+        cs_t, idx.reshape(nb, bd * cap, 1), axis=1).reshape(nb, bd, cap, n_q)
+    res32 = res.astype(jnp.int32)
+
+    def _gather(sub):
+        return jnp.take_along_axis(
+            lut2, sub.reshape(nb, bd * cap, 1),
+            axis=1).reshape(nb, bd, cap, n_q)
+
+    residual = _gather(res32[..., 0])
+    for s in range(1, m):                                   # static unroll
+        residual = residual + _gather(res32[..., s] + s * ksub)
+    full = jnp.where(valid[..., None], centroid + residual, NEG)
+    if use_filter:
+        keep = (centroid > thr.astype(centroid.dtype)) & valid[..., None]
+        masked_max = jnp.max(jnp.where(keep, full, NEG), axis=2)
+        full_max = jnp.max(full, axis=2)
+        any_keep = jnp.any(keep, axis=2)
+        colmax = jnp.where(any_keep, masked_max, full_max)  # (B, BD, n_q)
+    else:
+        colmax = jnp.max(full, axis=2)
+    colmax = jnp.where(qlive[:, None, :], colmax, 0.0)
+    return term_sum(colmax)
+
+
 def _pqscore_kernel(cs_t_ref, lut2_ref, codes_ref, res_ref, mask_ref, thr_ref,
                     qm_ref, out_ref, *, m: int, ksub: int, use_filter: bool):
     scores = eq56_block(cs_t_ref[...], lut2_ref[...], codes_ref[...],

@@ -86,6 +86,135 @@ def _prefilter_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref, bitmap_ref,
     keys_ref[...] = top[None, :]
 
 
+def _prefilter_batched_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref,
+                              bitmap_ref, bits_ref, keys_ref, *,
+                              n_filter: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cs = cs_ref[...]                                    # (B, n_q, n_c)
+        # Same pack as the single-query kernel, vectorized over the leading
+        # batch axis: per query b, bits[b] is bitwise identical to what
+        # ``_prefilter_kernel`` packs from cs[b] / qm[b].
+        live = qm_ref[...][..., None] != 0                  # (B, n_q, 1)
+        m = ((cs > th_ref[0].astype(cs.dtype)) & live).astype(jnp.uint32)
+        shifts = jax.lax.broadcasted_iota(
+            jnp.uint32, (1, cs.shape[1], 1), 1)
+        bits_ref[...] = jnp.sum(m << shifts, axis=1)        # (B, n_c)
+        keys_ref[...] = jnp.full(
+            (cs.shape[0], n_filter), KEY_INIT, jnp.int32)
+
+    bits = bits_ref[...]                                    # (B, n_c)
+    codes = codes_ref[...]                                  # (Bc, BD, cap)
+    valid = mask_ref[...] != 0                              # (Bc, BD, cap)
+    cand = bitmap_ref[...] != 0                             # (B, BD)
+    nb, bd = cand.shape
+
+    idx = jnp.clip(codes, 0, bits.shape[1] - 1)
+    if codes.shape[0] == 1:
+        # Shared corpus block (score_all mode): ONE codes slice serves every
+        # query in the batch — the amortization the vmap path cannot do.
+        words = jnp.take(bits, idx[0], axis=1)              # (B, BD, cap)
+        words = jnp.where(valid[0][None], words, jnp.uint32(0))
+    else:
+        # Per-query candidate blocks (compact mode): row-aligned gather.
+        words = jnp.take_along_axis(
+            bits, idx.reshape(nb, -1), axis=1).reshape(idx.shape)
+        words = jnp.where(valid, words, jnp.uint32(0))
+    ored = jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or, (2,))
+    f = jax.lax.population_count(ored).astype(jnp.int32)    # (B, BD)
+    f = jnp.where(cand, f, -1)
+
+    ids = i * bd + jax.lax.broadcasted_iota(jnp.int32, (1, bd), 1)
+    keys = ((f + 1) << ID_BITS) + (MAX_ID - ids)
+    merged = jnp.concatenate([keys_ref[...], keys], axis=1)
+    # Batched top_k reduces each row independently with the same
+    # lowest-index tie-breaking as the single-query merge: row b of the
+    # running keys is bitwise the single-query kernel's buffer for query b.
+    top, _ = jax.lax.top_k(merged, n_filter)
+    keys_ref[...] = top
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_filter", "block_d", "interpret"))
+def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
+                      token_mask: jax.Array, bitmap: jax.Array,
+                      n_filter: int, q_masks: jax.Array | None = None, *,
+                      block_d: int = DEFAULT_BD,
+                      interpret: bool = True) -> tuple[jax.Array, jax.Array,
+                                                       jax.Array]:
+    """Batch-native fused phases 1b-2: one launch for a whole micro-batch.
+
+    cs         : (B, n_q, n_c) centroid scores per query (fp32 or bf16)
+    th         : scalar bit-vector threshold (shared across the batch)
+    codes      : (n_docs, cap) int32 — ONE corpus shared by every query
+                 (score_all mode), or (B, n_docs, cap) per-query candidate
+                 blocks (compact mode)
+    token_mask : bool, same leading shape as ``codes``
+    bitmap     : (B, n_docs) bool candidate bitmaps
+    q_masks    : optional (B, n_q) bool per-query term masks
+    -> (scores (B, n_filter) i32, doc_ids (B, n_filter) i32,
+        bits (B, n_c) u32)
+
+    Row b of every output is bit-identical to
+    ``prefilter(cs[b], th, codes[b or :], ..., q_mask=q_masks[b])`` — ids
+    AND score bits, including tie order.  Unlike ``jax.vmap(prefilter)``
+    (which lifts the batch into an outer grid axis and re-slices the codes
+    block per (query, block) step), this kernel walks the document stream
+    ONCE: the (B, n_q, n_c) score table stays VMEM-resident and each
+    (BD, cap) codes slice is scored for all B queries before the next
+    block loads.
+    """
+    nb, n_q, n_c = cs.shape
+    shared = codes.ndim == 2
+    n_docs, cap = codes.shape[-2:]
+    assert n_q <= 32, "stacked bitvector packs one query term per uint32 bit"
+    assert n_filter <= n_docs, \
+        f"n_filter={n_filter} exceeds the {n_docs} documents scored"
+    assert n_docs <= MAX_ID, "int32 packed keys support up to 2^25 docs/shard"
+    assert bitmap.shape == (nb, n_docs)
+    pad = (-n_docs) % block_d
+    if shared:
+        codesp = jnp.pad(codes, ((0, pad), (0, 0)))[None]
+        maskp = jnp.pad(token_mask.astype(jnp.int8), ((0, pad), (0, 0)))[None]
+    else:
+        codesp = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+        maskp = jnp.pad(token_mask.astype(jnp.int8),
+                        ((0, 0), (0, pad), (0, 0)))
+    bmp = jnp.pad(bitmap.astype(jnp.int8), ((0, 0), (0, pad)))
+    ndp = n_docs + pad
+    bc = codesp.shape[0]
+    th_arr = jnp.asarray([th], jnp.float32)
+    qm = (jnp.ones((nb, n_q), jnp.int8) if q_masks is None
+          else q_masks.astype(jnp.int8).reshape(nb, n_q))
+    kern = functools.partial(_prefilter_batched_kernel, n_filter=n_filter)
+    bits, keys = pl.pallas_call(
+        kern,
+        grid=(ndp // block_d,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),              # th
+            pl.BlockSpec((nb, n_q, n_c), lambda i: (0, 0, 0)),  # CS resident
+            pl.BlockSpec((nb, n_q), lambda i: (0, 0)),       # q_masks
+            pl.BlockSpec((bc, block_d, cap), lambda i: (0, i, 0)),
+            pl.BlockSpec((bc, block_d, cap), lambda i: (0, i, 0)),
+            pl.BlockSpec((nb, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb, n_c), lambda i: (0, 0)),       # revisited accum
+            pl.BlockSpec((nb, n_filter), lambda i: (0, 0)),  # revisited accum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, n_c), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, n_filter), jnp.int32),
+        ],
+        interpret=interpret,
+    )(th_arr, cs, qm, codesp, maskp, bmp)
+    scores = (keys >> ID_BITS) - 1
+    doc_ids = MAX_ID - (keys & MAX_ID)
+    return scores.astype(jnp.int32), doc_ids.astype(jnp.int32), bits
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_filter", "block_d", "interpret"))
 def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.engine import EngineConfig, RetrievalResult, _retrieve_one
+from repro.core.engine import (EngineConfig, RetrievalResult,
+                               _as_query_batch, _retrieve_batch)
 from repro.core.index import PackedIndex
 
 # jax >= 0.6 exposes shard_map at top level (replication check kw:
@@ -55,11 +56,12 @@ def retrieve_pjit(mesh: Mesh, index: PackedIndex, queries: jax.Array,
 def _local_retrieve(index_local: PackedIndex, queries: jax.Array,
                     q_masks: jax.Array, cfg: EngineConfig,
                     axes: Tuple[str, ...]) -> RetrievalResult:
-    """Runs on ONE device's doc shard; queries AND q_masks are replicated."""
-    token_mask = index_local.token_mask()
-    local = jax.vmap(
-        lambda q, m: _retrieve_one(q, index_local, token_mask, cfg, m)
-    )(queries, q_masks)
+    """Runs on ONE device's doc shard; queries AND q_masks are replicated.
+
+    Goes through the SAME batched pipeline ``retrieve`` uses, so with a
+    ``batched_kernels`` config every shard runs its whole query batch as
+    one batch-native megakernel launch per fused phase pair."""
+    local = _retrieve_batch(index_local, queries, cfg, q_masks)
 
     # translate local doc ids -> global ids with the shard offset
     shard_id = jnp.int32(0)
@@ -109,9 +111,10 @@ def make_shardmap_retriever(mesh: Mesh, cfg: EngineConfig):
         return _local_retrieve(index_local, queries, q_masks, cfg, axes)
 
     def run(index_stacked, queries, q_masks=None):
-        if q_masks is None:
-            q_masks = jnp.ones(queries.shape[:2], jnp.bool_)
-        return step(index_stacked, queries, q_masks)
+        qb = _as_query_batch(queries, q_masks)
+        q_masks = (jnp.ones(qb.q.shape[:2], jnp.bool_)
+                   if qb.q_mask is None else qb.q_mask)
+        return step(index_stacked, qb.q, q_masks)
 
     return run
 
@@ -180,6 +183,7 @@ def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline, *,
 
         def plan(queries, q_masks=None, *, _stacked=stacked,
                  _retriever=retrievers[gcfg], _off=off):
+            """queries: (B, n_q, d) array or QueryBatch."""
             r = _retriever(_stacked, queries, q_masks)
             return RetrievalResult(r.scores, r.doc_ids + jnp.int32(_off))
 
@@ -204,10 +208,11 @@ def make_timeline_retriever(mesh: Mesh, cfg: EngineConfig, timeline):
 
     plans = make_timeline_partial_plans(mesh, cfg, timeline)
 
-    def run(queries: jax.Array, q_masks=None) -> RetrievalResult:
-        if q_masks is None:
-            q_masks = jnp.ones(queries.shape[:2], jnp.bool_)
-        return merge_partial_topk([p(queries, q_masks) for p in plans],
+    def run(queries, q_masks=None) -> RetrievalResult:
+        qb = _as_query_batch(queries, q_masks)
+        q_masks = (jnp.ones(qb.q.shape[:2], jnp.bool_)
+                   if qb.q_mask is None else qb.q_mask)
+        return merge_partial_topk([p(qb.q, q_masks) for p in plans],
                                   cfg.k)
 
     return run

@@ -24,7 +24,8 @@ Batching policy (cooperative, no background thread — docs/SERVING.md):
 
 The cache-hit/cache-miss lane split happens per generation downstream
 (``RetrievalService._execute``): the batcher's job ends at a dense
-(B, n_q, d) + (B, n_q) mask pair and the tickets to fill.
+:class:`~repro.core.engine.QueryBatch` — (B, n_q, d) queries + (B, n_q)
+mask — and the tickets to fill.
 """
 from __future__ import annotations
 
@@ -32,6 +33,8 @@ import time
 from typing import Callable, Optional
 
 import numpy as np
+
+from repro.core.engine import QueryBatch
 
 
 def pad_query(query: np.ndarray, n_q: int,
@@ -150,23 +153,23 @@ class MicroBatcher:
             return True
         return self.clock() - self._submits[0] >= self.max_delay_s
 
-    def drain(self) -> Optional[tuple[np.ndarray, np.ndarray, list[Ticket]]]:
-        """Pop up to ``max_batch`` pending queries as dense arrays.
+    def drain(self) -> Optional[tuple[QueryBatch, list[Ticket]]]:
+        """Pop up to ``max_batch`` pending queries as one dense batch.
 
-        -> ((B, n_q, d) f32, (B, n_q) bool, the B tickets to fill), or
-        ``None`` when nothing is pending. Queries beyond ``max_batch``
-        stay queued with their ORIGINAL submit times: the deadline is a
-        per-query latency promise ("a lone query waits at most
-        ``max_delay_s``"), so a query left behind by a full batch keeps
-        aging — re-anchoring its deadline to the drain would let it wait
-        up to twice the promise.
+        -> (QueryBatch with (B, n_q, d) f32 ``q`` and (B, n_q) bool
+        ``q_mask``, the B tickets to fill), or ``None`` when nothing is
+        pending. Queries beyond ``max_batch`` stay queued with their
+        ORIGINAL submit times: the deadline is a per-query latency promise
+        ("a lone query waits at most ``max_delay_s``"), so a query left
+        behind by a full batch keeps aging — re-anchoring its deadline to
+        the drain would let it wait up to twice the promise.
         """
         if not self._queries:
             return None
         n = min(len(self._queries), self.max_batch)
-        q = np.stack(self._queries[:n])
-        m = np.stack(self._masks[:n])
+        qb = QueryBatch(np.stack(self._queries[:n]),
+                        np.stack(self._masks[:n]))
         tickets = self._tickets[:n]
         del self._queries[:n], self._masks[:n], self._tickets[:n], \
             self._submits[:n]
-        return q, m, tickets
+        return qb, tickets

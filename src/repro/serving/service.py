@@ -56,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import store
-from repro.core.engine import (EngineConfig, RetrievalResult,
+from repro.core.engine import (EngineConfig, QueryBatch, RetrievalResult,
                                merge_partial_topk, merge_partial_topk_by_rank,
                                retrieve_generation_topk)
 from repro.core.store import EpochedTimeline, ShardedTimeline
@@ -253,12 +253,21 @@ class RetrievalService:
     def query(self, queries, q_masks=None) -> RetrievalResult:
         """Retrieve a ready-made batch, bypassing the micro-batcher.
 
-        queries : (B, t, d) with t <= cfg.n_q (zero-padded up to n_q here)
+        queries : (B, t, d) with t <= cfg.n_q (zero-padded up to n_q here),
+                  or a :class:`~repro.core.engine.QueryBatch` carrying the
+                  mask itself
         q_masks : optional (B, t) bool per-term masks (True = live)
         -> RetrievalResult (scores (B, k), global doc ids (B, k)) — bit-
         exact to ``retrieve_timeline(timeline, queries, cfg, q_masks)``.
         """
         self._maybe_install()
+        if isinstance(queries, QueryBatch):
+            if q_masks is not None and queries.q_mask is not None:
+                raise ValueError(
+                    "got a q_mask both inside the QueryBatch and as a "
+                    "separate argument — pass exactly one")
+            queries, q_masks = queries.q, \
+                queries.q_mask if q_masks is None else q_masks
         q = np.asarray(queries, dtype=np.float32)
         if q.ndim != 3:
             raise ValueError(f"queries have shape {q.shape}: expected "
@@ -296,8 +305,8 @@ class RetrievalService:
             if drained is None:
                 self._maybe_install()
                 return
-            q, masks, tickets = drained
-            res = self._execute(q, masks)
+            qb, tickets = drained
+            res = self._execute(qb.q, qb.q_mask)
             scores = np.asarray(res.scores)
             ids = np.asarray(res.doc_ids)
             for j, t in enumerate(tickets):

@@ -1,0 +1,177 @@
+"""The tentpole contract of the batch-native megakernels: with
+``cfg.batched_kernels`` the whole micro-batch runs as ONE launch per fused
+phase pair, and the result equals the per-query vmap path bit-exactly —
+ids AND score bits, including tie order — across both candidate modes,
+masked/pruned queries, shard_map, the timeline, and ``RetrievalService``.
+
+Plus the deprecation shims: every pre-batch single-query phase signature
+still works, warns ``DeprecationWarning``, and returns exactly what the
+unified batched signature returns for that query."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, QueryBatch, ShardedTimeline, engine,
+                        new_generation, retrieve_timeline)
+from repro.serving import RetrievalService
+
+CFG = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48, k=10,
+                   use_kernels=True, fused_prefilter=True,
+                   fused_late_interaction=True)
+VMAP = dataclasses.replace(CFG, batched_kernels=False)
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+# ---------------------------------------------------------------------------
+# batched == vmap, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["score_all", "compact"])
+def test_batched_equals_vmap_both_modes(small_corpus, small_index, mode):
+    idx, _ = small_index
+    bcfg = dataclasses.replace(CFG, candidate_mode=mode, cand_cap=600)
+    q = jnp.asarray(small_corpus.queries[:4])
+    _eq(engine.retrieve(idx, q, bcfg),
+        engine.retrieve(idx, q, dataclasses.replace(bcfg,
+                                                    batched_kernels=False)))
+
+
+def test_batched_equals_vmap_masked(small_corpus, small_index):
+    """Heterogeneous zero-padded queries with per-term masks — the serving
+    shape — take the same batched launch and stay bit-exact."""
+    idx, _ = small_index
+    q = np.asarray(small_corpus.queries[:3]).copy()
+    mask = np.zeros(q.shape[:2], bool)
+    for i, keep in enumerate((12, 20, q.shape[1])):
+        q[i, keep:] = 0.0
+        mask[i, :keep] = True
+    qj, mj = jnp.asarray(q), jnp.asarray(mask)
+    _eq(engine.retrieve(idx, qj, CFG, mj), engine.retrieve(idx, qj, VMAP, mj))
+    # the mask travels identically inside a QueryBatch
+    _eq(engine.retrieve(idx, QueryBatch(qj, mj), CFG),
+        engine.retrieve(idx, qj, CFG, mj))
+
+
+def test_query_batch_conflicting_mask_raises(small_corpus, small_index):
+    idx, _ = small_index
+    q = jnp.asarray(small_corpus.queries[:2])
+    m = jnp.ones(q.shape[:2], jnp.bool_)
+    with pytest.raises(ValueError, match="exactly one"):
+        engine.retrieve(idx, QueryBatch(q, m), CFG, m)
+
+
+def test_batched_equals_vmap_under_shard_map(small_corpus, small_index):
+    """The shard_map plan routes its per-shard batch through the same
+    batched dispatch; the merged two-level top-k must equal the
+    single-device vmap result bit-exactly."""
+    from repro.launch.serve import make_shardmap_retriever, shard_index
+
+    idx, _ = small_index
+    q = jnp.asarray(small_corpus.queries[:4])
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    stacked = shard_index(idx, 1)
+    with mesh:
+        sharded = make_shardmap_retriever(mesh, CFG)(stacked, q)
+    _eq(sharded, engine.retrieve(idx, q, VMAP))
+
+
+@pytest.fixture(scope="module")
+def two_gen_timeline(small_corpus, small_index):
+    idx, meta = small_index
+    return ShardedTimeline.of((idx, meta)).append(*new_generation(
+        idx, meta, small_corpus.doc_embs[:100], small_corpus.doc_lens[:100]))
+
+
+def test_batched_equals_vmap_timeline(small_corpus, two_gen_timeline):
+    """Per-generation retrieval + cross-generation merge ride the batched
+    kernels; the merged top-k equals the vmap path's bit-exactly (the
+    second generation is smaller than n_filter, so the clamped-budget
+    branch is exercised too)."""
+    q = jnp.asarray(small_corpus.queries[:3])
+    _eq(retrieve_timeline(two_gen_timeline, q, CFG),
+        retrieve_timeline(two_gen_timeline, q, VMAP))
+
+
+def test_service_miss_lane_rides_batched_kernels(small_corpus,
+                                                 two_gen_timeline):
+    """submit/flush pads heterogeneous queries to one dense QueryBatch, so
+    the miss lane is a batched launch — each ticket must still equal the
+    vmap-path retrieval of ITS unpadded prefix."""
+    svc = RetrievalService(two_gen_timeline, CFG, max_batch=4)
+    prefixes = (14, 32, 25)
+    tickets = [svc.submit(np.asarray(small_corpus.queries[i][:n]))
+               for i, n in enumerate(prefixes)]
+    svc.flush()
+    for i, (t, n) in enumerate(zip(tickets, prefixes)):
+        ref = retrieve_timeline(
+            two_gen_timeline, jnp.asarray(small_corpus.queries[i:i + 1, :n]),
+            VMAP)
+        np.testing.assert_array_equal(t.result()[1],
+                                      np.asarray(ref.doc_ids)[0])
+        np.testing.assert_array_equal(t.result()[0],
+                                      np.asarray(ref.scores)[0])
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old signatures warn and match the unified convention
+# ---------------------------------------------------------------------------
+
+LCFG = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48,
+                    k=10)          # jnp path: shim equality, no kernel cost
+
+
+def test_legacy_phase_signatures_warn_and_match(small_corpus, small_index):
+    idx, _ = small_index
+    q = jnp.asarray(small_corpus.queries[0])
+    qb = q[None]
+    cs_b, bits_b, bm_b = engine.phase1_candidates(idx, qb, LCFG)
+    with pytest.warns(DeprecationWarning, match="phase1_candidates"):
+        cs, bits, bm = engine.phase1_candidates(idx, q, LCFG)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(bits_b[0]))
+
+    sel1_b = engine.phase2_prefilter(idx, qb, LCFG, bits=bits_b, bitmap=bm_b)
+    with pytest.warns(DeprecationWarning, match="phase2_prefilter"):
+        sel1 = engine.phase2_prefilter(idx, bits, bm, LCFG)
+    np.testing.assert_array_equal(np.asarray(sel1), np.asarray(sel1_b[0]))
+
+    sel2_b = engine.phase3_centroid_interaction(idx, qb, LCFG, cs=cs_b,
+                                                sel1=sel1_b)
+    with pytest.warns(DeprecationWarning, match="phase3_centroid"):
+        sel2 = engine.phase3_centroid_interaction(idx, cs, sel1, LCFG)
+    np.testing.assert_array_equal(np.asarray(sel2), np.asarray(sel2_b[0]))
+
+    res_b = engine.phase4_late_interaction(idx, qb, LCFG, cs=cs_b,
+                                           sel2=sel2_b)
+    with pytest.warns(DeprecationWarning, match="phase4_late"):
+        scores, ids = engine.phase4_late_interaction(idx, q, cs, sel2, LCFG)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(res_b.doc_ids[0]))
+    np.testing.assert_array_equal(np.asarray(scores),
+                                  np.asarray(res_b.scores[0]))
+
+    with pytest.warns(DeprecationWarning, match="phase12_prefilter"):
+        cs12, sel12 = engine.phase12_prefilter(idx, q, LCFG)
+    np.testing.assert_array_equal(np.asarray(sel12), np.asarray(sel1_b[0]))
+
+    res34_b = engine.phase34_late_interaction(idx, qb, LCFG, cs=cs_b,
+                                              sel1=sel1_b)
+    with pytest.warns(DeprecationWarning, match="phase34_late"):
+        s34, i34 = engine.phase34_late_interaction(idx, q, cs, sel1, LCFG)
+    np.testing.assert_array_equal(np.asarray(i34),
+                                  np.asarray(res34_b.doc_ids[0]))
+
+
+def test_new_signatures_do_not_warn(small_corpus, small_index, recwarn):
+    idx, _ = small_index
+    qb = jnp.asarray(small_corpus.queries[:2])
+    cs, bits, bm = engine.phase1_candidates(idx, qb, LCFG)
+    sel1 = engine.phase2_prefilter(idx, qb, LCFG, bits=bits, bitmap=bm)
+    engine.phase34_late_interaction(idx, qb, LCFG, cs=cs, sel1=sel1)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]

@@ -17,17 +17,23 @@ from repro.core import EngineConfig, engine
 CFG = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48, k=10)
 
 
-def _compose(idx, q, cfg):
-    """Run the four phases through the public split entry points."""
+def _compose(idx, queries, cfg):
+    """Run the four phases through the public split entry points (the
+    unified ``(index, queries, cfg, *, q_mask=None, ...)`` convention on
+    batched queries)."""
     if cfg.use_kernels and cfg.fused_prefilter:
-        cs, sel1 = engine.phase12_prefilter(idx, q, cfg)
+        cs, sel1 = engine.phase12_prefilter(idx, queries, cfg)
     else:
-        cs, bits, bitmap = engine.phase1_candidates(idx, q, cfg)
-        sel1 = engine.phase2_prefilter(idx, bits, bitmap, cfg)
+        cs, bits, bitmap = engine.phase1_candidates(idx, queries, cfg)
+        sel1 = engine.phase2_prefilter(idx, queries, cfg, bits=bits,
+                                       bitmap=bitmap)
     if cfg.use_kernels and cfg.fused_late_interaction:
-        return engine.phase34_late_interaction(idx, q, cs, sel1, cfg)
-    sel2 = engine.phase3_centroid_interaction(idx, cs, sel1, cfg)
-    return engine.phase4_late_interaction(idx, q, cs, sel2, cfg)
+        return engine.phase34_late_interaction(idx, queries, cfg, cs=cs,
+                                               sel1=sel1)
+    sel2 = engine.phase3_centroid_interaction(idx, queries, cfg, cs=cs,
+                                              sel1=sel1)
+    return engine.phase4_late_interaction(idx, queries, cfg, cs=cs,
+                                          sel2=sel2)
 
 
 # (use_kernels=True, fused=False) composition is covered more cheaply by
@@ -43,12 +49,10 @@ def test_phases_compose_to_retrieve(small_corpus, small_index, mode,
                               use_kernels=use_kernels, fused_prefilter=fused)
     queries = jnp.asarray(small_corpus.queries[:2])
     full = engine.retrieve(idx, queries, cfg)
-    for b in range(queries.shape[0]):
-        scores, ids = _compose(idx, queries[b], cfg)
-        np.testing.assert_array_equal(np.asarray(ids),
-                                      np.asarray(full.doc_ids[b]))
-        np.testing.assert_allclose(np.asarray(scores),
-                                   np.asarray(full.scores[b]), rtol=1e-6)
+    scores, ids = _compose(idx, queries, cfg)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(full.doc_ids))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(full.scores),
+                               rtol=1e-6)
 
 
 def test_phases_compose_with_th_r_none(small_corpus, small_index):
@@ -57,8 +61,8 @@ def test_phases_compose_with_th_r_none(small_corpus, small_index):
     cfg = dataclasses.replace(CFG, th_r=None)
     q = jnp.asarray(small_corpus.queries[0])
     full = engine.retrieve(idx, q[None], cfg)
-    scores, ids = _compose(idx, q, cfg)
-    np.testing.assert_array_equal(np.asarray(ids),
+    scores, ids = _compose(idx, q[None], cfg)
+    np.testing.assert_array_equal(np.asarray(ids[0]),
                                   np.asarray(full.doc_ids[0]))
 
 
@@ -69,10 +73,10 @@ def test_phases_compose_bf16_cs(small_corpus, small_index):
     cfg = dataclasses.replace(CFG, cs_dtype="bfloat16")
     q = jnp.asarray(small_corpus.queries[0])
     full = engine.retrieve(idx, q[None], cfg)
-    scores, ids = _compose(idx, q, cfg)
-    np.testing.assert_array_equal(np.asarray(ids),
+    scores, ids = _compose(idx, q[None], cfg)
+    np.testing.assert_array_equal(np.asarray(ids[0]),
                                   np.asarray(full.doc_ids[0]))
-    np.testing.assert_allclose(np.asarray(scores),
+    np.testing.assert_allclose(np.asarray(scores[0]),
                                np.asarray(full.scores[0]), rtol=1e-5)
 
 
@@ -86,8 +90,8 @@ def test_fused_prefilter_matches_unfused_selection(small_corpus, small_index):
                                    use_kernels=True)
         fcfg = dataclasses.replace(base, fused_prefilter=True)
         ucfg = dataclasses.replace(base, fused_prefilter=False)
-        _, sel_f = engine.phase12_prefilter(idx, q, fcfg)
-        _, sel_u = engine.phase12_prefilter(idx, q, ucfg)
+        _, sel_f = engine.phase12_prefilter(idx, q[None], fcfg)
+        _, sel_u = engine.phase12_prefilter(idx, q[None], ucfg)
         np.testing.assert_array_equal(np.asarray(sel_f), np.asarray(sel_u))
 
 
@@ -120,13 +124,16 @@ def test_fused_late_interaction_matches_unfused(small_corpus, small_index,
     base = dataclasses.replace(CFG, th_r=th_r, use_kernels=True)
     fcfg = dataclasses.replace(base, fused_late_interaction=True)
     ucfg = dataclasses.replace(base, fused_late_interaction=False)
-    cs, sel1 = engine.phase12_prefilter(idx, q, base)
-    s_f, i_f = engine.phase34_late_interaction(idx, q, cs, sel1, fcfg)
-    s_u, i_u = engine.phase34_late_interaction(idx, q, cs, sel1, ucfg)
+    cs, sel1 = engine.phase12_prefilter(idx, q[None], base)
+    s_f, i_f = engine.phase34_late_interaction(idx, q[None], fcfg, cs=cs,
+                                               sel1=sel1)
+    s_u, i_u = engine.phase34_late_interaction(idx, q[None], ucfg, cs=cs,
+                                               sel1=sel1)
     np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_u))
     np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_u))
     # and against the pure-jnp reference engine (no kernels at all)
     s_r, i_r = engine.phase34_late_interaction(
-        idx, q, cs, sel1, dataclasses.replace(base, use_kernels=False))
+        idx, q[None], dataclasses.replace(base, use_kernels=False), cs=cs,
+        sel1=sel1)
     np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_r))
     np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_r))

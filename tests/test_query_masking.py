@@ -121,16 +121,17 @@ def test_all_true_mask_is_identity(small_corpus, small_index, use_kernels):
 def test_all_true_mask_is_identity_phase_split(small_corpus, small_index):
     """The phase-split entry points honour the mask the same way."""
     idx, _ = small_index
-    q = jnp.asarray(small_corpus.queries[0])
-    ones = jnp.ones((q.shape[0],), jnp.bool_)
+    q = jnp.asarray(small_corpus.queries[:1])
+    ones = jnp.ones(q.shape[:2], jnp.bool_)
     cs0, bits0, bm0 = engine.phase1_candidates(idx, q, CFG)
-    cs1, bits1, bm1 = engine.phase1_candidates(idx, q, CFG, ones)
+    cs1, bits1, bm1 = engine.phase1_candidates(idx, q, CFG, q_mask=ones)
     np.testing.assert_array_equal(np.asarray(bits0), np.asarray(bits1))
     np.testing.assert_array_equal(np.asarray(bm0), np.asarray(bm1))
-    sel2 = engine.phase3_centroid_interaction(idx, cs0, jnp.arange(
-        CFG.n_filter, dtype=jnp.int32), CFG, ones)
-    sel2_ref = engine.phase3_centroid_interaction(idx, cs0, jnp.arange(
-        CFG.n_filter, dtype=jnp.int32), CFG)
+    sel1 = jnp.arange(CFG.n_filter, dtype=jnp.int32)[None]
+    sel2 = engine.phase3_centroid_interaction(idx, q, CFG, q_mask=ones,
+                                              cs=cs0, sel1=sel1)
+    sel2_ref = engine.phase3_centroid_interaction(idx, q, CFG, cs=cs0,
+                                                  sel1=sel1)
     np.testing.assert_array_equal(np.asarray(sel2), np.asarray(sel2_ref))
 
 
