@@ -1,0 +1,109 @@
+"""Fig. 9 (ours) — predicate-filter selectivity sweep: in-kernel filtering
+vs retrieve-then-post-filter, as the filter keeps fewer documents.
+
+Faceted retrieval has two honest implementations. **In-kernel** ANDs the
+predicate plane into the candidate bitmap inside phase 2 and masks
+non-passing survivors to -inf in phases 3-4 (docs/FILTERING.md) — budgets
+stay at their unfiltered operating point because every selection slot is
+spent on passing docs. **Post-filter** retrieves unfiltered and drops
+non-passing results on the host — to still deliver k passing docs at
+selectivity s it must inflate the retrieval depth to ~k/s (and the
+phase-3/4 budgets with it), so its cost grows as 1/s while the in-kernel
+lane's stays flat. The sweep measures exactly that crossover; the derived
+column reports how many of the k slots each lane actually filled with
+passing docs (post-filtering an undersized depth silently starves).
+
+Both lanes run the jnp reference engine AND the fused megakernel path
+(interpret mode on this container — ratios, not absolute times, carry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import EngineConfig
+from repro.core import engine as emvb
+from repro.core.bitvector import Pred, PredicateSet, compile_filter
+
+from .common import TH, TH_R, bench_corpus, bench_index, row, time_fn
+
+SELECTIVITIES = (0.9, 0.5, 0.1, 0.02)
+N_QUERIES = 4      # timed batch; the sweep's signal is per-selectivity cost
+SAFETY = 2         # post-filter depth head-room over the expected k/s
+
+
+def _pred_index():
+    """The bench index with one synthetic predicate per swept selectivity
+    (bit i of the plane = "doc passes the selectivity-i filter")."""
+    idx, meta = bench_index("msmarco", m=16)
+    n_docs = int(idx.codes.shape[0])
+    rng = np.random.default_rng(9)
+    preds = {f"sel{int(s * 100):02d}": rng.random(n_docs) < s
+             for s in SELECTIVITIES}
+    ps = PredicateSet.pack(preds)
+    return (idx._replace(pred_words=ps.words),
+            dataclasses.replace(meta, pred_names=ps.names), ps)
+
+
+def run() -> list[str]:
+    corpus = bench_corpus("msmarco")
+    idx, meta, ps = _pred_index()
+    n_docs = int(idx.codes.shape[0])
+    queries = np.asarray(corpus.queries[:N_QUERIES])
+    rows: list[str] = []
+
+    base = EngineConfig(k=10, th=TH, th_r=TH_R)
+    kernel = dict(use_kernels=True, fused_prefilter=True,
+                  fused_late_interaction=True, batched_kernels=True)
+
+    for s in SELECTIVITIES:
+        name = f"sel{int(s * 100):02d}"
+        plan = compile_filter(Pred(name), meta.pred_names)
+        pass_np = np.asarray(ps.mask(name))
+
+        def filled(ids):
+            """Mean fraction of the k result slots holding passing docs."""
+            keep = pass_np[np.asarray(ids)]
+            return float(keep.mean())
+
+        # post-filter depth: expected k/s passing docs per k_post retrieved,
+        # with head-room; budgets inflate with it (that inflation IS the cost)
+        k_post = min(n_docs, SAFETY * math.ceil(base.k / s))
+        post = dataclasses.replace(
+            base, k=k_post, n_docs=max(base.n_docs, k_post),
+            n_filter=min(n_docs, max(base.n_filter, 2 * k_post)))
+
+        for lane, kw in (("ref", {}), ("fused", kernel)):
+            fcfg = dataclasses.replace(base, doc_filter=plan, **kw)
+            pcfg = dataclasses.replace(post, **kw)
+            t_in = time_fn(lambda: emvb.retrieve(idx, queries, fcfg))
+            ids_in = np.asarray(emvb.retrieve(idx, queries, fcfg).doc_ids)
+
+            def post_filter():
+                res = emvb.retrieve(idx, queries, pcfg)
+                ids = np.asarray(res.doc_ids)
+                out = np.zeros((ids.shape[0], base.k), np.int32)
+                for b in range(ids.shape[0]):
+                    keep = ids[b][pass_np[ids[b]]]
+                    out[b, :len(keep[:base.k])] = keep[:base.k]
+                return out
+            t_post = time_fn(post_filter)
+            ids_post = post_filter()
+
+            rows.append(row(f"fig9,inkernel_{lane},s={s}", t_in * 1e6,
+                            f"filled={filled(ids_in) * 100:.0f}%"))
+            rows.append(row(f"fig9,postfilter_{lane},s={s},k_post={k_post}",
+                            t_post * 1e6,
+                            f"x{t_post / t_in:.2f},"
+                            f"filled={filled(ids_post) * 100:.0f}%"))
+    return rows
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

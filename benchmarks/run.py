@@ -5,14 +5,18 @@ Emits ``name,us_per_call,derived`` CSV rows (absolute times are single-core
 CPU; the EMVB/PLAID *ratios* are the reproduction target).
 
 ``--smoke`` runs the fast default subset (fig1: the phase breakdown, the
-fused-vs-unfused megakernel rows and the batched-vs-vmap batch sweep; fig6:
-the query-pruning latency/MRR sweep; fig7: latency + MRR@10 as the corpus
-grows 1 -> N streaming generations; fig8: serving-cache throughput/hit-rate,
-cold vs warm vs uncached; roofline: per-megakernel batched-vs-vmap wall time
-+ analytic arithmetic intensity at B in {1,4,16,64}) and writes the rows to
-``BENCH_smoke.json`` — with the roofline suite split out to its own
-``BENCH_roofline.json`` so the kernel-lane trajectory is a separate CI
-artifact — ``--json PATH`` does the same for any suite selection.
+fused-vs-unfused megakernel rows and the batched-vs-vmap batch sweep; fig2:
+the bit-vector threshold sweep locating the no-recall-loss operating point;
+fig4: vectorized-vs-naive set membership and bitfilter-vs-centroid
+-interaction; fig6: the query-pruning latency/MRR sweep; fig7: latency +
+MRR@10 as the corpus grows 1 -> N streaming generations; fig8:
+serving-cache throughput/hit-rate, cold vs warm vs uncached; fig9: the
+predicate-filter selectivity sweep, in-kernel vs post-filter; roofline:
+per-megakernel batched-vs-vmap wall time + analytic arithmetic intensity at
+B in {1,4,16,64}) and writes the rows to ``BENCH_smoke.json`` — with the
+roofline and fig9 suites split out to their own ``BENCH_roofline.json`` /
+``BENCH_fig9.json`` so those trajectories are separate CI artifacts —
+``--json PATH`` does the same for any suite selection.
 BENCH_*.json is gitignored by design — machine-dependent numbers belong in
 artifacts, not history.
 """
@@ -25,7 +29,7 @@ import time
 
 from . import (fig1_breakdown, fig2_threshold, fig4_membership,
                fig5_termfilter, fig6_pruning, fig7_streaming, fig8_serving,
-               roofline, table1_msmarco, table2_ood)
+               fig9_selectivity, roofline, table1_msmarco, table2_ood)
 
 SUITES = {
     "table1": table1_msmarco,
@@ -37,9 +41,11 @@ SUITES = {
     "fig6": fig6_pruning,
     "fig7": fig7_streaming,
     "fig8": fig8_serving,
+    "fig9": fig9_selectivity,
     "roofline": roofline,
 }
-SMOKE_SUITES = ["fig1", "fig6", "fig7", "fig8", "roofline"]
+SMOKE_SUITES = ["fig1", "fig2", "fig4", "fig6", "fig7", "fig8", "fig9",
+                "roofline"]
 
 
 def main() -> None:
@@ -83,16 +89,21 @@ def main() -> None:
             "machine": platform.machine(),
             "argv": sys.argv[1:],
         }
-        # the roofline suite ships as its own artifact (the kernel-lane
-        # perf trajectory) next to the figure smoke rows
-        if args.smoke and "roofline" in results:
-            roof = {"suites": {"roofline": results.pop("roofline")},
-                    "suite_seconds":
-                        {"roofline": round(timings.pop("roofline"), 1)},
-                    "meta": meta}
-            with open("BENCH_roofline.json", "w") as f:
-                json.dump(roof, f, indent=1)
-            print("# wrote BENCH_roofline.json", flush=True)
+        # the roofline and fig9 suites ship as their own artifacts (the
+        # kernel-lane and filter-lane perf trajectories) next to the figure
+        # smoke rows — the CI upload glob (BENCH_*.json) covers all three
+        if args.smoke:
+            for split, path in (("roofline", "BENCH_roofline.json"),
+                                ("fig9", "BENCH_fig9.json")):
+                if split not in results:
+                    continue
+                payload = {"suites": {split: results.pop(split)},
+                           "suite_seconds":
+                               {split: round(timings.pop(split), 1)},
+                           "meta": meta}
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=1)
+                print(f"# wrote {path}", flush=True)
         payload = {
             "suites": results,
             "suite_seconds": {k: round(v, 1) for k, v in timings.items()},

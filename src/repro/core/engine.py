@@ -106,6 +106,17 @@ class EngineConfig:
     # is carried out with reduced precision"): "bfloat16" halves the CS
     # matrix HBM traffic — the memory bound of the sharded serving plan.
     cs_dtype: str = "float32"
+    # Metadata filter: a compiled bitvector.FilterPlan over the index's
+    # predicate plane (docs/FILTERING.md), or None for unfiltered. The plan
+    # is a static tuple of word-mask clauses, so the kernel signatures stay
+    # shape-stable (one jit trace per distinct plan) and it folds into
+    # config_fingerprint — filtered and unfiltered cache entries can never
+    # collide. Filtered retrieval enforces the filter at EVERY selection:
+    # phase 2 ANDs it into the candidate bitmap (in-kernel for the fused
+    # score_all megakernel), phases 3-4 mask non-passing survivors' scores
+    # to -inf, so the contract `filtered == retrieve-then-post-filter` holds
+    # bit-exactly under lossless budgets.
+    doc_filter: Optional[bitvector.FilterPlan] = None
 
     def __post_init__(self):
         """Fail fast with actionable messages on the configs that otherwise
@@ -149,6 +160,13 @@ class EngineConfig:
             raise ValueError(
                 f"unknown cs_dtype={self.cs_dtype!r}: expected 'float32' or "
                 "'bfloat16'")
+        if self.doc_filter is not None and \
+                not isinstance(self.doc_filter, bitvector.FilterPlan):
+            raise ValueError(
+                f"doc_filter is a {type(self.doc_filter).__name__}: expected "
+                "a compiled FilterPlan (or None) — compile your FilterExpr "
+                "against the index's predicate names first with "
+                "bitvector.compile_filter(expr, meta.pred_names)")
 
 
 class RetrievalResult(NamedTuple):
@@ -194,6 +212,15 @@ def _kops(cfg: EngineConfig):
     return kops
 
 
+def _with_filter(cfg: EngineConfig, doc_filter) -> EngineConfig:
+    """Fold a per-call ``doc_filter`` into the static config (kwarg wins
+    over any filter already on ``cfg``); ``EngineConfig.__post_init__``
+    rejects uncompiled FilterExprs with the compile hint."""
+    if doc_filter is None:
+        return cfg
+    return dataclasses.replace(cfg, doc_filter=doc_filter)
+
+
 # ---------------------------------------------------------------------------
 # Phase 1 — centroid scores, bitvector, probes, candidate bitmap
 # ---------------------------------------------------------------------------
@@ -224,6 +251,15 @@ def candidate_bitmap(ivf: jax.Array, ivf_lens: jax.Array, probe_ids: jax.Array,
     return bitmap.at[ids.reshape(-1)].set(True, mode="drop")
 
 
+def _doc_pass(index: PackedIndex, cfg: EngineConfig) -> Optional[jax.Array]:
+    """(n_docs,) bool — docs passing ``cfg.doc_filter`` — or None when
+    unfiltered. Evaluated over the index's predicate plane; constant across
+    a query batch, so under vmap it lowers to one corpus-wide pass."""
+    if cfg.doc_filter is None:
+        return None
+    return bitvector.apply_filter_plan(cfg.doc_filter, index.pred_words)
+
+
 # ---------------------------------------------------------------------------
 # Internal phase helpers — single source of truth for retrieve() AND the
 # public phase-split entry points.
@@ -244,6 +280,9 @@ def _phase1(q: jax.Array, index: PackedIndex, cfg: EngineConfig,
                                                 q_mask)
     bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
                               index.codes.shape[0])
+    doc_pass = _doc_pass(index, cfg)
+    if doc_pass is not None:
+        bitmap = bitmap & doc_pass     # filtered docs are never candidates
     return cs, bits, bitmap
 
 
@@ -297,6 +336,12 @@ def _phase12(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
     bitmap = candidate_bitmap(index.ivf, index.ivf_lens, probe_ids,
                               index.codes.shape[0])
     if cfg.candidate_mode == "compact":
+        # Filter BEFORE compaction: non-passing docs never enter the
+        # fixed-size candidate buffer, matching the unfused path's
+        # pre-filtered bitmap bit for bit.
+        doc_pass = _doc_pass(index, cfg)
+        if doc_pass is not None:
+            bitmap = bitmap & doc_pass
         cand_ids, cand_valid = _compact_candidates(bitmap, cfg)
         c_codes = jnp.take(index.codes, cand_ids, axis=0)
         c_mask = jnp.take(token_mask, cand_ids, axis=0)
@@ -305,8 +350,13 @@ def _phase12(q: jax.Array, index: PackedIndex, token_mask: jax.Array,
                                           interpret=cfg.kernel_interpret)
         sel1 = jnp.take(cand_ids, sel1_local)
     else:
+        # score_all: the predicate words ride into the megakernel and the
+        # static word-combine plan ANDs them into the candidate bitmap
+        # INSIDE the launch — no host-side full-corpus pass mask.
+        plan = None if cfg.doc_filter is None else cfg.doc_filter.clauses
         _, sel1, _ = kops.prefilter(cs, cfg.th, index.codes, token_mask,
                                     bitmap, cfg.n_filter, q_mask,
+                                    pred_words=index.pred_words, plan=plan,
                                     interpret=cfg.kernel_interpret)
     return cs, sel1.astype(jnp.int32)
 
@@ -325,6 +375,12 @@ def _phase3(index: PackedIndex, token_mask: jax.Array, cs: jax.Array,
     else:
         sbar = interaction.centroid_interaction(cs_t, s1_codes, s1_mask,
                                                 q_mask)
+    doc_pass = _doc_pass(index, cfg)
+    if doc_pass is not None:
+        # Under tight budgets phase 2's fixed n_filter slots can still admit
+        # non-passing fillers; mask their S̄ to -inf so they cannot displace
+        # passing docs from the phase-3 cut.
+        sbar = jnp.where(jnp.take(doc_pass, sel1), sbar, -jnp.inf)
     _, sel2_local = jax.lax.top_k(sbar, cfg.n_docs)
     return jnp.take(sel1, sel2_local)                            # (nd,)
 
@@ -361,6 +417,11 @@ def _phase4(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
         scores = interaction.late_interaction_pq(
             cs_t, lut, s2_codes, s2_res, s2_mask, cfg.th_r, centroid=centroid,
             q_mask=q_mask)
+    doc_pass = _doc_pass(index, cfg)
+    if doc_pass is not None:
+        # Final guard: a non-passing doc that slipped through the fixed
+        # phase-2/3 slots must not appear in the top-k.
+        scores = jnp.where(jnp.take(doc_pass, sel2), scores, -jnp.inf)
     top_scores, top_local = jax.lax.top_k(scores, cfg.k)
     return top_scores, jnp.take(sel2, top_local)
 
@@ -382,9 +443,11 @@ def _phase34(index: PackedIndex, token_mask: jax.Array, q: jax.Array,
     s1_codes = jnp.take(index.codes, sel1, axis=0)               # (nf, cap)
     s1_res = jnp.take(index.res_codes, sel1, axis=0)
     s1_mask = jnp.take(token_mask, sel1, axis=0)
+    doc_pass = _doc_pass(index, cfg)
+    s1_pass = None if doc_pass is None else jnp.take(doc_pass, sel1)
     top_scores, top_pos, _, _ = kops.pqinter(
         cs.T, lut, s1_codes, s1_res, s1_mask, cfg.th_r, cfg.n_docs, cfg.k,
-        q_mask, interpret=cfg.kernel_interpret)
+        q_mask, doc_pass=s1_pass, interpret=cfg.kernel_interpret)
     return top_scores, jnp.take(sel1, top_pos)
 
 
@@ -437,6 +500,11 @@ def _phase12_batch(index: PackedIndex, token_mask: jax.Array,
         lambda p: candidate_bitmap(index.ivf, index.ivf_lens, p,
                                    index.codes.shape[0]))(probe_ids)
     if cfg.candidate_mode == "compact":
+        # Same pre-compaction filter as the single-query fused path, shared
+        # across the batch (the pass mask is query-independent).
+        doc_pass = _doc_pass(index, cfg)
+        if doc_pass is not None:
+            bitmap = bitmap & doc_pass[None, :]
         cand_ids, cand_valid = jax.vmap(
             lambda b: _compact_candidates(b, cfg))(bitmap)
         c_codes = jnp.take(index.codes, cand_ids, axis=0)  # (B, cand_cap, cap)
@@ -446,9 +514,11 @@ def _phase12_batch(index: PackedIndex, token_mask: jax.Array,
             interpret=cfg.kernel_interpret)
         sel1 = jnp.take_along_axis(cand_ids, sel1_local, axis=1)
     else:
+        plan = None if cfg.doc_filter is None else cfg.doc_filter.clauses
         _, sel1, _ = kops.prefilter_batched(
             cs, cfg.th, index.codes, token_mask, bitmap, cfg.n_filter,
-            q_masks, interpret=cfg.kernel_interpret)
+            q_masks, pred_words=index.pred_words, plan=plan,
+            interpret=cfg.kernel_interpret)
     return cs, sel1.astype(jnp.int32)
 
 
@@ -475,9 +545,12 @@ def _phase34_batch(index: PackedIndex, token_mask: jax.Array,
     s1_codes = jnp.take(index.codes, sel1, axis=0)           # (B, nf, cap)
     s1_res = jnp.take(index.res_codes, sel1, axis=0)
     s1_mask = jnp.take(token_mask, sel1, axis=0)
+    doc_pass = _doc_pass(index, cfg)
+    s1_pass = None if doc_pass is None else jnp.take(doc_pass, sel1)  # (B,nf)
     top_scores, top_pos, _, _ = kops.pqinter_batched(
         jnp.swapaxes(cs, -1, -2), lut, s1_codes, s1_res, s1_mask, cfg.th_r,
-        cfg.n_docs, cfg.k, q_masks, interpret=cfg.kernel_interpret)
+        cfg.n_docs, cfg.k, q_masks, doc_pass=s1_pass,
+        interpret=cfg.kernel_interpret)
     return RetrievalResult(top_scores,
                            jnp.take_along_axis(sel1, top_pos, axis=1))
 
@@ -500,8 +573,17 @@ def _retrieve_jit(index: PackedIndex, queries: jax.Array, cfg: EngineConfig,
 
 
 def retrieve(index: PackedIndex, queries, cfg: EngineConfig,
-             q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+             q_masks: Optional[jax.Array] = None, *,
+             doc_filter: Optional[bitvector.FilterPlan] = None
+             ) -> RetrievalResult:
     """queries (B, n_q, d) or QueryBatch -> RetrievalResult, (B, k) each.
+
+    doc_filter : optional compiled :class:`~repro.core.bitvector.FilterPlan`
+    restricting results to documents whose predicate-plane bits satisfy the
+    filter (docs/FILTERING.md); equivalent to setting ``cfg.doc_filter``
+    (which it overrides for this call). Filtered retrieval equals
+    retrieve-then-post-filter bit for bit under lossless budgets, in every
+    dispatch mode.
 
     q_masks : optional (B, n_q) bool — True for live query terms (or carry
     it inside a :class:`QueryBatch`). Masked (zero-padded / pruned) terms
@@ -517,7 +599,8 @@ def retrieve(index: PackedIndex, queries, cfg: EngineConfig,
     are bit-identical — ids AND score bits, including tie order.
     """
     qb = _as_query_batch(queries, q_masks)
-    return _retrieve_jit(index, qb.q, cfg, qb.q_mask)
+    return _retrieve_jit(index, qb.q, _with_filter(cfg, doc_filter),
+                         qb.q_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -525,7 +608,9 @@ def retrieve(index: PackedIndex, queries, cfg: EngineConfig,
 #
 # ONE convention: ``phaseN(index, queries, cfg, *, q_mask=None, ...)`` on
 # BATCHED queries ((B, n_q, d) array or QueryBatch), intermediates riding as
-# keyword-only arguments with a leading batch axis, results batched. Each is
+# keyword-only arguments with a leading batch axis, results batched. Every
+# entry point also takes ``doc_filter=`` (a compiled FilterPlan), folded
+# into the static config exactly as ``retrieve`` does. Each is
 # a plain-Python normalizer over a jit'd batched internal that composes the
 # SAME _phaseN helpers retrieve() uses, so composing the split phases
 # reproduces ``retrieve`` exactly by construction.
@@ -609,6 +694,7 @@ def phase1_candidates(index: PackedIndex, *args, **kwargs):
     (cs (B, n_q, n_c), bits (B, n_c) u32, bitmap (B, n_docs) bool): centroid
     scores, the stacked Eq. 4 bit vectors, and the IVF candidate bitmap."""
     queries, cfg = args[0], args[1]
+    cfg = _with_filter(cfg, kwargs.get("doc_filter"))
     legacy = (not isinstance(queries, QueryBatch)
               and getattr(queries, "ndim", 3) == 2) or len(args) > 2
     if legacy:
@@ -636,6 +722,7 @@ def phase2_prefilter(index: PackedIndex, *args, **kwargs):
         return _squeeze0(
             _phase2_entry(index, cfg, bits[None], bitmap[None]))
     queries, cfg = args[0], args[1]
+    cfg = _with_filter(cfg, kwargs.get("doc_filter"))
     bits, bitmap = kwargs.get("bits"), kwargs.get("bitmap")
     if bits is None or bitmap is None:
         qb = _as_query_batch(queries, kwargs.get("q_mask"))
@@ -650,6 +737,7 @@ def phase12_prefilter(index: PackedIndex, *args, **kwargs):
     ``cfg.batched_kernels`` applies) the breakdown benchmark times against
     the phase1_candidates + phase2_prefilter pair."""
     queries, cfg = args[0], args[1]
+    cfg = _with_filter(cfg, kwargs.get("doc_filter"))
     legacy = (not isinstance(queries, QueryBatch)
               and getattr(queries, "ndim", 3) == 2) or len(args) > 2
     if legacy:
@@ -676,6 +764,7 @@ def phase3_centroid_interaction(index: PackedIndex, *args, **kwargs):
         qm = None if q_mask is None else q_mask[None]
         return _phase3_entry(index, cfg, cs[None], sel1[None], qm)[0]
     queries, cfg = args[0], args[1]
+    cfg = _with_filter(cfg, kwargs.get("doc_filter"))
     qb = _as_query_batch(queries, kwargs.get("q_mask"))
     cs, sel1 = kwargs.get("cs"), kwargs.get("sel1")
     if cs is None or sel1 is None:
@@ -701,6 +790,7 @@ def phase4_late_interaction(index: PackedIndex, *args, **kwargs):
         return _squeeze0(
             _phase4_entry(index, q[None], cfg, cs[None], sel2[None], qm))
     queries, cfg = args[0], args[1]
+    cfg = _with_filter(cfg, kwargs.get("doc_filter"))
     qb = _as_query_batch(queries, kwargs.get("q_mask"))
     cs, sel2 = kwargs.get("cs"), kwargs.get("sel2")
     if cs is None or sel2 is None:
@@ -730,6 +820,7 @@ def phase34_late_interaction(index: PackedIndex, *args, **kwargs):
         return _squeeze0(
             _phase34_entry(index, q[None], cfg, cs[None], sel1[None], qm))
     queries, cfg = args[0], args[1]
+    cfg = _with_filter(cfg, kwargs.get("doc_filter"))
     qb = _as_query_batch(queries, kwargs.get("q_mask"))
     cs, sel1 = kwargs.get("cs"), kwargs.get("sel1")
     if cs is None or sel1 is None:
@@ -846,7 +937,8 @@ def merge_generation_topk(parts: list[RetrievalResult], offsets,
 
 def retrieve_generation_topk(index: PackedIndex, meta, offset: int,
                              queries: jax.Array, cfg: EngineConfig,
-                             q_masks: Optional[jax.Array] = None
+                             q_masks: Optional[jax.Array] = None, *,
+                             doc_filter: Optional[bitvector.FilterPlan] = None
                              ) -> RetrievalResult:
     """One generation's partial top-k, doc ids mapped into the GLOBAL space.
 
@@ -859,7 +951,20 @@ def retrieve_generation_topk(index: PackedIndex, meta, offset: int,
     (query bytes, generation contents, config), which is exactly what makes
     it cacheable (``repro.serving.cache``): a cached partial merges
     bit-identically with freshly computed ones.
+
+    ``doc_filter`` (or ``cfg.doc_filter``) must be compiled against THIS
+    timeline's predicate names — checked against ``meta.pred_names`` here,
+    where the generation's meta is in hand.
     """
+    cfg = _with_filter(cfg, doc_filter)
+    if cfg.doc_filter is not None and \
+            tuple(cfg.doc_filter.names) != tuple(meta.pred_names):
+        raise ValueError(
+            f"doc_filter was compiled against predicate names "
+            f"{tuple(cfg.doc_filter.names)} but this generation declares "
+            f"{tuple(meta.pred_names)}: bit positions would disagree — "
+            "recompile the FilterExpr with compile_filter(expr, "
+            "meta.pred_names) for this timeline")
     part = retrieve(index, queries,
                     adapt_config_to_corpus(cfg, meta.n_docs, meta.cap),
                     q_masks)
@@ -868,7 +973,8 @@ def retrieve_generation_topk(index: PackedIndex, meta, offset: int,
 
 def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
                       cfg: EngineConfig,
-                      q_masks: Optional[jax.Array] = None) -> RetrievalResult:
+                      q_masks: Optional[jax.Array] = None, *,
+                      doc_filter=None) -> RetrievalResult:
     """Retrieve over a :class:`~repro.core.store.ShardedTimeline` — the
     PLAID-SHIRTTT merge path.
 
@@ -907,14 +1013,25 @@ def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
     top-k merge BY RANK through :func:`merge_partial_topk_by_rank` —
     scores from different codebooks are not bit-comparable, ranks are.
     A single-epoch EpochedTimeline is bit-exact to its plain timeline.
+
+    ``doc_filter`` accepts a compiled :class:`FilterPlan` (must match the
+    timeline's predicate names) or a raw
+    :class:`~repro.core.bitvector.FilterExpr`, which is compiled here
+    against each (epoch's) timeline's own predicate names — the one entry
+    point where per-epoch name sets can legitimately differ.
     """
     epochs = getattr(timeline, "epochs", None)
     if epochs is not None:
         parts = [
             RetrievalResult(r.scores, r.doc_ids + jnp.int32(eoff))
             for tl, eoff in timeline
-            for r in (retrieve_timeline(tl, queries, cfg, q_masks),)]
+            for r in (retrieve_timeline(tl, queries, cfg, q_masks,
+                                        doc_filter=doc_filter),)]
         return merge_partial_topk_by_rank(parts, cfg.k)
+    if isinstance(doc_filter, bitvector.FilterExpr):
+        doc_filter = bitvector.compile_filter(doc_filter,
+                                              timeline.metas[0].pred_names)
+    cfg = _with_filter(cfg, doc_filter)
     parts = [retrieve_generation_topk(gen, meta, off, queries, cfg, q_masks)
              for gen, meta, off in timeline]
     return merge_partial_topk(parts, cfg.k)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .bitvector import PredicateSet
 from .kmeans import kmeans_spherical, assign
 from .pq import PQCodebooks, train_pq, train_opq, encode_pq
 from .residual import ResidualCodec, train_residual_codec, encode_residual
@@ -59,6 +60,11 @@ class IndexMeta:
     # something is grown). Quantized against frozen codebooks, so this only
     # ever degrades as the corpus distribution moves.
     grown_quant_mse: float = 0.0
+    # names of the packed per-doc metadata predicates: bit i of
+    # PackedIndex.pred_words is pred_names[i] (docs/FILTERING.md). Empty
+    # means no predicate plane (pred_words is all-zero). FilterPlans compile
+    # against this ordering, so it is part of the index identity.
+    pred_names: tuple = ()
 
     @property
     def drift(self) -> float:
@@ -95,6 +101,9 @@ class PackedIndex(NamedTuple):
     plaid_cutoffs: jax.Array
     plaid_weights: jax.Array
     opq_rotation: jax.Array   # (d, d); identity when OPQ disabled
+    pred_words: jax.Array     # (n_docs,) uint32 predicate plane; bit i of
+    #                           word d == meta.pred_names[i] holds for doc d
+    #                           (all-zero when the index has no predicates)
 
     @property
     def pq(self) -> PQCodebooks:
@@ -216,7 +225,8 @@ def build_index(key: jax.Array,
                 list_cap: Optional[int] = None,
                 kmeans_iters: int = 8,
                 pq_train_size: int = 65536,
-                use_opq: bool = False) -> tuple[PackedIndex, IndexMeta]:
+                use_opq: bool = False,
+                predicates=None) -> tuple[PackedIndex, IndexMeta]:
     """Build the full EMVB/PLAID index over a padded corpus (eager, once).
 
     Trains the centroid vocabulary (spherical k-means over all real token
@@ -227,10 +237,29 @@ def build_index(key: jax.Array,
     (``train_quant_mse``) that ``store.add_passages`` later measures its
     drift statistic against.
 
+    ``predicates`` optionally attaches a metadata predicate plane: a
+    :class:`~repro.core.bitvector.PredicateSet` or a ``{name: (n_docs,)
+    bool}`` mapping, packed one bit per name into ``pred_words`` and named
+    in ``meta.pred_names`` (docs/FILTERING.md).
+
     -> (PackedIndex, IndexMeta)
     """
     n_docs, cap, d = doc_embs.shape
     k1, k2, k3 = jax.random.split(key, 3)
+
+    if predicates is None:
+        pred_names: tuple = ()
+        pred_words = np.zeros(n_docs, np.uint32)
+    else:
+        pset = (predicates if isinstance(predicates, PredicateSet)
+                else PredicateSet.pack(predicates))
+        if pset.words.shape[0] != n_docs:
+            raise ValueError(
+                f"predicate plane covers {pset.words.shape[0]} docs but the "
+                f"corpus has {n_docs}: predicates must be given for every "
+                "doc at build time")
+        pred_names = pset.names
+        pred_words = np.asarray(pset.words)
 
     mask = (np.arange(cap)[None, :] < doc_lens[:, None])
     flat = jnp.asarray(doc_embs.reshape(-1, d)[mask.reshape(-1)])
@@ -273,7 +302,8 @@ def build_index(key: jax.Array,
 
     meta = IndexMeta(n_docs=n_docs, n_centroids=n_centroids, d=d, cap=cap,
                      m=m, nbits=nbits, plaid_b=plaid_b, list_cap=list_cap,
-                     n_dropped=n_dropped, train_quant_mse=train_quant_mse)
+                     n_dropped=n_dropped, train_quant_mse=train_quant_mse,
+                     pred_names=pred_names)
     idx = PackedIndex(
         centroids=centroids,
         codes=jnp.asarray(codes),
@@ -286,5 +316,6 @@ def build_index(key: jax.Array,
         plaid_cutoffs=codec.cutoffs,
         plaid_weights=codec.bucket_weights,
         opq_rotation=rotation,
+        pred_words=jnp.asarray(pred_words),
     )
     return idx, meta

@@ -37,6 +37,7 @@ from typing import Iterator
 import jax.numpy as jnp
 import numpy as np
 
+from .bitvector import MAX_PREDICATES, PredicateSet
 from .index import IndexMeta, PackedIndex, _build_ivf, bytes_per_embedding, \
     quantize_tokens
 from .pq import encode_pq
@@ -46,18 +47,26 @@ from .residual import encode_residual
 # refuse files from the future. See docs/INDEX_FORMAT.md for the policy.
 # v2: manifest gains the content ``fingerprint`` (the serving cache's
 # generation id); v1 files load fine, they just carry no fingerprint.
-SCHEMA_VERSION = 2
+# v3: the predicate plane — ``pred_words`` joins the array set and
+# ``pred_names`` the meta (docs/FILTERING.md). Additive: v2 files load as
+# "no plane" (empty names, all-zero words), and their fingerprints verify
+# over the v2 field subset.
+SCHEMA_VERSION = 3
 _FORMAT = "emvb-packed-index"
 _TIMELINE_FORMAT = "emvb-sharded-timeline"
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+# the array set of schema v2 saves (everything but the predicate plane) —
+# what their persisted fingerprints were computed over
+_V2_FIELDS = tuple(f for f in PackedIndex._fields if f != "pred_words")
 
 
 # ---------------------------------------------------------------------------
 # Content fingerprints — the serving cache's generation ids
 # ---------------------------------------------------------------------------
 
-def index_fingerprint(index: PackedIndex) -> str:
+def index_fingerprint(index: PackedIndex, *, fields=None) -> str:
     """Content fingerprint of an index: sha256 over every array's name,
     dtype, shape and bytes (hex digest).
 
@@ -67,10 +76,12 @@ def index_fingerprint(index: PackedIndex) -> str:
     keyed by it can never be served against different contents —
     ``add_passages`` necessarily changes ``codes``/``doc_lens`` and with
     them the fingerprint. Persisted in the ``save_index`` manifest and
-    verified on load (docs/INDEX_FORMAT.md).
+    verified on load (docs/INDEX_FORMAT.md). Schema v3 folds the predicate
+    plane (``pred_words``) into the hash; ``fields`` lets the loader verify
+    v2-era saves over the v2 field subset.
     """
     h = hashlib.sha256()
-    for f in PackedIndex._fields:
+    for f in (PackedIndex._fields if fields is None else fields):
         a = np.ascontiguousarray(np.asarray(getattr(index, f)))
         h.update(f.encode())
         h.update(str(a.dtype).encode())
@@ -155,6 +166,9 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
     meta_dict = manifest.get("meta")
     if not isinstance(meta_dict, dict):
         raise _fail(path, f"{_MANIFEST} is missing the 'meta' table")
+    if version < 3:
+        # v2 manifests predate the predicate plane: default to "no plane"
+        meta_dict.setdefault("pred_names", [])
     missing = sorted(meta_fields - meta_dict.keys())
     unknown = sorted(meta_dict.keys() - meta_fields)
     if missing:
@@ -164,13 +178,27 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
         raise _fail(path, f"manifest meta has unknown field(s) {unknown} at "
                           f"schema_version={version}; new fields require a "
                           "schema version bump (docs/INDEX_FORMAT.md)")
+    pn = meta_dict["pred_names"]
+    if not (isinstance(pn, list) and
+            all(isinstance(n, str) for n in pn)):
+        raise _fail(path, f"meta pred_names={pn!r} is not a list of "
+                          "predicate name strings — corrupt or hand-edited "
+                          "manifest")
+    if len(pn) > MAX_PREDICATES:
+        raise _fail(path, f"meta declares {len(pn)} predicate names > "
+                          f"{MAX_PREDICATES} (one bit per name in a uint32 "
+                          "word)")
+    meta_dict["pred_names"] = tuple(pn)   # JSON round-trips tuples as lists
     meta = IndexMeta(**meta_dict)
 
+    # v2 saves carry no pred_words array; everything else is identical
+    want_fields = PackedIndex._fields if version >= 3 else _V2_FIELDS
     decl = manifest.get("arrays")
     if not isinstance(decl, dict) or \
-            sorted(decl) != sorted(PackedIndex._fields):
-        raise _fail(path, "manifest 'arrays' table does not list exactly the "
-                          f"PackedIndex fields {sorted(PackedIndex._fields)}")
+            sorted(decl) != sorted(want_fields):
+        raise _fail(path, "manifest 'arrays' table does not list exactly "
+                          f"the schema-v{version} array set "
+                          f"{sorted(want_fields)}")
     apath = os.path.join(path, _ARRAYS)
     if not os.path.isfile(apath):
         raise _fail(path, f"no {_ARRAYS} next to the manifest")
@@ -180,8 +208,8 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
     except (zipfile.BadZipFile, OSError, ValueError) as e:
         raise _fail(path, f"corrupt {_ARRAYS}: {e}") from e
 
-    fields = []
-    for f in PackedIndex._fields:
+    loaded = {}
+    for f in want_fields:
         if f not in arrays:
             raise _fail(path, f"{_ARRAYS} is missing array {f!r} declared "
                               "in the manifest")
@@ -190,8 +218,12 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
             raise _fail(path, f"array {f!r} is {a.dtype}{list(a.shape)} but "
                               f"the manifest declares {want['dtype']}"
                               f"{want['shape']} — corrupt save")
-        fields.append(jnp.asarray(a))
-    index = PackedIndex(*fields)
+        loaded[f] = jnp.asarray(a)
+    if version < 3:
+        # the empty plane: no names, no bits — schema-v3 in-memory shape
+        loaded["pred_words"] = jnp.zeros(loaded["codes"].shape[0],
+                                         jnp.uint32)
+    index = PackedIndex(**loaded)
 
     # light cross-checks: meta and arrays must describe the same index
     n_docs, cap = index.codes.shape
@@ -201,16 +233,34 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
                           f"n_centroids={meta.n_centroids}) disagrees with "
                           f"the arrays (codes {n_docs}x{cap}, centroids "
                           f"{index.centroids.shape[0]}) — corrupt save")
+    pw = np.asarray(index.pred_words)
+    if pw.shape != (n_docs,):
+        raise _fail(path, f"predicate plane pred_words has "
+                          f"{list(pw.shape)} word(s) but the index has "
+                          f"{n_docs} docs — the plane packs exactly one "
+                          "uint32 word per doc (corrupt save)")
+    n_names = len(meta.pred_names)
+    if n_names < MAX_PREDICATES and pw.size and \
+            (int(pw.max()) >> n_names):
+        raise _fail(path, f"predicate plane has bits set beyond the "
+                          f"{n_names} name(s) in meta.pred_names "
+                          f"{meta.pred_names} — the plane and the manifest "
+                          "disagree about which predicates exist (corrupt "
+                          "or hand-edited save)")
 
     # content fingerprint (schema v2+): the dtype/shape checks above cannot
-    # see flipped BYTES; the fingerprint can. v1 files predate it.
+    # see flipped BYTES; the fingerprint can. v1 files predate it. v2
+    # fingerprints were computed before the predicate plane existed, so
+    # they verify over the v2 field subset.
     if version >= 2:
         declared = manifest.get("fingerprint")
         if not isinstance(declared, str):
             raise _fail(path, "manifest has no 'fingerprint' at "
                               f"schema_version={version} (required since "
                               "v2) — corrupt or hand-edited manifest")
-        actual = index_fingerprint(index)
+        actual = index_fingerprint(
+            index, fields=PackedIndex._fields if version >= 3
+            else _V2_FIELDS)
         if declared != actual:
             raise _fail(path, f"manifest fingerprint {declared[:12]}… "
                               f"disagrees with the array contents "
@@ -272,8 +322,53 @@ def _check_new_docs(meta: IndexMeta, doc_embs: np.ndarray,
     return doc_embs, doc_lens
 
 
+def _pack_new_predicates(meta: IndexMeta, n_new: int, predicates,
+                         origin: str) -> np.ndarray:
+    """Pack (and validate) the predicate words for newly grown docs.
+
+    The plane layout is fixed at build time: an index WITH pred_names
+    requires exactly those predicates for every new doc (bit positions
+    follow ``meta.pred_names`` order regardless of mapping order); an index
+    WITHOUT a plane rejects predicates outright.
+    """
+    if not meta.pred_names:
+        if predicates is not None:
+            raise ValueError(
+                f"{origin}: predicates were given but the index has no "
+                "predicate plane (meta.pred_names is empty) — build the "
+                "base index with build_index(predicates=...) first")
+        return np.zeros(n_new, np.uint32)
+    if predicates is None:
+        raise ValueError(
+            f"{origin}: the index has predicate plane {meta.pred_names} "
+            "but no predicates were given for the new docs — every doc "
+            "must carry every named predicate")
+    if isinstance(predicates, PredicateSet):
+        pset = predicates
+    else:
+        if sorted(predicates) != sorted(meta.pred_names):
+            raise ValueError(
+                f"{origin}: new docs carry predicates "
+                f"{tuple(sorted(predicates))} but the index's plane is "
+                f"{meta.pred_names} — names must match exactly")
+        pset = PredicateSet.pack({n: predicates[n]
+                                  for n in meta.pred_names})
+    if pset.names != tuple(meta.pred_names):
+        raise ValueError(
+            f"{origin}: predicate names {pset.names} do not match the "
+            f"index's plane {meta.pred_names} (bit positions are fixed at "
+            "build time; pack in the index's name order)")
+    words = np.asarray(pset.words)
+    if words.shape[0] != n_new:
+        raise ValueError(
+            f"{origin}: predicate plane covers {words.shape[0]} docs but "
+            f"{n_new} docs are being added")
+    return words
+
+
 def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
-                 doc_lens: np.ndarray) -> tuple[PackedIndex, IndexMeta]:
+                 doc_lens: np.ndarray,
+                 predicates=None) -> tuple[PackedIndex, IndexMeta]:
     """Append passages to an existing index without re-running k-means.
 
     New docs are quantized against the FROZEN centroid and PQ/PLAID
@@ -289,13 +384,18 @@ def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
     ``meta.train_quant_mse`` via ``meta.drift`` to decide when a re-train
     (fresh ``build_index`` over the union corpus) is warranted.
 
-    doc_embs : (n_new, cap, d) fp32, zero-padded to the INDEX's cap/d
-    doc_lens : (n_new,) int
+    doc_embs   : (n_new, cap, d) fp32, zero-padded to the INDEX's cap/d
+    doc_lens   : (n_new,) int
+    predicates : the new docs' predicate values when the index has a plane
+                 (a ``{name: (n_new,) bool}`` mapping or PredicateSet over
+                 exactly ``meta.pred_names``); must stay ``None`` when it
+                 has none
     -> (PackedIndex, IndexMeta) — a new index/meta pair (inputs unchanged)
     """
     doc_embs, doc_lens = _check_new_docs(meta, doc_embs, doc_lens)
     n_old, n_new = meta.n_docs, doc_embs.shape[0]
     n_total = n_old + n_new
+    new_pred = _pack_new_predicates(meta, n_new, predicates, "add_passages")
     new_codes, new_res, new_plaid, sq_sum, n_tok = _encode_passages(
         index, doc_embs, doc_lens)
 
@@ -337,6 +437,8 @@ def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
         plaid_cutoffs=index.plaid_cutoffs,
         plaid_weights=index.plaid_weights,
         opq_rotation=index.opq_rotation,
+        pred_words=jnp.asarray(np.concatenate(
+            [np.asarray(index.pred_words), new_pred])),
     )
     grown_meta = dataclasses.replace(
         meta, n_docs=n_total, list_cap=list_cap, n_grown=meta.n_grown + n_new,
@@ -345,8 +447,8 @@ def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
 
 
 def new_generation(base: PackedIndex, base_meta: IndexMeta,
-                   doc_embs: np.ndarray, doc_lens: np.ndarray
-                   ) -> tuple[PackedIndex, IndexMeta]:
+                   doc_embs: np.ndarray, doc_lens: np.ndarray,
+                   predicates=None) -> tuple[PackedIndex, IndexMeta]:
     """Build a fresh, self-contained index generation for NEW passages only,
     reusing a base index's frozen centroid/PQ/PLAID codebooks.
 
@@ -359,10 +461,17 @@ def new_generation(base: PackedIndex, base_meta: IndexMeta,
     ``meta.drift`` measures how far the stream has moved from the base
     training distribution.
 
+    ``predicates`` follows the :func:`add_passages` rule: required (over
+    exactly ``base_meta.pred_names``) when the base has a plane, forbidden
+    when it has none — a timeline serves ONE compiled FilterPlan across all
+    its generations, so bit positions must agree everywhere.
+
     -> (PackedIndex, IndexMeta) for the new generation alone
     """
     doc_embs, doc_lens = _check_new_docs(base_meta, doc_embs, doc_lens)
     n_new = doc_embs.shape[0]
+    pred_words = _pack_new_predicates(base_meta, n_new, predicates,
+                                      "new_generation")
     codes, res_codes, plaid_res, sq_sum, n_tok = _encode_passages(
         base, doc_embs, doc_lens)
     ivf, ivf_lens, list_cap, n_dropped = _build_ivf(
@@ -379,6 +488,7 @@ def new_generation(base: PackedIndex, base_meta: IndexMeta,
         plaid_cutoffs=base.plaid_cutoffs,
         plaid_weights=base.plaid_weights,
         opq_rotation=base.opq_rotation,
+        pred_words=jnp.asarray(pred_words),
     )
     gen_meta = dataclasses.replace(
         base_meta, n_docs=n_new, list_cap=list_cap, n_dropped=n_dropped,
@@ -424,6 +534,14 @@ class ShardedTimeline:
                     f"differs from generation 0 {dict(zip(geom, base))}; "
                     "generations must share the frozen codebooks (build "
                     "them with store.new_generation)")
+            if tuple(m.pred_names) != tuple(d0.pred_names):
+                raise ValueError(
+                    f"generation {g} has predicate plane {m.pred_names} "
+                    f"but generation 0 has {d0.pred_names}; one compiled "
+                    "FilterPlan serves a whole timeline, so predicate bit "
+                    "positions must agree everywhere (grow generations "
+                    "with store.new_generation, passing the same "
+                    "predicate names)")
         # geometry can coincide by accident (e.g. two independent
         # build_index runs) — scores are only comparable if the CODEBOOK
         # CONTENTS match, so check the arrays, not just their shapes
@@ -571,6 +689,11 @@ def merge_generations(timeline: ShardedTimeline, lo: int,
                                axis=0)
     plaid_res = np.concatenate([np.asarray(g.plaid_res) for g in gens],
                                axis=0)
+    # predicate planes concatenate like every other per-doc array: bit
+    # positions are timeline-wide (pred_names equality is enforced by
+    # ShardedTimeline), so no per-word fixup is needed — only the doc-id
+    # offsets above move, and those are implicit in concatenation order
+    pred_words = np.concatenate([np.asarray(g.pred_words) for g in gens])
 
     # IVF: concatenate per-centroid lists with local doc-id offset fixup
     n_c = metas[0].n_centroids
@@ -616,6 +739,7 @@ def merge_generations(timeline: ShardedTimeline, lo: int,
         plaid_cutoffs=first.plaid_cutoffs,
         plaid_weights=first.plaid_weights,
         opq_rotation=first.opq_rotation,
+        pred_words=jnp.asarray(pred_words),
     )
     merged_meta = dataclasses.replace(
         metas[0], n_docs=n_total, list_cap=list_cap,
@@ -775,8 +899,12 @@ def _check_timeline_fingerprints(path: str, version: int, manifest: dict,
     Reuses each generation's manifest fingerprint (just proven equal to
     its array contents by ``load_index``) instead of re-hashing the
     arrays — string compares, not a second sha256 pass over the timeline.
-    The verified values also seed ``timeline.fingerprints``' cache, so
-    serving a loaded timeline starts without any hashing at all.
+    The verified values also seed ``timeline.fingerprints``' cache (so
+    serving a loaded timeline starts without any hashing at all) — but
+    ONLY when every generation manifest is current-schema: pre-v3
+    fingerprints hash the v2 field subset, and seeding those would let a
+    later ``save_timeline`` persist subset hashes next to fresh full-field
+    generation manifests, a guaranteed mismatch on the next load.
     """
     if version < 2:
         return
@@ -786,12 +914,15 @@ def _check_timeline_fingerprints(path: str, version: int, manifest: dict,
             f"load_timeline({path!r}): timeline.json needs one fingerprint "
             f"per generation at schema_version={version} "
             f"(got {declared!r} for {len(names)} generation(s))")
-    actual = []
+    actual, seed_ok = [], True
     for g, name in enumerate(names):
         with open(os.path.join(path, name, _MANIFEST)) as f:
-            got = json.load(f).get("fingerprint")
+            gman = json.load(f)
+        got = gman.get("fingerprint")
         if got is None:     # a v1 generation directory: hash it this once
             got = index_fingerprint(timeline.generations[g])
+        elif gman.get("schema_version", 0) < SCHEMA_VERSION:
+            seed_ok = False
         actual.append(got)
     for name, want, got in zip(names, declared, actual):
         if want != got:
@@ -800,7 +931,8 @@ def _check_timeline_fingerprints(path: str, version: int, manifest: dict,
                 f"fingerprint {got[:12]}… but timeline.json declares "
                 f"{want[:12]}… — the generation directory was replaced "
                 "after the timeline was saved")
-    timeline.__dict__["fingerprints"] = tuple(actual)
+    if seed_ok:
+        timeline.__dict__["fingerprints"] = tuple(actual)
 
 
 # ---------------------------------------------------------------------------
@@ -847,6 +979,10 @@ def generation_footprint(index: PackedIndex, meta: IndexMeta) -> dict:
         "index_bytes": index_bytes,
         "manifest_bytes": manifest_bytes,
         "total_bytes": index_bytes + manifest_bytes,
+        # the predicate plane's share of index_bytes (4 bytes/doc): the
+        # filtered-search feature's whole footprint cost, reported
+        # separately so capacity plans can see it
+        "predicate_bytes": array_bytes["pred_words"],
         "bytes_per_embedding": bytes_per_embedding(meta, "emvb"),
         "bytes_per_embedding_actual": payload / max(n_tokens, 1),
     }
@@ -875,6 +1011,7 @@ def timeline_footprint(timeline) -> dict:
             "index_bytes": sum(p["index_bytes"] for p in per),
             "manifest_bytes": sum(p["manifest_bytes"] for p in per),
             "total_bytes": sum(p["total_bytes"] for p in per),
+            "predicate_bytes": sum(p["predicate_bytes"] for p in per),
             "bytes_per_embedding": per[0]["bytes_per_embedding"],
             "bytes_per_embedding_actual": payload / max(n_tokens, 1),
         }
@@ -897,6 +1034,7 @@ def timeline_footprint(timeline) -> dict:
         "index_bytes": index_bytes,
         "manifest_bytes": manifest_bytes,
         "total_bytes": index_bytes + manifest_bytes,
+        "predicate_bytes": sum(g["predicate_bytes"] for g in gens),
         "bytes_per_embedding": gens[0]["bytes_per_embedding"],
         "bytes_per_embedding_actual": payload / max(n_tokens, 1),
     }

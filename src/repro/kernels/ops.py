@@ -26,17 +26,26 @@ from . import prefilter as _prefilter
 
 def bitpack(cs: jax.Array, th: float, q_mask: jax.Array | None = None, *,
             interpret: bool = True) -> jax.Array:
+    """Phase-1a kernel: threshold the (n_q, n_centroids) centroid-score
+    matrix at ``th`` and pack each centroid's passing query-term set into
+    one uint32 word (EMVB's stacked bit vectors) -> (n_centroids,)."""
     return _bitpack.bitpack(cs, th, q_mask, interpret=interpret)
 
 
 def bitfilter(bits: jax.Array, codes: jax.Array, token_mask: jax.Array, *,
               interpret: bool = True) -> jax.Array:
+    """Phase-1b kernel: OR the packed words of each doc's token centroids
+    (EMVB Eq. 4) -> (n_docs,) uint32 candidate words (0 = no query term
+    close to any token; popcount = evidence strength)."""
     return _bitfilter.bitfilter(bits, codes, token_mask, interpret=interpret)
 
 
 def cinter(cs_t: jax.Array, codes: jax.Array, token_mask: jax.Array,
            q_mask: jax.Array | None = None, *,
            interpret: bool = True) -> jax.Array:
+    """Phase-2 kernel: centroid-interaction approximate scores — per doc,
+    sum over query terms of the max centroid score across its tokens ->
+    (n_docs,) f32."""
     return _cinter.cinter(cs_t, codes, token_mask, q_mask,
                           interpret=interpret)
 
@@ -45,6 +54,10 @@ def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
             th_r: float | None, q_mask: jax.Array | None = None, *,
             interpret: bool = True) -> jax.Array:
+    """Phase-4 kernel: PQ late-interaction over the survivor block —
+    centroid score + residual LUT sum per (term, token), optionally
+    skipping tokens below ``th_r``, maxed over tokens and summed over live
+    terms -> (n_sel,) f32."""
     return _pqscore.pqscore(cs_t, lut, codes, res_codes, token_mask, th_r,
                             q_mask, interpret=interpret)
 
@@ -52,32 +65,47 @@ def pqscore(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
 def prefilter(cs: jax.Array, th: float, codes: jax.Array,
               token_mask: jax.Array, bitmap: jax.Array, n_filter: int,
               q_mask: jax.Array | None = None, *,
+              pred_words: jax.Array | None = None, plan=None,
               interpret: bool = True):
-    """Fused phases 1b-2 megakernel -> (scores, doc_ids, bits)."""
+    """Fused phases 1b-2 megakernel -> (scores, doc_ids, bits).
+
+    ``pred_words`` ((n_docs,) uint32 packed predicate plane) + ``plan``
+    (static ``FilterPlan.clauses``) evaluate the predicate filter in-kernel
+    and AND it into ``bitmap``; ``plan=None`` is unfiltered."""
     return _prefilter.prefilter(cs, th, codes, token_mask, bitmap, n_filter,
-                                q_mask, interpret=interpret)
+                                q_mask, pred_words=pred_words, plan=plan,
+                                interpret=interpret)
 
 
 def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
             th_r: float | None, n_docs: int, k: int,
             q_mask: jax.Array | None = None, *,
+            doc_pass: jax.Array | None = None,
             interpret: bool = True):
-    """Fused phases 3-4 megakernel -> (scores, pos, sel2, sbar)."""
+    """Fused phases 3-4 megakernel -> (scores, pos, sel2, sbar).
+
+    ``doc_pass`` ((n_filter,) bool predicate-filter verdict per survivor)
+    masks non-passing rows to -inf in both selections; ``None`` == all
+    passing."""
     return _pqinter.pqinter(cs_t, lut, codes, res_codes, token_mask, th_r,
-                            n_docs, k, q_mask, interpret=interpret)
+                            n_docs, k, q_mask, doc_pass=doc_pass,
+                            interpret=interpret)
 
 
 def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
                       token_mask: jax.Array, bitmap: jax.Array,
                       n_filter: int, q_masks: jax.Array | None = None, *,
+                      pred_words: jax.Array | None = None, plan=None,
                       interpret: bool = True):
     """Batch-native phases 1b-2 megakernel -> (scores, doc_ids, bits), each
     with a leading batch axis; row b bit-identical to ``prefilter`` on
     query b.  ``codes``/``token_mask`` are (n_docs, cap) shared or
-    (B, n_docs, cap) per-query candidate blocks."""
+    (B, n_docs, cap) per-query candidate blocks; ``pred_words``/``plan``
+    (batch-shared) as in ``prefilter``."""
     return _prefilter.prefilter_batched(cs, th, codes, token_mask, bitmap,
                                         n_filter, q_masks,
+                                        pred_words=pred_words, plan=plan,
                                         interpret=interpret)
 
 
@@ -85,10 +113,11 @@ def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
                     res_codes: jax.Array, token_mask: jax.Array,
                     th_r: float | None, n_docs: int, k: int,
                     q_masks: jax.Array | None = None, *,
+                    doc_pass: jax.Array | None = None,
                     interpret: bool = True):
     """Batch-native phases 3-4 megakernel -> (scores, pos, sel2, sbar),
     each with a leading batch axis; row b bit-identical to ``pqinter`` on
-    query b."""
+    query b.  ``doc_pass`` is (B, n_filter) per-survivor verdicts."""
     return _pqinter.pqinter_batched(cs_t, lut, codes, res_codes, token_mask,
                                     th_r, n_docs, k, q_masks,
-                                    interpret=interpret)
+                                    doc_pass=doc_pass, interpret=interpret)

@@ -85,27 +85,37 @@ NEG_INF = float("-inf")  # buffer init / padding: below any real score
 
 
 def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
-                    mask_ref, qm_ref, sbar_ref, pos_ref, tops_ref, topp_ref,
-                    *, m: int, ksub: int, use_filter: bool, n_docs: int,
-                    k: int, bd1: int, bd2: int, nf: int, nd_pad: int):
+                    mask_ref, qm_ref, pass_ref, sbar_ref, pos_ref, tops_ref,
+                    topp_ref, *, m: int, ksub: int, use_filter: bool,
+                    n_docs: int, k: int, bd1: int, bd2: int, nf: int,
+                    nd_pad: int):
     cs_t = cs_t_ref[...]                                    # (n_c, n_q)
     codes = codes_ref[...]                                  # (nfp, cap)
     valid_all = mask_ref[...] != 0                          # (nfp, cap)
     qlive = qm_ref[0, :] != 0                               # (n_q,)
+    pass_all = pass_ref[0, :] != 0                          # (nfp,)
     nfp = codes.shape[0]
 
     # ---- pass 1: S̄ blocks + running top-n_docs (sbar, position) ----------
+    # Buffer-init entries carry position -1: with a predicate filter, real
+    # rows can be -inf too, and an init entry that survives the -inf ties
+    # must be recognizable in pass 2 (a position-0 init would be RESCORED
+    # as survivor 0, duplicating a real doc in the top-k). Unfiltered, init
+    # entries only ever sit at ranks >= n_filter, where ``live`` already
+    # masks them — bit-identical to the previous zeros init.
     sbar_buf = jnp.full((nd_pad,), NEG_INF, jnp.float32)
-    pos_buf = jnp.zeros((nd_pad,), jnp.int32)
+    pos_buf = jnp.full((nd_pad,), -1, jnp.int32)
     for i in range(nfp // bd1):                             # static unroll
         start = i * bd1
         c = jax.lax.slice_in_dim(codes, start, start + bd1)
         v = jax.lax.slice_in_dim(valid_all, start, start + bd1)
         sbar = sbar_block(cs_t, c, v, qlive)                # (BD1,)
         rows = start + jax.lax.broadcasted_iota(jnp.int32, (bd1, 1), 0)[:, 0]
+        p = jax.lax.slice_in_dim(pass_all, start, start + bd1)
         # exact-f32 cast (bf16 CS promotes losslessly; order/ties preserved);
-        # padded rows rank below every real doc, even all-token-masked ones
-        sbar = jnp.where(rows < nf, sbar.astype(jnp.float32), NEG_INF)
+        # padded rows AND predicate-filtered survivors rank below every real
+        # passing doc, even all-token-masked ones
+        sbar = jnp.where((rows < nf) & p, sbar.astype(jnp.float32), NEG_INF)
         merged_s = jnp.concatenate([sbar_buf, sbar])
         merged_p = jnp.concatenate([pos_buf, rows])
         sbar_buf, sel = jax.lax.top_k(merged_s, nd_pad)
@@ -130,7 +140,11 @@ def _pqinter_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
         score = eq56_block(cs_t, lut2, c, res, valid, thr_ref[0],
                            m=m, ksub=ksub, use_filter=use_filter,
                            qlive=qlive)
-        score = jnp.where(live, score, NEG_INF)
+        # gather the pass bit by survivor position: a filtered doc that
+        # still occupies a phase-3 slot must not reach the top-k; buffer
+        # fillers (pos < 0) are never rescored
+        ok = live & (pos >= 0) & jnp.take(pass_all, posc)
+        score = jnp.where(ok, score, NEG_INF)
         merged_s = jnp.concatenate([tops_buf, score])
         merged_p = jnp.concatenate([topp_buf, pos])
         tops_buf, sel = jax.lax.top_k(merged_s, k)
@@ -146,6 +160,7 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             res_codes: jax.Array, token_mask: jax.Array,
             th_r: float | None, n_docs: int, k: int,
             q_mask: jax.Array | None = None, *,
+            doc_pass: jax.Array | None = None,
             block_d1: int | None = None, block_d2: int | None = None,
             interpret: bool = True) -> tuple[jax.Array, jax.Array,
                                              jax.Array, jax.Array]:
@@ -162,6 +177,11 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     q_mask     : optional (n_q,) bool — masked (padded / pruned) terms are
                  excluded from BOTH passes: no row in S̄'s sum, no MaxSim
                  term in Eq. 5/6 (all-ones == no mask, bit for bit)
+    doc_pass   : optional (n_filter,) bool — predicate-filter verdict per
+                 survivor (docs/FILTERING.md). False rows are masked to -inf
+                 in BOTH selections, exactly like the unfused phase-3/4
+                 masking, so filtered docs can never reach the top-k
+                 (all-ones == no filter, bit for bit)
     -> (scores (k,) f32, pos (k,) i32, sel2 (n_docs,) i32, sbar (n_docs,) f32)
 
     ``pos``/``sel2`` index the n_filter survivor axis (the caller translates
@@ -195,6 +215,11 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     thr = jnp.asarray([0.0 if th_r is None else th_r], jnp.float32)
     qm = (jnp.ones((1, n_q), jnp.int8) if q_mask is None
           else q_mask.astype(jnp.int8).reshape(1, n_q))
+    # All-ones default == no filter; padded rows are already rejected by the
+    # rows < nf test, so the pad value is irrelevant (ones keeps it uniform).
+    dp = (jnp.ones((nf,), jnp.int8) if doc_pass is None
+          else doc_pass.astype(jnp.int8))
+    dpp = jnp.pad(dp, (0, pad1), constant_values=1)[None, :]
     kern = functools.partial(
         _pqinter_kernel, m=m, ksub=ksub, use_filter=th_r is not None,
         n_docs=n_docs, k=k, bd1=block_d1, bd2=block_d2, nf=nf, nd_pad=nd_pad)
@@ -209,6 +234,7 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             pl.BlockSpec((nfp, cap, m), lambda i: (0, 0, 0)),  # residual codes
             pl.BlockSpec((nfp, cap), lambda i: (0, 0)),      # token mask
             pl.BlockSpec((1, n_q), lambda i: (0, 0)),        # q_mask
+            pl.BlockSpec((1, nfp), lambda i: (0, 0)),        # doc_pass
         ],
         out_specs=[
             pl.BlockSpec((1, nd_pad), lambda i: (0, 0)),
@@ -223,31 +249,34 @@ def pqinter(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             jax.ShapeDtypeStruct((1, k), jnp.int32),
         ],
         interpret=interpret,
-    )(thr, cs_t, lut2, codesp, resp, maskp, qm)
+    )(thr, cs_t, lut2, codesp, resp, maskp, qm, dpp)
     return tops[0], topp[0], pos[0, :n_docs], sbar[0, :n_docs]
 
 
 def _pqinter_batched_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
-                            mask_ref, qm_ref, sbar_ref, pos_ref, tops_ref,
-                            topp_ref, *, m: int, ksub: int, use_filter: bool,
-                            n_docs: int, k: int, bd1: int, bd2: int, nf: int,
-                            nd_pad: int):
+                            mask_ref, qm_ref, pass_ref, sbar_ref, pos_ref,
+                            tops_ref, topp_ref, *, m: int, ksub: int,
+                            use_filter: bool, n_docs: int, k: int, bd1: int,
+                            bd2: int, nf: int, nd_pad: int):
     cs_t = cs_t_ref[...]                                    # (BB, n_c, n_q)
     codes = codes_ref[...]                                  # (BB, nfp, cap)
     valid_all = mask_ref[...] != 0                          # (BB, nfp, cap)
     qlive = qm_ref[...] != 0                                # (BB, n_q)
+    pass_all = pass_ref[...] != 0                           # (BB, nfp)
     bb, nfp, _ = codes.shape
 
     # ---- pass 1: batched S̄ blocks + per-row running top-n_docs -----------
+    # init position -1: see the single-query kernel's pass-1 comment
     sbar_buf = jnp.full((bb, nd_pad), NEG_INF, jnp.float32)
-    pos_buf = jnp.zeros((bb, nd_pad), jnp.int32)
+    pos_buf = jnp.full((bb, nd_pad), -1, jnp.int32)
     for i in range(nfp // bd1):                             # static unroll
         start = i * bd1
         c = jax.lax.slice_in_dim(codes, start, start + bd1, axis=1)
         v = jax.lax.slice_in_dim(valid_all, start, start + bd1, axis=1)
         sbar = sbar_block_batched(cs_t, c, v, qlive)        # (BB, BD1)
         rows = start + jax.lax.broadcasted_iota(jnp.int32, (1, bd1), 1)
-        sbar = jnp.where(rows < nf, sbar.astype(jnp.float32), NEG_INF)
+        p = jax.lax.slice_in_dim(pass_all, start, start + bd1, axis=1)
+        sbar = jnp.where((rows < nf) & p, sbar.astype(jnp.float32), NEG_INF)
         merged_s = jnp.concatenate([sbar_buf, sbar], axis=1)
         merged_p = jnp.concatenate(
             [pos_buf, jnp.broadcast_to(rows, (bb, bd1))], axis=1)
@@ -276,7 +305,9 @@ def _pqinter_batched_kernel(thr_ref, cs_t_ref, lut2_ref, codes_ref, res_ref,
         score = eq56_block_batched(cs_t, lut2, c, res, valid, thr_ref[0],
                                    m=m, ksub=ksub, use_filter=use_filter,
                                    qlive=qlive)
-        score = jnp.where(live, score, NEG_INF)
+        # same per-row pass gather as the single-query kernel's pass 2
+        pas = jnp.take_along_axis(pass_all, posc, axis=1)
+        score = jnp.where(live & (pos >= 0) & pas, score, NEG_INF)
         merged_s = jnp.concatenate([tops_buf, score], axis=1)
         merged_p = jnp.concatenate([topp_buf, pos], axis=1)
         tops_buf, sel = jax.lax.top_k(merged_s, k)
@@ -292,6 +323,7 @@ def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
                     res_codes: jax.Array, token_mask: jax.Array,
                     th_r: float | None, n_docs: int, k: int,
                     q_masks: jax.Array | None = None, *,
+                    doc_pass: jax.Array | None = None,
                     block_b: int | None = None, block_d1: int | None = None,
                     block_d2: int | None = None,
                     interpret: bool = True) -> tuple[jax.Array, jax.Array,
@@ -305,6 +337,8 @@ def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     token_mask : (B, n_filter, cap) bool
     th_r, n_docs, k : as in ``pqinter`` (shared across the batch)
     q_masks    : optional (B, n_q) bool per-query term masks
+    doc_pass   : optional (B, n_filter) bool per-survivor predicate-filter
+                 verdicts (as in ``pqinter``; all-ones == no filter)
     -> (scores (B, k), pos (B, k), sel2 (B, n_docs), sbar (B, n_docs))
 
     Row b of every output is bit-identical to ``pqinter(cs_t[b], lut[b],
@@ -351,6 +385,9 @@ def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
     qm = (jnp.ones((nb, n_q), jnp.int8) if q_masks is None
           else q_masks.astype(jnp.int8).reshape(nb, n_q))
     qm = jnp.pad(qm, ((0, padb), (0, 0)))
+    dp = (jnp.ones((nb, nf), jnp.int8) if doc_pass is None
+          else doc_pass.astype(jnp.int8))
+    dpp = jnp.pad(dp, ((0, padb), (0, pad1)), constant_values=1)
     kern = functools.partial(
         _pqinter_batched_kernel, m=m, ksub=ksub, use_filter=th_r is not None,
         n_docs=n_docs, k=k, bd1=block_d1, bd2=block_d2, nf=nf, nd_pad=nd_pad)
@@ -365,6 +402,7 @@ def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             pl.BlockSpec((block_b, nfp, cap, m), lambda b: (b, 0, 0, 0)),
             pl.BlockSpec((block_b, nfp, cap), lambda b: (b, 0, 0)),
             pl.BlockSpec((block_b, n_q), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, nfp), lambda b: (b, 0)),  # doc_pass
         ],
         out_specs=[
             pl.BlockSpec((block_b, nd_pad), lambda b: (b, 0)),
@@ -379,5 +417,5 @@ def pqinter_batched(cs_t: jax.Array, lut: jax.Array, codes: jax.Array,
             jax.ShapeDtypeStruct((nbp, k), jnp.int32),
         ],
         interpret=interpret,
-    )(thr, csp, lut2, codesp, resp, maskp, qm)
+    )(thr, csp, lut2, codesp, resp, maskp, qm, dpp)
     return (tops[:nb], topp[:nb], pos[:nb, :n_docs], sbar[:nb, :n_docs])

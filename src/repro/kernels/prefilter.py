@@ -16,6 +16,16 @@ block's scores into a running top-``n_filter`` kept on chip.  Nothing of
 size n_docs ever touches HBM — the only outputs are the (n_filter,) winners
 and the (n_c,) bit table (a free byproduct kept for API compatibility).
 
+Predicate filtering (docs/FILTERING.md) rides the same stream: each step
+also loads its (BD,) slice of the index's packed predicate plane and — when
+a static word-combine ``plan`` is given — ANDs the plan's verdict into the
+candidate bitmap INSIDE the launch, so filtered docs are rejected in the
+same pass that scores them (no host-side full-corpus pass mask).  The plan
+is a static tuple of (required, forbidden) uint32 mask pairs, so distinct
+filters trace distinct (still shape-stable) kernels; ``plan=None`` skips
+the predicate load entirely and is bit-identical to the pre-predicate
+kernel.
+
 Selection is EXACTLY ``top_k(where(bitmap, F, -1), n_filter)`` including
 tie-breaking: scores and doc ids are packed into one monotonic int32 key
 
@@ -41,6 +51,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitvector import apply_filter_plan
+
 DEFAULT_BD = 256
 ID_BITS = 25          # (f+1) <= 33 -> 34 << 25 < 2^31: int32-safe
 MAX_ID = (1 << ID_BITS) - 1
@@ -48,7 +60,8 @@ KEY_INIT = -(2 ** 31)  # python int: jnp scalars would be captured as consts
 
 
 def _prefilter_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref, bitmap_ref,
-                      bits_ref, keys_ref, *, n_filter: int):
+                      pred_ref, bits_ref, keys_ref, *, n_filter: int,
+                      plan=None):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -70,6 +83,10 @@ def _prefilter_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref, bitmap_ref,
     codes = codes_ref[...]                                  # (BD, cap)
     valid = mask_ref[...] != 0                              # (BD, cap)
     cand = bitmap_ref[0, :] != 0                            # (BD,)
+    if plan is not None:
+        # Predicate filter, fused into the candidate test: evaluate the
+        # static word-combine plan on this block's predicate words.
+        cand = cand & apply_filter_plan(plan, pred_ref[0, :])
     bd = codes.shape[0]
 
     idx = jnp.clip(codes, 0, bits.shape[0] - 1)
@@ -87,8 +104,8 @@ def _prefilter_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref, bitmap_ref,
 
 
 def _prefilter_batched_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref,
-                              bitmap_ref, bits_ref, keys_ref, *,
-                              n_filter: int):
+                              bitmap_ref, pred_ref, bits_ref, keys_ref, *,
+                              n_filter: int, plan=None):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -109,6 +126,10 @@ def _prefilter_batched_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref,
     codes = codes_ref[...]                                  # (Bc, BD, cap)
     valid = mask_ref[...] != 0                              # (Bc, BD, cap)
     cand = bitmap_ref[...] != 0                             # (B, BD)
+    if plan is not None:
+        # The predicate plane is query-independent: ONE (BD,) word slice
+        # serves every query in the batch.
+        cand = cand & apply_filter_plan(plan, pred_ref[0, :])[None, :]
     nb, bd = cand.shape
 
     idx = jnp.clip(codes, 0, bits.shape[1] - 1)
@@ -137,10 +158,12 @@ def _prefilter_batched_kernel(th_ref, cs_ref, qm_ref, codes_ref, mask_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_filter", "block_d", "interpret"))
+                   static_argnames=("n_filter", "block_d", "plan",
+                                    "interpret"))
 def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
                       token_mask: jax.Array, bitmap: jax.Array,
                       n_filter: int, q_masks: jax.Array | None = None, *,
+                      pred_words: jax.Array | None = None, plan=None,
                       block_d: int = DEFAULT_BD,
                       interpret: bool = True) -> tuple[jax.Array, jax.Array,
                                                        jax.Array]:
@@ -154,6 +177,13 @@ def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
     token_mask : bool, same leading shape as ``codes``
     bitmap     : (B, n_docs) bool candidate bitmaps
     q_masks    : optional (B, n_q) bool per-query term masks
+    pred_words : optional (n_docs,) uint32 packed predicate plane, shared
+                 across the batch (query-independent)
+    plan       : optional STATIC tuple of (required, forbidden) uint32 mask
+                 pairs (``FilterPlan.clauses``); when given, each document
+                 block's predicate words are tested in-kernel and the
+                 verdict ANDed into ``bitmap``. ``None`` skips the predicate
+                 load, bit-identical to the unfiltered kernel.
     -> (scores (B, n_filter) i32, doc_ids (B, n_filter) i32,
         bits (B, n_c) u32)
 
@@ -188,7 +218,13 @@ def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
     th_arr = jnp.asarray([th], jnp.float32)
     qm = (jnp.ones((nb, n_q), jnp.int8) if q_masks is None
           else q_masks.astype(jnp.int8).reshape(nb, n_q))
-    kern = functools.partial(_prefilter_batched_kernel, n_filter=n_filter)
+    # Always pass a predicate operand (zeros dummy when unfiltered) so every
+    # plan shares ONE pallas_call signature; plan=None never reads it.
+    pw = (jnp.zeros((n_docs,), jnp.uint32) if pred_words is None
+          else pred_words)
+    pwp = jnp.pad(pw, (0, pad))[None, :]
+    kern = functools.partial(_prefilter_batched_kernel, n_filter=n_filter,
+                             plan=plan)
     bits, keys = pl.pallas_call(
         kern,
         grid=(ndp // block_d,),
@@ -199,6 +235,7 @@ def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
             pl.BlockSpec((bc, block_d, cap), lambda i: (0, i, 0)),
             pl.BlockSpec((bc, block_d, cap), lambda i: (0, i, 0)),
             pl.BlockSpec((nb, block_d), lambda i: (0, i)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),    # predicate plane
         ],
         out_specs=[
             pl.BlockSpec((nb, n_c), lambda i: (0, 0)),       # revisited accum
@@ -209,17 +246,19 @@ def prefilter_batched(cs: jax.Array, th, codes: jax.Array,
             jax.ShapeDtypeStruct((nb, n_filter), jnp.int32),
         ],
         interpret=interpret,
-    )(th_arr, cs, qm, codesp, maskp, bmp)
+    )(th_arr, cs, qm, codesp, maskp, bmp, pwp)
     scores = (keys >> ID_BITS) - 1
     doc_ids = MAX_ID - (keys & MAX_ID)
     return scores.astype(jnp.int32), doc_ids.astype(jnp.int32), bits
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_filter", "block_d", "interpret"))
+                   static_argnames=("n_filter", "block_d", "plan",
+                                    "interpret"))
 def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
               bitmap: jax.Array, n_filter: int,
               q_mask: jax.Array | None = None, *,
+              pred_words: jax.Array | None = None, plan=None,
               block_d: int = DEFAULT_BD,
               interpret: bool = True) -> tuple[jax.Array, jax.Array,
                                                jax.Array]:
@@ -233,10 +272,15 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
     q_mask     : optional (n_q,) bool — masked (padded / pruned) query terms
                  pack a 0 bit, so F(P, q) never counts them (all-ones == no
                  mask, bit for bit)
+    pred_words : optional (n_docs,) uint32 packed predicate plane
+    plan       : optional STATIC ``FilterPlan.clauses`` tuple — when given,
+                 the plan's verdict over ``pred_words`` is ANDed into
+                 ``bitmap`` in-kernel (docs/FILTERING.md); ``None`` skips
+                 the predicate load, bit-identical to the unfiltered kernel
     -> (scores (n_filter,) int32, doc_ids (n_filter,) int32,
         bits (n_c,) uint32)
 
-    (scores, doc_ids) == ``lax.top_k(where(bitmap, F, -1), n_filter)``
+    (scores, doc_ids) == ``lax.top_k(where(bitmap & pass, F, -1), n_filter)``
     bit-exactly, including index-order tie-breaking.
     """
     n_q, n_c = cs.shape
@@ -254,7 +298,12 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
     th_arr = jnp.asarray([th], jnp.float32)
     qm = (jnp.ones((n_q, 1), jnp.int8) if q_mask is None
           else q_mask.astype(jnp.int8).reshape(n_q, 1))
-    kern = functools.partial(_prefilter_kernel, n_filter=n_filter)
+    # Zeros dummy when unfiltered: ONE pallas_call signature per shape, and
+    # plan=None statically skips the read.
+    pw = (jnp.zeros((n_docs,), jnp.uint32) if pred_words is None
+          else pred_words)
+    pwp = jnp.pad(pw, (0, pad))[None, :]
+    kern = functools.partial(_prefilter_kernel, n_filter=n_filter, plan=plan)
     bits, keys = pl.pallas_call(
         kern,
         grid=(ndp // block_d,),
@@ -265,6 +314,7 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
             pl.BlockSpec((block_d, cap), lambda i: (i, 0)),
             pl.BlockSpec((1, block_d), lambda i: (0, i)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),    # predicate plane
         ],
         out_specs=[
             pl.BlockSpec((1, n_c), lambda i: (0, 0)),        # revisited accum
@@ -275,7 +325,7 @@ def prefilter(cs: jax.Array, th, codes: jax.Array, token_mask: jax.Array,
             jax.ShapeDtypeStruct((1, n_filter), jnp.int32),
         ],
         interpret=interpret,
-    )(th_arr, cs, qm, codesp, maskp, bmp)
+    )(th_arr, cs, qm, codesp, maskp, bmp, pwp)
     keys = keys[0]
     scores = (keys >> ID_BITS) - 1
     doc_ids = MAX_ID - (keys & MAX_ID)

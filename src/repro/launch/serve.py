@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.engine import (EngineConfig, RetrievalResult,
-                               _as_query_batch, _retrieve_batch)
+                               _as_query_batch, _retrieve_batch,
+                               _with_filter)
 from repro.core.index import PackedIndex
 
 # jax >= 0.6 exposes shard_map at top level (replication check kw:
@@ -93,6 +94,14 @@ def make_shardmap_retriever(mesh: Mesh, cfg: EngineConfig):
     local four-phase pipeline, so the two-level top-k merges shard results
     computed under identical masking. ``None`` fills in an all-True mask,
     which is the bitwise identity.
+
+    ``doc_filter`` (optional compiled ``bitvector.FilterPlan``, keyword)
+    evaluates the predicate filter per shard against the shard's local
+    ``pred_words`` slice — each shard's four-phase pipeline masks its own
+    non-passing docs to -inf, so the two-level top-k merge only ever sees
+    passing docs. The plan is static config, so each DISTINCT plan gets
+    its own traced shard_map program (memoized here; the unfiltered
+    program is traced on first unfiltered call, exactly as before).
     """
     axes = tuple(mesh.axis_names)
     n_shards = 1
@@ -103,18 +112,26 @@ def make_shardmap_retriever(mesh: Mesh, cfg: EngineConfig):
                 P(*([None])), P(*([None])))
     out_specs = RetrievalResult(P(None), P(None))
 
-    @functools.partial(jax.jit)
-    @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, **_SM_KW)
-    def step(index_stacked, queries, q_masks):
-        index_local = jax.tree.map(lambda x: x[0], index_stacked)
-        return _local_retrieve(index_local, queries, q_masks, cfg, axes)
+    steps: dict = {}   # filtered config -> traced shard_map program
 
-    def run(index_stacked, queries, q_masks=None):
+    def _step_for(fcfg: EngineConfig):
+        if fcfg not in steps:
+            @functools.partial(jax.jit)
+            @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **_SM_KW)
+            def step(index_stacked, queries, q_masks):
+                index_local = jax.tree.map(lambda x: x[0], index_stacked)
+                return _local_retrieve(index_local, queries, q_masks,
+                                       fcfg, axes)
+            steps[fcfg] = step
+        return steps[fcfg]
+
+    def run(index_stacked, queries, q_masks=None, *, doc_filter=None):
         qb = _as_query_batch(queries, q_masks)
         q_masks = (jnp.ones(qb.q.shape[:2], jnp.bool_)
                    if qb.q_mask is None else qb.q_mask)
-        return step(index_stacked, qb.q, q_masks)
+        return _step_for(_with_filter(cfg, doc_filter))(
+            index_stacked, qb.q, q_masks)
 
     return run
 
@@ -181,10 +198,11 @@ def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline, *,
                 stacked = shard_index(gen, n_shards)
             shard_cache[ckey] = stacked   # (re)insert at LRU tail
 
-        def plan(queries, q_masks=None, *, _stacked=stacked,
+        def plan(queries, q_masks=None, doc_filter=None, *, _stacked=stacked,
                  _retriever=retrievers[gcfg], _off=off):
-            """queries: (B, n_q, d) array or QueryBatch."""
-            r = _retriever(_stacked, queries, q_masks)
+            """queries: (B, n_q, d) array or QueryBatch; ``doc_filter`` an
+            optional compiled FilterPlan applied on every shard."""
+            r = _retriever(_stacked, queries, q_masks, doc_filter=doc_filter)
             return RetrievalResult(r.scores, r.doc_ids + jnp.int32(_off))
 
         plans.append(plan)
@@ -208,12 +226,12 @@ def make_timeline_retriever(mesh: Mesh, cfg: EngineConfig, timeline):
 
     plans = make_timeline_partial_plans(mesh, cfg, timeline)
 
-    def run(queries, q_masks=None) -> RetrievalResult:
+    def run(queries, q_masks=None, *, doc_filter=None) -> RetrievalResult:
         qb = _as_query_batch(queries, q_masks)
         q_masks = (jnp.ones(qb.q.shape[:2], jnp.bool_)
                    if qb.q_mask is None else qb.q_mask)
-        return merge_partial_topk([p(qb.q, q_masks) for p in plans],
-                                  cfg.k)
+        return merge_partial_topk(
+            [p(qb.q, q_masks, doc_filter) for p in plans], cfg.k)
 
     return run
 
@@ -257,6 +275,7 @@ def shard_index(index: PackedIndex, n_shards: int) -> PackedIndex:
 
     codes = np.asarray(index.codes).reshape(n_shards, per, -1)
     doc_lens = np.asarray(index.doc_lens).reshape(n_shards, per)
+    pred_words = np.asarray(index.pred_words).reshape(n_shards, per)
     res_codes = np.asarray(index.res_codes).reshape(
         n_shards, per, *index.res_codes.shape[1:])
     plaid_res = np.asarray(index.plaid_res)
@@ -305,4 +324,5 @@ def shard_index(index: PackedIndex, n_shards: int) -> PackedIndex:
         plaid_cutoffs=jnp.asarray(rep(index.plaid_cutoffs)),
         plaid_weights=jnp.asarray(rep(index.plaid_weights)),
         opq_rotation=jnp.asarray(rep(index.opq_rotation)),
+        pred_words=jnp.asarray(pred_words),
     )

@@ -375,6 +375,7 @@ def _retrieval_cell(spec, shape_name: str, mesh: Mesh, plan: str = "shardmap"
             plaid_cutoffs=_sds((3,), jnp.float32, mesh, P(None)),
             plaid_weights=_sds((4,), jnp.float32, mesh, P(None)),
             opq_rotation=_sds((d, d), jnp.float32, mesh, P(None, None)),
+            pred_words=_sds((nd,), jnp.uint32, mesh, P(all_ax)),
         )
         queries = _sds((qb, ecfg.n_q, d), jnp.float32, mesh,
                        P(None, None, None))
@@ -401,6 +402,7 @@ def _retrieval_cell(spec, shape_name: str, mesh: Mesh, plan: str = "shardmap"
         plaid_cutoffs=leaf((3,), jnp.float32),
         plaid_weights=leaf((4,), jnp.float32),
         opq_rotation=leaf((d, d), jnp.float32),
+        pred_words=leaf((per,), jnp.uint32),
     )
     queries = _sds((qb, ecfg.n_q, d), jnp.float32, mesh, P(None, None, None))
     step = make_shardmap_retriever(mesh, ecfg)

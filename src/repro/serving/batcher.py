@@ -22,10 +22,19 @@ Batching policy (cooperative, no background thread — docs/SERVING.md):
   waits at most ``max_delay_s`` for company. The clock is injectable for
   deterministic tests.
 
+Predicate filters (docs/FILTERING.md) batch by HOMOGENEITY: the engine's
+filter plan is static per launch, so one drained batch must share one
+filter. ``drain`` therefore pops the longest FRONT RUN of pending queries
+whose filter equals the oldest entry's — FIFO order is preserved (no
+reordering, so the per-query deadline promise still holds; a query never
+waits behind a younger one), and a filter change simply closes the batch
+early. Alternating filters degrade to batch-of-one, which is correct,
+just unamortized.
+
 The cache-hit/cache-miss lane split happens per generation downstream
 (``RetrievalService._execute``): the batcher's job ends at a dense
 :class:`~repro.core.engine.QueryBatch` — (B, n_q, d) queries + (B, n_q)
-mask — and the tickets to fill.
+mask — plus the batch's shared filter and the tickets to fill.
 """
 from __future__ import annotations
 
@@ -128,18 +137,25 @@ class MicroBatcher:
         self._masks: list[np.ndarray] = []
         self._tickets: list[Ticket] = []
         self._submits: list[float] = []     # submit time per pending query
+        self._filters: list = []            # compiled FilterPlan (or None)
 
     def __len__(self) -> int:
         """Number of pending (not yet drained) queries."""
         return len(self._queries)
 
     def submit(self, query: np.ndarray,
-               q_mask: Optional[np.ndarray] = None) -> Ticket:
-        """Enqueue one (t, d) query (padded to n_q) -> its :class:`Ticket`."""
+               q_mask: Optional[np.ndarray] = None,
+               doc_filter=None) -> Ticket:
+        """Enqueue one (t, d) query (padded to n_q) -> its :class:`Ticket`.
+
+        ``doc_filter`` (optional compiled ``bitvector.FilterPlan``) rides
+        with the query; ``drain`` groups consecutive same-filter queries
+        into one batch."""
         q, m = pad_query(query, self.n_q, q_mask)
         self._queries.append(q)
         self._masks.append(m)
         self._submits.append(self.clock())
+        self._filters.append(doc_filter)
         ticket = Ticket()
         self._tickets.append(ticket)
         return ticket
@@ -153,23 +169,33 @@ class MicroBatcher:
             return True
         return self.clock() - self._submits[0] >= self.max_delay_s
 
-    def drain(self) -> Optional[tuple[QueryBatch, list[Ticket]]]:
+    def drain(self) -> Optional[tuple[QueryBatch, list[Ticket], object]]:
         """Pop up to ``max_batch`` pending queries as one dense batch.
 
         -> (QueryBatch with (B, n_q, d) f32 ``q`` and (B, n_q) bool
-        ``q_mask``, the B tickets to fill), or ``None`` when nothing is
-        pending. Queries beyond ``max_batch`` stay queued with their
-        ORIGINAL submit times: the deadline is a per-query latency promise
-        ("a lone query waits at most ``max_delay_s``"), so a query left
-        behind by a full batch keeps aging — re-anchoring its deadline to
-        the drain would let it wait up to twice the promise.
+        ``q_mask``, the B tickets to fill, the batch's shared
+        ``doc_filter``), or ``None`` when nothing is pending. The batch is
+        the longest front run sharing the OLDEST entry's filter — filters
+        never mix within a batch (the engine's filter plan is static per
+        launch) and queries are never reordered (a later same-filter query
+        does NOT jump a differing one; the deadline promise is FIFO).
+        Queries left behind — by ``max_batch`` or by a filter change —
+        stay queued with their ORIGINAL submit times: the deadline is a
+        per-query latency promise ("a lone query waits at most
+        ``max_delay_s``"), so a query left behind keeps aging —
+        re-anchoring its deadline to the drain would let it wait up to
+        twice the promise.
         """
         if not self._queries:
             return None
-        n = min(len(self._queries), self.max_batch)
+        doc_filter = self._filters[0]
+        n = 1
+        while (n < min(len(self._queries), self.max_batch)
+               and self._filters[n] == doc_filter):
+            n += 1
         qb = QueryBatch(np.stack(self._queries[:n]),
                         np.stack(self._masks[:n]))
         tickets = self._tickets[:n]
         del self._queries[:n], self._masks[:n], self._tickets[:n], \
-            self._submits[:n]
-        return qb, tickets
+            self._submits[:n], self._filters[:n]
+        return qb, tickets, doc_filter

@@ -82,6 +82,12 @@ class ServiceMetrics:
         self.queries = 0
         self.warm_queries = 0
         self.cold_queries = 0
+        # predicate-filtered vs unfiltered traffic (docs/FILTERING.md):
+        # filtered queries hit a different cache-key space (the filter
+        # fingerprint joins the config fingerprint), so their warm share
+        # ramps independently — the split makes that visible
+        self.filtered_queries = 0
+        self.unfiltered_queries = 0
         self.batch_latency = LatencyStats(window)
         self.warm_latency = LatencyStats(window)
         self.cold_latency = LatencyStats(window)
@@ -94,9 +100,13 @@ class ServiceMetrics:
         self.reepochs = 0
 
     def record_batch(self, n_queries: int, n_warm: int,
-                     seconds: float) -> None:
+                     seconds: float, n_filtered: int = 0) -> None:
         """Record one executed batch: size, how many of its queries were
-        warm (all immutable-generation partials cache-hit), wall seconds.
+        warm (all immutable-generation partials cache-hit), wall seconds,
+        and how many ran under a predicate filter (a micro-batch is
+        homogeneous — all-filtered or all-unfiltered — so ``n_filtered``
+        is 0 or ``n_queries`` from the service, but mixed counts are
+        accepted for direct callers).
 
         The batch latency lands in the warm reservoir only when the WHOLE
         batch was warm (mixed batches pay the miss lane's compute, which is
@@ -106,6 +116,8 @@ class ServiceMetrics:
         self.queries += n_queries
         self.warm_queries += n_warm
         self.cold_queries += n_queries - n_warm
+        self.filtered_queries += n_filtered
+        self.unfiltered_queries += n_queries - n_filtered
         self.batch_latency.record(seconds)
         if n_warm == n_queries:
             self.warm_latency.record(seconds)
@@ -144,6 +156,8 @@ class ServiceMetrics:
             "cold_queries": self.cold_queries,
             "warm_fraction": (self.warm_queries / self.queries
                               if self.queries else 0.0),
+            "filtered_queries": self.filtered_queries,
+            "unfiltered_queries": self.unfiltered_queries,
             "latency": self.batch_latency.snapshot(),
             "warm_latency": self.warm_latency.snapshot(),
             "cold_latency": self.cold_latency.snapshot(),
@@ -161,7 +175,7 @@ class ServiceMetrics:
                 k: timeline_footprint[k]
                 for k in ("n_generations", "n_docs", "n_tokens",
                           "index_bytes", "manifest_bytes", "total_bytes",
-                          "bytes_per_embedding",
+                          "predicate_bytes", "bytes_per_embedding",
                           "bytes_per_embedding_actual")
             }
         return out

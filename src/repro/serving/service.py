@@ -48,6 +48,7 @@ entries across the swap — invalidation by construction, no flush.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Optional, Union
 
@@ -55,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import store
+from repro.core import bitvector, store
 from repro.core.engine import (EngineConfig, QueryBatch, RetrievalResult,
                                merge_partial_topk, merge_partial_topk_by_rank,
                                retrieve_generation_topk)
@@ -69,6 +70,11 @@ from .metrics import ServiceMetrics
 # partial top-k with doc ids GLOBAL within its epoch. A PlanFactory builds
 # one per generation for a given (one-epoch) timeline; the service invokes
 # it once per epoch, so factories written for plain timelines keep working.
+# Filtered queries call the plan with a THIRD positional argument (the
+# compiled FilterPlan); plans that predate filtering keep working for
+# unfiltered traffic (the service only passes the third argument when a
+# filter is set — a 2-arg plan receiving a filtered query fails with a
+# plain TypeError, the honest signal that the plan can't filter).
 Plan = Callable[[jax.Array, jax.Array], RetrievalResult]
 PlanFactory = Callable[[ShardedTimeline], "list[Plan]"]
 
@@ -125,6 +131,11 @@ class RetrievalService:
         self.pad_miss_lane = pad_miss_lane
         self.clock = clock
         self._cfg_fp = config_fingerprint(self.cfg)
+        # per-filter config fingerprints, memoized by compiled plan: the
+        # filter is config as far as the result cache is concerned, so a
+        # filtered partial NEVER collides with an unfiltered one (or with a
+        # different filter's) for the same (query, generation) pair
+        self._filter_cfg_fps: dict = {}
         self._batcher = MicroBatcher(self.cfg.n_q, max_batch, max_delay_s,
                                      clock=clock)
         self._plan_factory = plan_factory
@@ -189,8 +200,9 @@ class RetrievalService:
                 eplans = list(self._plan_factory(tl))
             else:
                 eplans = [
-                    lambda q, m, _g=gen, _m=meta, _o=off:
-                        retrieve_generation_topk(_g, _m, _o, q, self.cfg, m)
+                    lambda q, m, f=None, _g=gen, _m=meta, _o=off:
+                        retrieve_generation_topk(_g, _m, _o, q, self.cfg, m,
+                                                 doc_filter=f)
                     for gen, meta, off in tl]
             if len(eplans) != len(tl):
                 raise ValueError(
@@ -250,15 +262,47 @@ class RetrievalService:
 
     # -- query paths --------------------------------------------------------
 
-    def query(self, queries, q_masks=None) -> RetrievalResult:
+    def _resolve_filter(self, doc_filter):
+        """Normalize a per-query filter to a compiled ``FilterPlan``.
+
+        Accepts ``None`` (unfiltered), an already-compiled ``FilterPlan``
+        (validated downstream against each generation's predicate names),
+        or a ``FilterExpr`` — compiled here against the SERVING snapshot's
+        predicate vocabulary (every generation in a timeline shares one;
+        ``ShardedTimeline`` enforces it), so callers can hand the service
+        expressions without knowing bit positions."""
+        if doc_filter is None or isinstance(doc_filter, bitvector.FilterPlan):
+            return doc_filter
+        names = self._epoched.epochs[0].metas[0].pred_names
+        return bitvector.compile_filter(doc_filter, names)
+
+    def _cfg_fp_for(self, doc_filter) -> str:
+        """The config fingerprint for cache keys: the base config's when
+        unfiltered, a per-filter one (memoized) when filtered."""
+        if doc_filter is None:
+            return self._cfg_fp
+        fp = self._filter_cfg_fps.get(doc_filter)
+        if fp is None:
+            fp = config_fingerprint(
+                dataclasses.replace(self.cfg, doc_filter=doc_filter))
+            self._filter_cfg_fps[doc_filter] = fp
+        return fp
+
+    def query(self, queries, q_masks=None, *,
+              doc_filter=None) -> RetrievalResult:
         """Retrieve a ready-made batch, bypassing the micro-batcher.
 
         queries : (B, t, d) with t <= cfg.n_q (zero-padded up to n_q here),
                   or a :class:`~repro.core.engine.QueryBatch` carrying the
                   mask itself
         q_masks : optional (B, t) bool per-term masks (True = live)
+        doc_filter : optional predicate filter applied to the whole batch —
+                  a ``bitvector.FilterExpr`` (compiled here against the
+                  timeline's predicate names) or a pre-compiled
+                  ``FilterPlan``
         -> RetrievalResult (scores (B, k), global doc ids (B, k)) — bit-
-        exact to ``retrieve_timeline(timeline, queries, cfg, q_masks)``.
+        exact to ``retrieve_timeline(timeline, queries, cfg, q_masks,
+        doc_filter=doc_filter)``.
         """
         self._maybe_install()
         if isinstance(queries, QueryBatch):
@@ -284,14 +328,20 @@ class RetrievalService:
                                else np.asarray(q_masks)[i])
             padded.append(pq)
             masks.append(pm)
-        return self._execute(np.stack(padded), np.stack(masks))
+        return self._execute(np.stack(padded), np.stack(masks),
+                             doc_filter=self._resolve_filter(doc_filter))
 
     def submit(self, query: np.ndarray,
-               q_mask: Optional[np.ndarray] = None) -> Ticket:
+               q_mask: Optional[np.ndarray] = None, *,
+               doc_filter=None) -> Ticket:
         """Enqueue one (t, d) query; flushes immediately when the batch
         fills to ``max_batch``. -> a :class:`Ticket` (``result()`` after
-        the flush that computes it)."""
-        ticket = self._batcher.submit(query, q_mask)
+        the flush that computes it). ``doc_filter`` (FilterExpr or compiled
+        FilterPlan) is resolved NOW — compile errors surface at submit, not
+        at flush — and batches only with same-filter neighbors (see
+        ``MicroBatcher.drain``)."""
+        ticket = self._batcher.submit(query, q_mask,
+                                      self._resolve_filter(doc_filter))
         if len(self._batcher) >= self._batcher.max_batch:
             self.flush()
         return ticket
@@ -305,8 +355,8 @@ class RetrievalService:
             if drained is None:
                 self._maybe_install()
                 return
-            qb, tickets = drained
-            res = self._execute(qb.q, qb.q_mask)
+            qb, tickets, doc_filter = drained
+            res = self._execute(qb.q, qb.q_mask, doc_filter=doc_filter)
             scores = np.asarray(res.scores)
             ids = np.asarray(res.doc_ids)
             for j, t in enumerate(tickets):
@@ -330,9 +380,13 @@ class RetrievalService:
 
     # -- the hit/miss lane split --------------------------------------------
 
-    def _execute(self, q: np.ndarray, masks: np.ndarray) -> RetrievalResult:
+    def _execute(self, q: np.ndarray, masks: np.ndarray, *,
+                 doc_filter=None) -> RetrievalResult:
         """Run one dense batch through the per-generation lanes, merge by
-        score within each epoch and by rank across epochs."""
+        score within each epoch and by rank across epochs. ``doc_filter``
+        (a compiled FilterPlan, already resolved) applies to the whole
+        batch: it joins the cache key through the config fingerprint and
+        rides to every miss-lane plan as the third positional argument."""
         t0 = self.clock()
         n = q.shape[0]
         if n == 0:
@@ -340,6 +394,7 @@ class RetrievalService:
                 "empty query batch (B=0): nothing to retrieve (the "
                 "micro-batcher never drains an empty batch; direct "
                 "callers must pass >= 1 query)")
+        cfg_fp = self._cfg_fp_for(doc_filter)
         qfps = [query_fingerprint(q[i], masks[i]) for i in range(n)]
         warm = np.full(n, self._n_cacheable > 0)
         n_epochs = len(self._plans)
@@ -354,7 +409,7 @@ class RetrievalService:
                 rows: list = [None] * n
                 miss = []
                 for i in range(n):
-                    hit = self.cache.get((qfps[i], gen_fp, self._cfg_fp)) \
+                    hit = self.cache.get((qfps[i], gen_fp, cfg_fp)) \
                         if cacheable else None
                     if hit is None:
                         miss.append(i)
@@ -370,7 +425,11 @@ class RetrievalService:
                             [mq, np.repeat(mq[:1], pad, axis=0)])
                         mm = np.concatenate(
                             [mm, np.repeat(mm[:1], pad, axis=0)])
-                    res = plan(jnp.asarray(mq), jnp.asarray(mm))
+                    if doc_filter is None:
+                        res = plan(jnp.asarray(mq), jnp.asarray(mm))
+                    else:
+                        res = plan(jnp.asarray(mq), jnp.asarray(mm),
+                                   doc_filter)
                     ms = np.asarray(res.scores)[:len(miss)]
                     # epoch-local -> global ids BEFORE caching, so cached
                     # and fresh partials merge identically (epoch offsets
@@ -380,7 +439,7 @@ class RetrievalService:
                     for j, i in enumerate(miss):
                         rows[i] = (ms[j], mi[j])
                         if cacheable:
-                            self.cache.put((qfps[i], gen_fp, self._cfg_fp),
+                            self.cache.put((qfps[i], gen_fp, cfg_fp),
                                            ms[j], mi[j])
                 parts.append(RetrievalResult(
                     jnp.asarray(np.stack([r[0] for r in rows])),
@@ -389,5 +448,6 @@ class RetrievalService:
         merged = epoch_parts[0] if n_epochs == 1 else \
             merge_partial_topk_by_rank(epoch_parts, self.cfg.k)
         jax.block_until_ready(merged)
-        self.metrics.record_batch(n, int(warm.sum()), self.clock() - t0)
+        self.metrics.record_batch(n, int(warm.sum()), self.clock() - t0,
+                                  n_filtered=0 if doc_filter is None else n)
         return merged

@@ -324,7 +324,7 @@ def test_batcher_overflow_keeps_original_deadline(serve_corpus):
     for i in range(3):                       # all submitted at t=0
         mb.submit(c.queries[i])
     now[0] = 0.008
-    qb, _ = mb.drain()                       # full batch of 2 leaves at t=8ms
+    qb, _, _ = mb.drain()                    # full batch of 2 leaves at t=8ms
     assert qb.q.shape[0] == 2 and len(mb) == 1
     now[0] = 0.012                           # 12ms after the overflow submit
     assert mb.due()                          # NOT re-anchored to the drain

@@ -242,14 +242,17 @@ def test_load_missing_fingerprint_at_v2(tmp_path, saved):
 
 def test_load_v1_file_without_fingerprint(small_corpus, small_index, tmp_path,
                                           saved):
-    """A schema-v1 save (pre-fingerprint) still loads, bit-exactly — the
-    fingerprint is additive; only v2+ manifests are required to carry it."""
+    """A schema-v1 save (pre-fingerprint, pre-predicate-plane) still loads,
+    bit-exactly — the fingerprint is additive; only v2+ manifests are
+    required to carry it, and the plane is synthesized all-zero."""
     def downgrade(m):
         m.pop("fingerprint")
         m["schema_version"] = 1
+        del m["meta"]["pred_names"]
+        del m["arrays"]["pred_words"]
 
     dst = str(tmp_path / "v1")
-    _resave(saved, dst, mutate_manifest=downgrade)
+    _resave(saved, dst, mutate_manifest=downgrade, drop_array="pred_words")
     loaded, _ = load_index(dst)
     idx, _ = small_index
     q = jnp.asarray(small_corpus.queries[:4])
