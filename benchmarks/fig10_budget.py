@@ -1,0 +1,66 @@
+"""Constant-space document budgets: quality / latency / bytes-per-doc vs m.
+
+Sweeps the ``doc_budget`` knob (PR 9 tentpole; Constant-Space Multi-Vector
+Retrieval) over the scaled MS MARCO-like corpus: each budget point builds
+an index whose documents are pooled down to at most ``m`` vectors
+(``pool_documents``: deterministic per-doc spherical k-means), then times
+retrieval and scores MRR@10 against the planted ground truth. ``m=None``
+is the per-token baseline at the SAME build settings, so the sweep isolates
+exactly what the budget buys (bytes/doc, latency via the smaller cap) and
+what it costs (MRR as pooling gets lossy):
+
+    fig10,budget,m=<m>,docs=<n>,retrieve,<us_per_query>,\
+mrr=<q>,bytes_per_doc=<b>,savings=x<s>
+
+``bytes_per_doc`` and ``savings`` come from ``store.generation_footprint``
+(the pooled payload vs the per-token counterfactual over
+``meta.n_raw_tokens``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, build_index
+from repro.core import engine as emvb
+from repro.core.store import generation_footprint
+from repro.data.synthetic import mrr_at_k
+
+from .common import TH, TH_R, bench_corpus, row, time_fn
+
+BUDGETS = (4, 8, 16, 32, None)
+
+
+def run() -> list[str]:
+    corpus = bench_corpus("msmarco")
+    queries = jnp.asarray(corpus.queries)
+    b = queries.shape[0]
+    n_docs = corpus.doc_embs.shape[0]
+    cfg = EngineConfig(k=10, n_filter=512, n_docs=64, th=TH, th_r=TH_R)
+
+    rows = []
+    for budget in BUDGETS:
+        # same key / geometry at every point: the ONLY variable is m
+        idx, meta = build_index(
+            jax.random.PRNGKey(0), corpus.doc_embs, corpus.doc_lens,
+            n_centroids=512, m=16, nbits=8, plaid_b=2, kmeans_iters=2,
+            doc_budget=budget)
+        t = time_fn(lambda i=idx: emvb.retrieve(i, queries, cfg))
+        ids = np.asarray(emvb.retrieve(idx, queries, cfg).doc_ids)
+        fp = generation_footprint(idx, meta)
+        rows.append(row(
+            f"fig10,budget,m={budget},docs={n_docs},retrieve",
+            t / b * 1e6,
+            f"mrr={mrr_at_k(ids, corpus.gt_doc):.3f},"
+            f"bytes_per_doc={fp['bytes_per_doc']:.1f},"
+            f"savings=x{fp['pooling_savings']:.2f}"))
+    return rows
+
+
+def main() -> None:
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,9 @@ fig4: vectorized-vs-naive set membership and bitfilter-vs-centroid
 -interaction; fig6: the query-pruning latency/MRR sweep; fig7: latency +
 MRR@10 as the corpus grows 1 -> N streaming generations; fig8:
 serving-cache throughput/hit-rate, cold vs warm vs uncached; fig9: the
-predicate-filter selectivity sweep, in-kernel vs post-filter; roofline:
+predicate-filter selectivity sweep, in-kernel vs post-filter; fig10:
+the constant-space document-budget sweep, MRR/latency/bytes-per-doc at
+m in {4, 8, 16, 32, None}; roofline:
 per-megakernel batched-vs-vmap wall time + analytic arithmetic intensity at
 B in {1,4,16,64}) and writes the rows to ``BENCH_smoke.json`` — with the
 roofline and fig9 suites split out to their own ``BENCH_roofline.json`` /
@@ -29,7 +31,8 @@ import time
 
 from . import (fig1_breakdown, fig2_threshold, fig4_membership,
                fig5_termfilter, fig6_pruning, fig7_streaming, fig8_serving,
-               fig9_selectivity, roofline, table1_msmarco, table2_ood)
+               fig9_selectivity, fig10_budget, roofline, table1_msmarco,
+               table2_ood)
 
 SUITES = {
     "table1": table1_msmarco,
@@ -42,10 +45,11 @@ SUITES = {
     "fig7": fig7_streaming,
     "fig8": fig8_serving,
     "fig9": fig9_selectivity,
+    "fig10": fig10_budget,
     "roofline": roofline,
 }
 SMOKE_SUITES = ["fig1", "fig2", "fig4", "fig6", "fig7", "fig8", "fig9",
-                "roofline"]
+                "fig10", "roofline"]
 
 
 def main() -> None:

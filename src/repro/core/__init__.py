@@ -2,7 +2,8 @@
 from . import bitvector, engine, index, interaction, kmeans, plaid, pq, residual, store  # noqa: F401
 from .engine import (EngineConfig, QueryBatch, RetrievalResult,  # noqa: F401
                      prune_queries, retrieve, retrieve_timeline)
-from .index import PackedIndex, IndexMeta, build_index, bytes_per_embedding  # noqa: F401
+from .index import (PackedIndex, IndexMeta, build_index,  # noqa: F401
+                    bytes_per_embedding, pool_documents)
 from .plaid import PlaidConfig  # noqa: F401
 from .store import (EpochedTimeline, ShardedTimeline, add_passages,  # noqa: F401
                     generation_footprint, index_fingerprint, load_index,

@@ -65,6 +65,17 @@ class IndexMeta:
     # means no predicate plane (pred_words is all-zero). FilterPlans compile
     # against this ordering, so it is part of the index identity.
     pred_names: tuple = ()
+    # constant-space document budget (arXiv 2504.01818): when set, every
+    # document was pooled down to at most doc_budget vectors by
+    # pool_documents BEFORE quantization, and growth paths MUST pool
+    # incoming docs the same way. None = today's per-token layout,
+    # bit-exactly (pooling code never runs).
+    doc_budget: Optional[int] = None
+    # real (pre-pooling) token count across the corpus — the denominator of
+    # the unpooled counterfactual in store.generation_footprint. 0 on
+    # indexes saved before schema v4 (footprints then fall back to the
+    # stored token count).
+    n_raw_tokens: int = 0
 
     @property
     def drift(self) -> float:
@@ -168,6 +179,71 @@ def quantize_tokens(centroids: jax.Array, doc_embs: np.ndarray,
     return codes, residual_flat, mask
 
 
+def pool_documents(doc_embs: np.ndarray, doc_lens: np.ndarray,
+                   budget: int, *, iters: int = 4
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Pool every document down to at most ``budget`` vectors (arXiv
+    2504.01818: constant-space multi-vector docs).
+
+    Documents with ``len <= budget`` pass through UNCHANGED (their token
+    rows are copied verbatim), which is what makes ``budget >=
+    max_doc_len`` pooling bit-exact to the unpooled index. Longer docs are
+    clustered with a per-doc deterministic spherical k-means (evenly spaced
+    token indices as seeds — no RNG, so build and growth paths encode a
+    given document identically), then each cluster is MEAN-POOLED over its
+    raw token vectors. Empty clusters (duplicate tokens) are dropped, so a
+    pooled length can come out below ``budget``; downstream the pooled
+    vectors take the ordinary ``quantize_tokens`` path, which re-normalizes
+    rows.
+
+    doc_embs : (n_docs, cap, d) fp32, zero-padded
+    doc_lens : (n_docs,) int
+    -> (pooled_embs (n_docs, min(cap, budget), d) fp32 zero-padded,
+        pooled_lens (n_docs,) int32)
+    """
+    if budget < 1:
+        raise ValueError(f"doc_budget must be >= 1, got {budget}")
+    doc_embs = np.asarray(doc_embs, dtype=np.float32)
+    doc_lens = np.asarray(doc_lens)
+    n_docs, cap, d = doc_embs.shape
+    new_cap = min(cap, int(budget))
+    out = np.zeros((n_docs, new_cap, d), np.float32)
+    out_lens = np.zeros((n_docs,), np.int32)
+    for i in range(n_docs):
+        ln = int(doc_lens[i])
+        toks = doc_embs[i, :ln]
+        if ln <= budget:
+            out[i, :ln] = toks
+            out_lens[i] = ln
+            continue
+        normed = toks / np.maximum(
+            np.linalg.norm(toks, axis=-1, keepdims=True), 1e-12)
+        # deterministic seeds: evenly spaced token positions (strictly
+        # increasing because ln > budget, so seeds are distinct indices)
+        seed_idx = np.round(np.linspace(0, ln - 1, budget)).astype(int)
+        cents = normed[seed_idx]
+        labels = np.argmax(normed @ cents.T, axis=1)
+        for _ in range(iters):
+            sums = np.zeros((budget, d), np.float32)
+            np.add.at(sums, labels, normed)
+            counts = np.bincount(labels, minlength=budget)
+            means = sums / np.maximum(counts, 1)[:, None]
+            means /= np.maximum(
+                np.linalg.norm(means, axis=-1, keepdims=True), 1e-12)
+            # empty clusters keep their previous centroid (degenerate docs
+            # — e.g. all-identical tokens — simply collapse below)
+            cents = np.where((counts > 0)[:, None], means, cents)
+            labels = np.argmax(normed @ cents.T, axis=1)
+        sums = np.zeros((budget, d), np.float32)
+        np.add.at(sums, labels, toks)          # mean over RAW token vectors
+        counts = np.bincount(labels, minlength=budget)
+        keep = counts > 0
+        pooled = sums[keep] / counts[keep][:, None]
+        out[i, :pooled.shape[0]] = pooled
+        out_lens[i] = pooled.shape[0]
+    return out, out_lens
+
+
 def _build_ivf(codes: np.ndarray, n_centroids: int,
                list_cap: Optional[int], *, origin: str = "build_index"
                ) -> tuple[np.ndarray, np.ndarray, int, int]:
@@ -226,7 +302,9 @@ def build_index(key: jax.Array,
                 kmeans_iters: int = 8,
                 pq_train_size: int = 65536,
                 use_opq: bool = False,
-                predicates=None) -> tuple[PackedIndex, IndexMeta]:
+                predicates=None,
+                doc_budget: Optional[int] = None
+                ) -> tuple[PackedIndex, IndexMeta]:
     """Build the full EMVB/PLAID index over a padded corpus (eager, once).
 
     Trains the centroid vocabulary (spherical k-means over all real token
@@ -242,8 +320,18 @@ def build_index(key: jax.Array,
     bool}`` mapping, packed one bit per name into ``pred_words`` and named
     in ``meta.pred_names`` (docs/FILTERING.md).
 
+    ``doc_budget`` turns on the constant-space representation: documents
+    are pooled to at most ``doc_budget`` vectors by :func:`pool_documents`
+    before any training/quantization, ``cap`` shrinks to ``min(cap,
+    doc_budget)``, and the budget is recorded in ``meta.doc_budget`` so the
+    growth paths pool identically. ``None`` leaves every byte of the index
+    bit-exactly as before.
+
     -> (PackedIndex, IndexMeta)
     """
+    n_raw_tokens = int(np.asarray(doc_lens).sum())
+    if doc_budget is not None:
+        doc_embs, doc_lens = pool_documents(doc_embs, doc_lens, doc_budget)
     n_docs, cap, d = doc_embs.shape
     k1, k2, k3 = jax.random.split(key, 3)
 
@@ -303,7 +391,8 @@ def build_index(key: jax.Array,
     meta = IndexMeta(n_docs=n_docs, n_centroids=n_centroids, d=d, cap=cap,
                      m=m, nbits=nbits, plaid_b=plaid_b, list_cap=list_cap,
                      n_dropped=n_dropped, train_quant_mse=train_quant_mse,
-                     pred_names=pred_names)
+                     pred_names=pred_names, doc_budget=doc_budget,
+                     n_raw_tokens=n_raw_tokens)
     idx = PackedIndex(
         centroids=centroids,
         codes=jnp.asarray(codes),

@@ -39,7 +39,7 @@ import numpy as np
 
 from .bitvector import MAX_PREDICATES, PredicateSet
 from .index import IndexMeta, PackedIndex, _build_ivf, bytes_per_embedding, \
-    quantize_tokens
+    pool_documents, quantize_tokens
 from .pq import encode_pq
 from .residual import encode_residual
 
@@ -51,7 +51,12 @@ from .residual import encode_residual
 # ``pred_names`` the meta (docs/FILTERING.md). Additive: v2 files load as
 # "no plane" (empty names, all-zero words), and their fingerprints verify
 # over the v2 field subset.
-SCHEMA_VERSION = 3
+# v4: constant-space document budgets — ``doc_budget`` and
+# ``n_raw_tokens`` join the meta (no array changes, so v3 fingerprints
+# stay full-field). Additive: v3 files load as ``doc_budget=None`` /
+# ``n_raw_tokens=0`` (per-token layout, footprints fall back to the
+# stored token count).
+SCHEMA_VERSION = 4
 _FORMAT = "emvb-packed-index"
 _TIMELINE_FORMAT = "emvb-sharded-timeline"
 _MANIFEST = "manifest.json"
@@ -169,6 +174,10 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
     if version < 3:
         # v2 manifests predate the predicate plane: default to "no plane"
         meta_dict.setdefault("pred_names", [])
+    if version < 4:
+        # v3 manifests predate document budgets: per-token layout
+        meta_dict.setdefault("doc_budget", None)
+        meta_dict.setdefault("n_raw_tokens", 0)
     missing = sorted(meta_fields - meta_dict.keys())
     unknown = sorted(meta_dict.keys() - meta_fields)
     if missing:
@@ -189,6 +198,17 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
                           f"{MAX_PREDICATES} (one bit per name in a uint32 "
                           "word)")
     meta_dict["pred_names"] = tuple(pn)   # JSON round-trips tuples as lists
+    db = meta_dict["doc_budget"]
+    if db is not None and (isinstance(db, bool) or
+                           not isinstance(db, int) or db < 1):
+        raise _fail(path, f"meta doc_budget={db!r} is neither null nor a "
+                          "positive integer — corrupt or hand-edited "
+                          "manifest")
+    nrt = meta_dict["n_raw_tokens"]
+    if isinstance(nrt, bool) or not isinstance(nrt, int) or nrt < 0:
+        raise _fail(path, f"meta n_raw_tokens={nrt!r} is not a "
+                          "non-negative integer — corrupt or hand-edited "
+                          "manifest")
     meta = IndexMeta(**meta_dict)
 
     # v2 saves carry no pred_words array; everything else is identical
@@ -233,6 +253,18 @@ def load_index(path: str) -> tuple[PackedIndex, IndexMeta]:
                           f"n_centroids={meta.n_centroids}) disagrees with "
                           f"the arrays (codes {n_docs}x{cap}, centroids "
                           f"{index.centroids.shape[0]}) — corrupt save")
+    if meta.doc_budget is not None and meta.cap > meta.doc_budget:
+        raise _fail(path, f"meta declares doc_budget={meta.doc_budget} but "
+                          f"cap={meta.cap} exceeds it — a budgeted index "
+                          "never stores more than doc_budget vectors per "
+                          "doc (corrupt or hand-edited manifest)")
+    if meta.n_raw_tokens and \
+            meta.n_raw_tokens < int(np.asarray(index.doc_lens).sum()):
+        raise _fail(path, f"meta n_raw_tokens={meta.n_raw_tokens} is below "
+                          "the stored token count "
+                          f"{int(np.asarray(index.doc_lens).sum())} — "
+                          "pooling never grows a document (corrupt or "
+                          "hand-edited manifest)")
     pw = np.asarray(index.pred_words)
     if pw.shape != (n_docs,):
         raise _fail(path, f"predicate plane pred_words has "
@@ -300,6 +332,57 @@ def _encode_passages(index: PackedIndex, doc_embs: np.ndarray,
     real = residual_flat[mask.reshape(-1)]
     return codes, res_codes, plaid_res, float(np.sum(real * real)), \
         int(mask.sum())
+
+
+def _pool_new_docs(meta: IndexMeta, doc_embs: np.ndarray,
+                   doc_lens: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Apply the index's document budget to incoming RAW passages.
+
+    Growth paths must encode a doc exactly as ``build_index`` would have:
+    for a budgeted index (``meta.doc_budget`` set) that means pooling with
+    :func:`~repro.core.index.pool_documents` FIRST, then padding the
+    pooled arrays out to the index ``cap``. Raw inputs may be padded to
+    any cap >= 1 (they are pooled down before the geometry check); an
+    unbudgeted index passes everything through untouched. Returns
+    ``(doc_embs, doc_lens, n_raw)`` where ``n_raw`` is the pre-pooling
+    token count for the footprint counterfactual.
+    """
+    doc_embs = np.asarray(doc_embs, dtype=np.float32)
+    doc_lens = np.asarray(doc_lens, dtype=np.int32)
+    n_raw = int(doc_lens.sum()) if doc_lens.ndim == 1 else 0
+    if meta.doc_budget is None or doc_embs.ndim != 3:
+        return doc_embs, doc_lens, n_raw
+    doc_embs, doc_lens = pool_documents(doc_embs, doc_lens,
+                                        meta.doc_budget)
+    cap = doc_embs.shape[1]
+    if cap < meta.cap:                       # pad pooled docs to index cap
+        pad = np.zeros((doc_embs.shape[0], meta.cap - cap,
+                        doc_embs.shape[2]), np.float32)
+        doc_embs = np.concatenate([doc_embs, pad], axis=1)
+    elif cap > meta.cap:
+        if int(doc_lens.max(initial=0)) > meta.cap:
+            raise ValueError(
+                f"new passages still hold up to {int(doc_lens.max())} "
+                f"vectors after pooling to doc_budget="
+                f"{meta.doc_budget}, but the index cap is {meta.cap} — "
+                "the base corpus never filled the budget; rebuild with a "
+                "larger cap (or a budget <= cap) to grow these docs")
+        doc_embs = doc_embs[:, :meta.cap]    # all-zero padding columns
+    return doc_embs, doc_lens, n_raw
+
+
+def _grown_raw_tokens(meta: IndexMeta, n_raw: int) -> int:
+    """Growth bookkeeping for ``meta.n_raw_tokens``.
+
+    Indexes that track raw tokens (any v4 build) keep the count exact;
+    pre-v4 loads carry 0 and stay at 0 for unbudgeted indexes (footprints
+    then fall back to the stored token count, which IS the raw count when
+    nothing is pooled).
+    """
+    if meta.n_raw_tokens == 0 and meta.doc_budget is None:
+        return 0
+    return meta.n_raw_tokens + n_raw
 
 
 def _check_new_docs(meta: IndexMeta, doc_embs: np.ndarray,
@@ -384,7 +467,10 @@ def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
     ``meta.train_quant_mse`` via ``meta.drift`` to decide when a re-train
     (fresh ``build_index`` over the union corpus) is warranted.
 
-    doc_embs   : (n_new, cap, d) fp32, zero-padded to the INDEX's cap/d
+    doc_embs   : (n_new, cap, d) fp32, zero-padded to the INDEX's cap/d —
+                 except on a budgeted index (``meta.doc_budget`` set),
+                 which accepts RAW docs at any cap and pools them down
+                 exactly as ``build_index`` would have
     doc_lens   : (n_new,) int
     predicates : the new docs' predicate values when the index has a plane
                  (a ``{name: (n_new,) bool}`` mapping or PredicateSet over
@@ -392,6 +478,7 @@ def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
                  has none
     -> (PackedIndex, IndexMeta) — a new index/meta pair (inputs unchanged)
     """
+    doc_embs, doc_lens, n_raw = _pool_new_docs(meta, doc_embs, doc_lens)
     doc_embs, doc_lens = _check_new_docs(meta, doc_embs, doc_lens)
     n_old, n_new = meta.n_docs, doc_embs.shape[0]
     n_total = n_old + n_new
@@ -442,7 +529,8 @@ def add_passages(index: PackedIndex, meta: IndexMeta, doc_embs: np.ndarray,
     )
     grown_meta = dataclasses.replace(
         meta, n_docs=n_total, list_cap=list_cap, n_grown=meta.n_grown + n_new,
-        grown_quant_mse=float(grown_mse))
+        grown_quant_mse=float(grown_mse),
+        n_raw_tokens=_grown_raw_tokens(meta, n_raw))
     return grown, grown_meta
 
 
@@ -466,8 +554,15 @@ def new_generation(base: PackedIndex, base_meta: IndexMeta,
     when it has none — a timeline serves ONE compiled FilterPlan across all
     its generations, so bit positions must agree everywhere.
 
+    A budgeted base (``base_meta.doc_budget`` set) pools the incoming RAW
+    docs (any input cap) before encoding, exactly as ``build_index`` would
+    have, and the generation meta carries the budget forward — the whole
+    timeline stays constant-space.
+
     -> (PackedIndex, IndexMeta) for the new generation alone
     """
+    doc_embs, doc_lens, n_raw = _pool_new_docs(base_meta, doc_embs,
+                                               doc_lens)
     doc_embs, doc_lens = _check_new_docs(base_meta, doc_embs, doc_lens)
     n_new = doc_embs.shape[0]
     pred_words = _pack_new_predicates(base_meta, n_new, predicates,
@@ -492,7 +587,8 @@ def new_generation(base: PackedIndex, base_meta: IndexMeta,
     )
     gen_meta = dataclasses.replace(
         base_meta, n_docs=n_new, list_cap=list_cap, n_dropped=n_dropped,
-        n_grown=n_new, grown_quant_mse=sq_sum / max(n_tok, 1))
+        n_grown=n_new, grown_quant_mse=sq_sum / max(n_tok, 1),
+        n_raw_tokens=n_raw)
     return gen, gen_meta
 
 
@@ -675,6 +771,14 @@ def merge_generations(timeline: ShardedTimeline, lo: int,
             "generation — nothing to compact")
     gens = timeline.generations[lo:hi]
     metas = timeline.metas[lo:hi]
+    budgets = {m.doc_budget for m in metas}
+    if len(budgets) > 1:
+        raise ValueError(
+            f"merge_generations range [lo={lo}, hi={hi}) mixes document "
+            f"budgets {sorted(budgets, key=str)} — a merged generation has "
+            "ONE doc_budget and pooled/unpooled docs must not be conflated "
+            "silently; re-encode one side (store.new_generation against a "
+            "common base) before compacting")
     n_total = sum(m.n_docs for m in metas)
     for g, (gen, m) in enumerate(zip(gens, metas), start=lo):
         if np.asarray(gen.plaid_res).shape[0] != m.n_docs:
@@ -741,10 +845,15 @@ def merge_generations(timeline: ShardedTimeline, lo: int,
         opq_rotation=first.opq_rotation,
         pred_words=jnp.asarray(pred_words),
     )
+    # raw-token accounting survives the merge only if every generation
+    # tracked it (pre-v4 loads carry 0 — summing those would under-count)
+    n_raw = (sum(m.n_raw_tokens for m in metas)
+             if all(m.n_raw_tokens for m in metas) else 0)
     merged_meta = dataclasses.replace(
         metas[0], n_docs=n_total, list_cap=list_cap,
         n_dropped=sum(m.n_dropped for m in metas), n_grown=n_grown,
-        grown_quant_mse=float(num / tok) if tok else 0.0)
+        grown_quant_mse=float(num / tok) if tok else 0.0,
+        n_raw_tokens=n_raw)
     return ShardedTimeline(
         timeline.generations[:lo] + (merged,) + timeline.generations[hi:],
         timeline.metas[:lo] + (merged_meta,) + timeline.metas[hi:])
@@ -956,6 +1065,15 @@ def generation_footprint(index: PackedIndex, meta: IndexMeta) -> dict:
     payload (codes + PQ residuals + PLAID residuals) divided by REAL
     tokens, so the gap to the constant is the padding + id-width tax the
     fixed-shape layout pays.
+
+    Constant-space accounting (``meta.doc_budget``): ``bytes_per_doc`` is
+    the packed per-doc payload as stored (pooled vectors for a budgeted
+    index), ``unpooled_bytes_per_doc`` is the counterfactual — the same
+    per-token byte width times ``meta.n_raw_tokens`` pre-pooling tokens —
+    and ``pooling_savings`` is the fraction of payload bytes the budget
+    saved (0.0 when nothing was pooled). Both per-doc views count packed
+    tokens only; the fixed-shape padding tax stays visible in
+    ``bytes_per_embedding_actual``.
     """
     arrays = {f: np.asarray(getattr(index, f)) for f in PackedIndex._fields}
     array_bytes = {f: int(a.nbytes) for f, a in arrays.items()}
@@ -972,9 +1090,23 @@ def generation_footprint(index: PackedIndex, meta: IndexMeta) -> dict:
     n_tokens = int(np.asarray(index.doc_lens).sum())
     payload = (array_bytes["codes"] + array_bytes["res_codes"]
                + array_bytes["plaid_res"])
+    # per-token byte width of the packed payload (one centroid id + PQ +
+    # PLAID residual codes per stored token slot)
+    tok_bytes = (arrays["codes"].dtype.itemsize
+                 + arrays["res_codes"].shape[-1]
+                 * arrays["res_codes"].dtype.itemsize
+                 + arrays["plaid_res"].shape[-1]
+                 * arrays["plaid_res"].dtype.itemsize)
+    n_raw = meta.n_raw_tokens or n_tokens
+    n_docs_ = max(meta.n_docs, 1)
     return {
         "n_docs": meta.n_docs,
         "n_tokens": n_tokens,
+        "n_raw_tokens": n_raw,
+        "doc_budget": meta.doc_budget,
+        "bytes_per_doc": tok_bytes * n_tokens / n_docs_,
+        "unpooled_bytes_per_doc": tok_bytes * n_raw / n_docs_,
+        "pooling_savings": 1.0 - n_tokens / max(n_raw, 1),
         "array_bytes": array_bytes,
         "index_bytes": index_bytes,
         "manifest_bytes": manifest_bytes,
@@ -1014,6 +1146,7 @@ def timeline_footprint(timeline) -> dict:
             "predicate_bytes": sum(p["predicate_bytes"] for p in per),
             "bytes_per_embedding": per[0]["bytes_per_embedding"],
             "bytes_per_embedding_actual": payload / max(n_tokens, 1),
+            **_pooling_rollup(per, timeline.n_docs),
         }
     gens = [generation_footprint(g, m) for g, m, _ in timeline]
     tj = {"format": _TIMELINE_FORMAT, "schema_version": SCHEMA_VERSION,
@@ -1037,4 +1170,23 @@ def timeline_footprint(timeline) -> dict:
         "predicate_bytes": sum(g["predicate_bytes"] for g in gens),
         "bytes_per_embedding": gens[0]["bytes_per_embedding"],
         "bytes_per_embedding_actual": payload / max(n_tokens, 1),
+        **_pooling_rollup(gens, timeline.n_docs),
+    }
+
+
+def _pooling_rollup(parts: list, n_docs: int) -> dict:
+    """Aggregate the constant-space keys over per-generation (or per-epoch)
+    footprints: doc-weighted payload sums; ``doc_budget`` is the common
+    value, or ``"mixed"`` when parts disagree (an epoched timeline mid-
+    migration)."""
+    pooled = sum(p["bytes_per_doc"] * p["n_docs"] for p in parts)
+    raw = sum(p["unpooled_bytes_per_doc"] * p["n_docs"] for p in parts)
+    budgets = {p["doc_budget"] for p in parts}
+    return {
+        "n_raw_tokens": sum(p["n_raw_tokens"] for p in parts),
+        "doc_budget": (parts[0]["doc_budget"] if len(budgets) == 1
+                       else "mixed"),
+        "bytes_per_doc": pooled / max(n_docs, 1),
+        "unpooled_bytes_per_doc": raw / max(n_docs, 1),
+        "pooling_savings": 1.0 - pooled / max(raw, 1e-9),
     }

@@ -63,15 +63,25 @@ def query_fingerprint(query: np.ndarray,
     return h.hexdigest()
 
 
-def config_fingerprint(cfg: EngineConfig) -> str:
+def config_fingerprint(cfg: EngineConfig, doc_budget=None) -> str:
     """Fingerprint an ``EngineConfig``: sha1 over every field, sorted.
 
     Python's ``hash()`` is salted per process, so the dataclass hash cannot
     key anything that outlives a process; the field dump can. Every field
     participates — kernel dispatch flags included, since the bit-exactness
     contract is per config, not just per budget.
+
+    ``doc_budget`` folds the served timeline's document budget (or a tuple
+    of per-epoch budgets) into the key: a pooled and an unpooled index over
+    the same corpus can coincidentally share a generation fingerprint when
+    every doc fits the budget, so the representation regime must be keyed
+    explicitly — pooled and unpooled partials never collide. ``None`` (the
+    per-token layout) leaves the fingerprint bit-identical to pre-budget
+    builds, so existing cache keys survive the upgrade.
     """
     fields = sorted(dataclasses.asdict(cfg).items())
+    if doc_budget is not None:
+        fields.append(("doc_budget", doc_budget))
     return hashlib.sha1(repr(fields).encode()).hexdigest()
 
 

@@ -38,7 +38,7 @@ from typing import Callable, NamedTuple, Optional, Union
 import jax
 import numpy as np
 
-from repro.core.index import build_index
+from repro.core.index import build_index, pool_documents
 from repro.core.store import (EpochedTimeline, ShardedTimeline,
                               merge_generations)
 
@@ -184,8 +184,12 @@ def reepoch_tail(timeline: Timeline, lo: int, doc_embs: np.ndarray,
     order) go through a full :func:`~repro.core.index.build_index`:
     re-trained centroids and PQ codebooks quantize them losslessly-fresh
     (drift resets to 1.0). Geometry (``n_centroids``/``m``/``nbits``/
-    ``plaid_b``) defaults to the old epoch's and is overridable through
-    ``build_kwargs``.
+    ``plaid_b``) AND the document budget (``doc_budget``) default to the
+    old epoch's and are overridable through ``build_kwargs``. A budgeted
+    epoch takes RAW embeddings at any cap (the fetcher never sees pooled
+    vectors — the index doesn't store raw ones either way): they are
+    pooled deterministically, validated against the recorded pooled
+    lengths, and re-encoded under the fresh codebooks.
 
     **Global ids are preserved by construction**: only a SUFFIX is ever
     rebuilt, in corpus order, so doc ``i`` of the old timeline is doc ``i``
@@ -213,10 +217,21 @@ def reepoch_tail(timeline: Timeline, lo: int, doc_embs: np.ndarray,
     embs = np.asarray(doc_embs, dtype=np.float32)
     lens = np.asarray(doc_lens)
     meta0 = tl.metas[0]
-    if embs.ndim != 3 or embs.shape[1:] != (meta0.cap, meta0.d):
+    # the document budget is part of the epoch's representation contract
+    # and carries into the rebuilt epoch unless explicitly overridden
+    kwargs = dict(n_centroids=meta0.n_centroids, m=meta0.m,
+                  nbits=meta0.nbits, plaid_b=meta0.plaid_b,
+                  doc_budget=meta0.doc_budget)
+    kwargs.update(build_kwargs)
+    budgeted = meta0.doc_budget is not None or \
+        kwargs["doc_budget"] is not None
+    if embs.ndim != 3 or embs.shape[2] != meta0.d or \
+            (not budgeted and embs.shape[1] != meta0.cap):
         raise ValueError(
             f"doc_embs has shape {embs.shape}: expected "
-            f"(n, cap={meta0.cap}, d={meta0.d}) matching the epoch")
+            f"(n, cap={meta0.cap}, d={meta0.d}) matching the epoch"
+            + (" (a budgeted epoch accepts RAW docs at any cap; they are "
+               "pooled down)" if budgeted else ""))
     if embs.shape[0] != tail_docs:
         raise ValueError(
             f"doc_embs has {embs.shape[0]} docs but generations "
@@ -224,15 +239,19 @@ def reepoch_tail(timeline: Timeline, lo: int, doc_embs: np.ndarray,
             "EXACTLY the tail slice (global ids depend on it)")
     want_lens = np.concatenate(
         [np.asarray(g.doc_lens) for g in tl.generations[lo:]])
-    if not np.array_equal(lens, want_lens):
+    if meta0.doc_budget is None:
+        check_lens = lens
+    elif kwargs["doc_budget"] == meta0.doc_budget:
+        # recorded lengths are POOLED lengths: pool the supplied raw docs
+        # the same deterministic way and compare those
+        check_lens = pool_documents(embs, lens, meta0.doc_budget)[1]
+    else:
+        check_lens = None   # budget override re-pools; lengths can't match
+    if check_lens is not None and not np.array_equal(check_lens, want_lens):
         raise ValueError(
             "doc_lens do not match the tail generations' recorded "
             "lengths: the supplied embeddings are not the same docs "
             "(global-id stability would silently break)")
-
-    kwargs = dict(n_centroids=meta0.n_centroids, m=meta0.m,
-                  nbits=meta0.nbits, plaid_b=meta0.plaid_b)
-    kwargs.update(build_kwargs)
     index, meta = build_index(key, embs, lens, **kwargs)
     fresh = ShardedTimeline((index,), (meta,))
 

@@ -176,6 +176,12 @@ class ServiceMetrics:
                 for k in ("n_generations", "n_docs", "n_tokens",
                           "index_bytes", "manifest_bytes", "total_bytes",
                           "predicate_bytes", "bytes_per_embedding",
-                          "bytes_per_embedding_actual")
+                          "bytes_per_embedding_actual",
+                          # constant-space accounting (docs/ARCHITECTURE.md
+                          # pooling stage): what the doc_budget saves vs
+                          # the per-token counterfactual
+                          "n_raw_tokens", "doc_budget", "bytes_per_doc",
+                          "unpooled_bytes_per_doc", "pooling_savings")
+                if k in timeline_footprint
             }
         return out

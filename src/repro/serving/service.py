@@ -130,6 +130,10 @@ class RetrievalService:
         self.metrics = metrics if metrics is not None else ServiceMetrics()
         self.pad_miss_lane = pad_miss_lane
         self.clock = clock
+        # overwritten at every install with the snapshot's document budget
+        # folded in (see _install); pre-set so a failed first _prepare
+        # leaves a coherent object
+        self._doc_budget = None
         self._cfg_fp = config_fingerprint(self.cfg)
         # per-filter config fingerprints, memoized by compiled plan: the
         # filter is config as far as the result cache is concerned, so a
@@ -210,15 +214,33 @@ class RetrievalService:
                     f"{len(tl)}-generation epoch")
             plans.append(eplans)
             fps.append(tl.fingerprints)
-        return epoched, plans, fps, list(epoched.epoch_offsets)
+        # the snapshot's document-budget signature: None for an all-
+        # per-token timeline (config fingerprints stay pre-budget-exact),
+        # the budget for one epoch, per-epoch budgets once re-epoching
+        # has mixed regimes
+        budgets = tuple(tl.metas[0].doc_budget for tl, _ in epoched)
+        if all(b is None for b in budgets):
+            budget_sig = None
+        else:
+            budget_sig = budgets[0] if len(budgets) == 1 else budgets
+        return (epoched, plans, fps, list(epoched.epoch_offsets),
+                budget_sig)
 
     def _install(self, staged: tuple) -> None:
         """Atomically switch the serving snapshot to a prepared one."""
         swap = hasattr(self, "_epoched")        # constructor install is free
         deferred = self._staged is not None
         self._staged = None
-        self._epoched, self._plans, self._gen_fps, self._epoch_offsets = \
-            staged
+        (self._epoched, self._plans, self._gen_fps, self._epoch_offsets,
+         budget_sig) = staged
+        if budget_sig != self._doc_budget or not swap:
+            # the budget joins every cache key: pooled and unpooled
+            # partials must never collide even when their generation
+            # fingerprints coincide (all docs under budget)
+            self._doc_budget = budget_sig
+            self._cfg_fp = config_fingerprint(self.cfg,
+                                              doc_budget=budget_sig)
+            self._filter_cfg_fps = {}
         # only the open generation (last of the live epoch) is mutable
         self._n_cacheable = sum(len(p) for p in self._plans) - 1
         if swap:
@@ -284,7 +306,8 @@ class RetrievalService:
         fp = self._filter_cfg_fps.get(doc_filter)
         if fp is None:
             fp = config_fingerprint(
-                dataclasses.replace(self.cfg, doc_filter=doc_filter))
+                dataclasses.replace(self.cfg, doc_filter=doc_filter),
+                doc_budget=self._doc_budget)
             self._filter_cfg_fps[doc_filter] = fp
         return fp
 

@@ -12,6 +12,18 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+# The property lane's bounded profile must be registered before pytest
+# resolves --hypothesis-profile (i.e. before test modules import), so it
+# lives here and not only in tests/strategies.py. Absent hypothesis the
+# strategies shim takes over and this is a no-op.
+try:  # noqa: E402
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", deadline=None, derandomize=True,
+                                   max_examples=25)
+except ImportError:
+    pass
+
 from repro.core import build_index  # noqa: E402
 from repro.data.synthetic import make_corpus  # noqa: E402
 

@@ -1,0 +1,307 @@
+"""Constant-space document budgets (PR 9 tentpole): pooling edge cases,
+pooled persistence (round trip + corruption modes), growth/maintenance
+budget carry, and the footprint counterfactual.
+
+The property suite (tests/test_props.py) covers the randomized laws; this
+file pins the deterministic corners: single-token docs, m=1, pass-through
+identity, degenerate (all-identical-token) clusters, and every new schema-v4
+validation failure.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, ShardedTimeline, add_passages,
+                        build_index, engine, index_fingerprint, load_index,
+                        merge_generations, new_generation, pool_documents,
+                        retrieve_timeline, save_index)
+from repro.core.store import generation_footprint, timeline_footprint
+from repro.data.synthetic import make_corpus
+from repro.serving import reepoch_tail
+
+CFG = EngineConfig(n_q=8, nprobe=4, th=0.2, th_r=0.3, n_filter=64,
+                   n_docs=32, k=8)
+
+
+@pytest.fixture(scope="module")
+def pcorpus():
+    return make_corpus(7, n_docs=120, cap=12, min_len=2, d=32, n_topics=12,
+                       n_queries=6, n_q=8)
+
+
+@pytest.fixture(scope="module")
+def pooled(pcorpus):
+    return build_index(jax.random.PRNGKey(0), pcorpus.doc_embs,
+                       pcorpus.doc_lens, n_centroids=32, m=8, nbits=4,
+                       kmeans_iters=2, doc_budget=4)
+
+
+# ---------------------------------------------------------------------------
+# pool_documents edge cases
+# ---------------------------------------------------------------------------
+
+def test_pool_rejects_nonpositive_budget(pcorpus):
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="budget"):
+            pool_documents(pcorpus.doc_embs, pcorpus.doc_lens, bad)
+
+
+def test_single_token_docs_pass_through():
+    rng = np.random.default_rng(0)
+    embs = np.zeros((5, 6, 8), np.float32)
+    embs[:, 0] = rng.normal(size=(5, 8)).astype(np.float32)
+    lens = np.ones(5, np.int32)
+    for budget in (1, 3):
+        out, olens = pool_documents(embs, lens, budget)
+        np.testing.assert_array_equal(olens, lens)
+        np.testing.assert_array_equal(out[:, 0], embs[:, 0])
+        assert (out[:, 1:] == 0.0).all()
+
+
+def test_budget_one_pools_to_token_mean(pcorpus):
+    """m=1 is one cluster holding every token: the pooled vector is the
+    mean of the document's RAW token vectors."""
+    out, olens = pool_documents(pcorpus.doc_embs, pcorpus.doc_lens, 1)
+    assert out.shape[1] == 1
+    assert (olens == 1).all()
+    for i in (0, 17, 119):
+        ln = int(pcorpus.doc_lens[i])
+        np.testing.assert_allclose(out[i, 0],
+                                   pcorpus.doc_embs[i, :ln].mean(0),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_budget_covering_all_lens_is_identity(pcorpus):
+    """m >= every doc len: pooling is byte-for-byte the identity."""
+    out, olens = pool_documents(pcorpus.doc_embs, pcorpus.doc_lens,
+                                int(pcorpus.doc_lens.max()))
+    np.testing.assert_array_equal(olens, pcorpus.doc_lens)
+    np.testing.assert_array_equal(out, pcorpus.doc_embs[:, :out.shape[1]])
+
+
+def test_identical_tokens_collapse_to_one_cluster():
+    """A doc of identical tokens degenerates every cluster onto the same
+    centroid; empties are dropped, leaving ONE pooled vector == the token."""
+    tok = np.full(8, 0.5, np.float32)
+    embs = np.tile(tok, (1, 10, 1)).astype(np.float32)
+    lens = np.asarray([10], np.int32)
+    out, olens = pool_documents(embs, lens, 4)
+    assert olens[0] == 1
+    np.testing.assert_allclose(out[0, 0], tok, rtol=1e-6)
+    assert (out[0, 1:] == 0.0).all()
+    assert np.isfinite(out).all()
+
+
+# ---------------------------------------------------------------------------
+# Pooled build: meta, footprint counterfactual, budget-aware growth
+# ---------------------------------------------------------------------------
+
+def test_pooled_build_meta_and_footprint(pcorpus, pooled):
+    idx, meta = pooled
+    assert meta.doc_budget == 4
+    assert meta.cap <= 4
+    assert meta.n_raw_tokens == int(pcorpus.doc_lens.sum())
+    assert (np.asarray(idx.doc_lens) <= 4).all()
+    fp = generation_footprint(idx, meta)
+    assert fp["doc_budget"] == 4
+    assert fp["n_raw_tokens"] == meta.n_raw_tokens
+    # the acceptance number: pooled bytes/doc strictly beat the per-token
+    # counterfactual, by exactly the token-count ratio
+    assert fp["bytes_per_doc"] < fp["unpooled_bytes_per_doc"]
+    assert fp["pooling_savings"] == pytest.approx(
+        1.0 - fp["n_tokens"] / fp["n_raw_tokens"])
+    assert fp["pooling_savings"] > 0.3
+
+
+def test_pooled_growth_matches_standalone_pooling(pcorpus, pooled):
+    """add_passages / new_generation accept RAW docs on a budgeted index and
+    pool them exactly as pool_documents would (same deterministic seeds)."""
+    idx, meta = pooled
+    new_embs, new_lens = pcorpus.doc_embs[:40], pcorpus.doc_lens[:40]
+    want_lens = pool_documents(new_embs, new_lens, meta.doc_budget)[1]
+
+    grown, gmeta = add_passages(idx, meta, new_embs, new_lens)
+    assert gmeta.doc_budget == meta.doc_budget
+    assert gmeta.n_raw_tokens == meta.n_raw_tokens + int(new_lens.sum())
+    np.testing.assert_array_equal(
+        np.asarray(grown.doc_lens)[meta.n_docs:], want_lens)
+
+    gen, genmeta = new_generation(idx, meta, new_embs, new_lens)
+    assert genmeta.doc_budget == meta.doc_budget
+    assert genmeta.n_raw_tokens == int(new_lens.sum())
+    np.testing.assert_array_equal(np.asarray(gen.doc_lens), want_lens)
+
+
+def test_budgeted_growth_overflowing_base_cap_is_actionable():
+    """A budgeted index whose base corpus never filled the budget has
+    cap < budget; growing it with longer docs must fail with the rebuild
+    hint, not corrupt the layout."""
+    c = make_corpus(11, n_docs=40, cap=6, min_len=2, d=16, n_topics=8,
+                    n_queries=4, n_q=4)
+    short_lens = np.minimum(c.doc_lens, 4).astype(np.int32)
+    idx, meta = build_index(jax.random.PRNGKey(0), c.doc_embs, short_lens,
+                            n_centroids=16, m=4, nbits=4, kmeans_iters=2,
+                            doc_budget=8)
+    assert meta.cap == 6 < 8  # the budget was never filled (cap < budget)
+    long_docs = make_corpus(12, n_docs=4, cap=8, min_len=8, d=16,
+                            n_topics=8, n_queries=1, n_q=4)
+    with pytest.raises(ValueError, match="larger cap"):
+        add_passages(idx, meta, long_docs.doc_embs, long_docs.doc_lens)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: round trip + every new schema-v4 corruption mode
+# ---------------------------------------------------------------------------
+
+def _resave(src, dst, mutate_manifest=None):
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(src, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    if mutate_manifest:
+        mutate_manifest(manifest)
+    os.makedirs(dst, exist_ok=True)
+    np.savez(os.path.join(dst, "arrays.npz"), **arrays)
+    with open(os.path.join(dst, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return dst
+
+
+@pytest.fixture()
+def saved_pooled(tmp_path, pooled):
+    idx, meta = pooled
+    return save_index(str(tmp_path / "pooled"), idx, meta)
+
+
+def test_pooled_save_load_round_trip(pcorpus, saved_pooled, pooled):
+    idx, meta = pooled
+    loaded, lmeta = load_index(saved_pooled)
+    assert lmeta == meta
+    assert index_fingerprint(loaded) == index_fingerprint(idx)
+    q = jnp.asarray(pcorpus.queries[:4])
+    a = engine.retrieve(idx, q, CFG)
+    b = engine.retrieve(loaded, q, CFG)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
+
+
+@pytest.mark.parametrize("bad", ["8", True, 0, -4, 2.5])
+def test_load_rejects_bad_doc_budget(tmp_path, saved_pooled, bad):
+    dst = _resave(saved_pooled, str(tmp_path / "bad"),
+                  lambda m: m["meta"].update(doc_budget=bad))
+    with pytest.raises(ValueError, match="doc_budget"):
+        load_index(dst)
+
+
+def test_load_rejects_cap_exceeding_budget(tmp_path, saved_pooled):
+    dst = _resave(saved_pooled, str(tmp_path / "bad"),
+                  lambda m: m["meta"].update(doc_budget=1))
+    with pytest.raises(ValueError, match="doc_budget"):
+        load_index(dst)
+
+
+@pytest.mark.parametrize("bad", [-5, "many", 1.5])
+def test_load_rejects_bad_n_raw_tokens(tmp_path, saved_pooled, bad):
+    dst = _resave(saved_pooled, str(tmp_path / "bad"),
+                  lambda m: m["meta"].update(n_raw_tokens=bad))
+    with pytest.raises(ValueError, match="n_raw_tokens"):
+        load_index(dst)
+
+
+def test_load_rejects_n_raw_tokens_below_stored(tmp_path, saved_pooled):
+    dst = _resave(saved_pooled, str(tmp_path / "bad"),
+                  lambda m: m["meta"].update(n_raw_tokens=1))
+    with pytest.raises(ValueError, match="n_raw_tokens"):
+        load_index(dst)
+
+
+def test_v3_manifest_loads_with_budget_defaults(tmp_path, pcorpus):
+    """A pre-budget (schema v3) save loads as doc_budget=None /
+    n_raw_tokens=0 — the per-token layout, footprints falling back to the
+    stored token count."""
+    idx, meta = build_index(jax.random.PRNGKey(1), pcorpus.doc_embs[:30],
+                            pcorpus.doc_lens[:30], n_centroids=16, m=4,
+                            nbits=4, kmeans_iters=2)
+    src = save_index(str(tmp_path / "v4"), idx, meta)
+
+    def downgrade(m):
+        m["schema_version"] = 3
+        m["meta"].pop("doc_budget")
+        m["meta"].pop("n_raw_tokens")
+    dst = _resave(src, str(tmp_path / "v3"), downgrade)
+    loaded, lmeta = load_index(dst)
+    assert lmeta.doc_budget is None
+    assert lmeta.n_raw_tokens == 0
+    assert index_fingerprint(loaded) == index_fingerprint(idx)
+    fp = generation_footprint(loaded, lmeta)
+    assert fp["n_raw_tokens"] == fp["n_tokens"]
+    assert fp["pooling_savings"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Maintenance: merge refuses mixed budgets; re-epoching carries the budget
+# ---------------------------------------------------------------------------
+
+def test_merge_refuses_mixed_budgets(pcorpus, pooled):
+    idx, meta = pooled
+    plain_gen = new_generation(
+        idx, dataclasses.replace(meta, doc_budget=None),
+        pool_documents(pcorpus.doc_embs[:20], pcorpus.doc_lens[:20], 4)[0],
+        pool_documents(pcorpus.doc_embs[:20], pcorpus.doc_lens[:20], 4)[1])
+    tl = ShardedTimeline.of((idx, meta)).append(*plain_gen)
+    with pytest.raises(ValueError, match="mixes document budgets"):
+        merge_generations(tl, 0, 2)
+
+
+def test_merge_carries_budget_and_raw_tokens(pcorpus, pooled):
+    idx, meta = pooled
+    tl = ShardedTimeline.of((idx, meta)).append(
+        *new_generation(idx, meta, pcorpus.doc_embs[:20],
+                        pcorpus.doc_lens[:20]))
+    merged = merge_generations(tl, 0, 2)
+    mmeta = merged.metas[0]
+    assert mmeta.doc_budget == 4
+    assert mmeta.n_raw_tokens == sum(m.n_raw_tokens for m in tl.metas)
+    tf = timeline_footprint(merged)
+    assert tf["doc_budget"] == 4
+    assert tf["bytes_per_doc"] < tf["unpooled_bytes_per_doc"]
+
+
+def test_reepoch_carries_budget_and_accepts_raw_docs(pcorpus, pooled):
+    """reepoch_tail on a budgeted timeline takes RAW embeddings, re-pools
+    them under the inherited budget, and the fresh epoch keeps it."""
+    idx, meta = pooled
+    tl = ShardedTimeline.of((idx, meta)).append(
+        *new_generation(idx, meta, pcorpus.doc_embs[:20],
+                        pcorpus.doc_lens[:20]))
+    et = reepoch_tail(tl, 1, pcorpus.doc_embs[:20], pcorpus.doc_lens[:20],
+                      key=jax.random.PRNGKey(2), n_centroids=16,
+                      kmeans_iters=2)
+    new_meta = et.epochs[-1].metas[0]
+    assert new_meta.doc_budget == 4
+    assert new_meta.n_raw_tokens == int(pcorpus.doc_lens[:20].sum())
+
+
+# ---------------------------------------------------------------------------
+# Pooled timelines retrieve end to end (sanity on the whole thread-through)
+# ---------------------------------------------------------------------------
+
+def test_pooled_timeline_retrieves_and_reports(pcorpus, pooled):
+    idx, meta = pooled
+    tl = ShardedTimeline.of((idx, meta)).append(
+        *new_generation(idx, meta, pcorpus.doc_embs[:20],
+                        pcorpus.doc_lens[:20]))
+    res = retrieve_timeline(tl, jnp.asarray(pcorpus.queries[:4]), CFG)
+    assert res.doc_ids.shape == (4, CFG.k)
+    assert (np.asarray(res.doc_ids) < tl.n_docs).all()
+    tf = timeline_footprint(tl)
+    assert tf["doc_budget"] == 4
+    assert tf["n_raw_tokens"] == sum(m.n_raw_tokens for m in tl.metas)
+    assert 0.0 < tf["pooling_savings"] < 1.0

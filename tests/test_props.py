@@ -1,19 +1,64 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Property tests on the system's invariants (docs/TESTING.md).
+
+Runs under real Hypothesis when installed (CI's props lane) or under the
+deterministic fallback runner in ``tests/strategies.py`` otherwise — the
+suite always collects and runs; it never silently skips.
+
+Two layers:
+
+* component properties — bit vectors as set semantics, PQ LUT == decode,
+  residual codec roundtrips, cache accounting vs an OrderedDict model;
+* engine contracts under random inputs — the load-bearing bit-exact
+  equivalences (padded==prefix, timeline==monolithic, cache==uncached,
+  batched==vmap, filtered==post-filter, pooled pass-through==unpooled),
+  each asserted on ids AND score bits over random query picks, mask
+  prefixes, dispatch variants, filters, and document budgets.
+"""
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="optional dev dep (requirements-dev.txt); tier-1 stays green "
-           "without it")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from strategies import (HAVE_HYPOTHESIS, doc_budgets, engine_variants,
+                        filter_exprs, given, make_cfg, predicate_plane,
+                        prefix_lens, query_picks, settings, st, tiny_corpora)
 
-from repro.core import bitvector, residual
+from repro.core import (ShardedTimeline, add_passages, bitvector, engine,
+                        build_index, new_generation, pool_documents,
+                        residual, retrieve_timeline)
 from repro.core.pq import PQCodebooks, build_lut, decode_pq, encode_pq, lut_score
 from repro.train.compression import dequantize_int8, quantize_int8
 
 SETTINGS = dict(max_examples=30, deadline=None)
+# engine contracts retrieve through jit'd programs: few examples, drawn
+# from small shape/variant pools so compiles amortize across examples
+ENGINE_SETTINGS = dict(max_examples=5, deadline=None)
+
+
+def _assert_bitexact(a, b):
+    """ids AND score bits equal — every engine contract's acceptance bar."""
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
+
+
+def test_props_backend_is_exercised():
+    """Meta-test against the silent-skip hazard this suite used to have:
+    whichever backend is active, @given must actually RUN the body."""
+    ran = []
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(0, 10))
+    def prop(n):
+        ran.append(n)
+        assert 0 <= n <= 10
+
+    prop()
+    assert ran, "property body never executed (backend=%s)" % (
+        "hypothesis" if HAVE_HYPOTHESIS else "shim")
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +204,37 @@ def test_int8_compression_relative_error(seed, scale):
 
 
 # ---------------------------------------------------------------------------
+# Constant-space pooling (PR 9 tentpole): budget and determinism laws
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_pool_documents_budget_laws(data):
+    """For ANY corpus and budget m: pooled lens are in [1, min(len, m)],
+    padding past each pooled len is exactly zero, docs already under the
+    budget pass through VERBATIM, and pooling is deterministic."""
+    c = data.draw(tiny_corpora(), label="corpus")
+    cap = c.doc_embs.shape[1]
+    budget = data.draw(doc_budgets(cap, with_none=False), label="budget")
+    pooled, plens = pool_documents(c.doc_embs, c.doc_lens, budget)
+    new_cap = pooled.shape[1]
+    assert new_cap == min(cap, budget)
+    assert (plens >= 1).all()
+    assert (plens <= np.minimum(c.doc_lens, budget)).all()
+    pad = np.arange(new_cap)[None, :] >= plens[:, None]
+    assert (pooled[pad] == 0.0).all()
+    passthrough = c.doc_lens <= budget
+    if passthrough.any():
+        np.testing.assert_array_equal(plens[passthrough],
+                                      c.doc_lens[passthrough])
+        np.testing.assert_array_equal(pooled[passthrough],
+                                      c.doc_embs[passthrough, :new_cap])
+    pooled2, plens2 = pool_documents(c.doc_embs, c.doc_lens, budget)
+    np.testing.assert_array_equal(pooled, pooled2)
+    np.testing.assert_array_equal(plens, plens2)
+
+
+# ---------------------------------------------------------------------------
 # C4 (TPU-adapted): per-token compaction of the PQ late interaction
 # ---------------------------------------------------------------------------
 
@@ -283,6 +359,215 @@ def test_result_cache_accounting_matches_model(ops):
 
 
 # ---------------------------------------------------------------------------
+# Engine contracts under random inputs — the bit-exact equivalence suite.
+#
+# Shared module fixtures: a 300-doc base generation (prop_base), a grown
+# monolith + 2-generation timeline over the same codebooks (prop_timeline),
+# a predicate-plane twin (prop_findex), and pooled builds (pass-through and
+# tight). All draw queries from the session small_corpus.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prop_base(small_corpus):
+    c = small_corpus
+    return build_index(jax.random.PRNGKey(3), c.doc_embs[:300],
+                       c.doc_lens[:300], n_centroids=64, m=8, nbits=4,
+                       kmeans_iters=2)
+
+
+@pytest.fixture(scope="module")
+def prop_timeline(small_corpus, prop_base):
+    idx0, m0 = prop_base
+    c = small_corpus
+    mono = add_passages(idx0, m0, c.doc_embs[300:450], c.doc_lens[300:450])
+    tl = ShardedTimeline.of((idx0, m0)).append(
+        *new_generation(idx0, m0, c.doc_embs[300:450], c.doc_lens[300:450]))
+    return mono, tl
+
+
+@pytest.fixture(scope="module")
+def prop_findex(small_corpus):
+    c = small_corpus
+    return build_index(jax.random.PRNGKey(3), c.doc_embs[:300],
+                       c.doc_lens[:300], n_centroids=64, m=8, nbits=4,
+                       kmeans_iters=2, predicates=predicate_plane(300))
+
+
+@pytest.fixture(scope="module")
+def pooled_passthrough(small_corpus):
+    """The session small_index rebuilt with doc_budget == max doc len: every
+    doc passes through pooling verbatim, so arrays must be IDENTICAL."""
+    c = small_corpus
+    return build_index(jax.random.PRNGKey(0), c.doc_embs, c.doc_lens,
+                       n_centroids=128, m=8, nbits=4, plaid_b=2,
+                       kmeans_iters=3, doc_budget=int(c.doc_lens.max()))
+
+
+@pytest.fixture(scope="module")
+def pooled_tight(small_corpus):
+    """A genuinely pooled build (budget 8 < most doc lens)."""
+    c = small_corpus
+    return build_index(jax.random.PRNGKey(3), c.doc_embs[:300],
+                       c.doc_lens[:300], n_centroids=64, m=8, nbits=4,
+                       kmeans_iters=2, doc_budget=8)
+
+
+# lossless budgets over the 450-doc grown corpus / 300-doc filtered corpus:
+# every phase keeps everything, so cut-order effects cannot perturb results
+LOSSLESS_450 = dict(n_filter=450, n_docs=450, cand_cap=450, k=10)
+LOSSLESS_300 = dict(n_filter=300, n_docs=300, cand_cap=300, k=8)
+
+
+@settings(**ENGINE_SETTINGS)
+@given(st.data())
+def test_prop_padded_equals_prefix(small_corpus, small_index, data):
+    """PR 3 contract: a zero-padded masked query retrieves bit-exactly as
+    its unpadded prefix — for random variants, prefixes, and query picks."""
+    idx, _ = small_index
+    cfg = make_cfg(data.draw(engine_variants, label="variant"))
+    keep = data.draw(prefix_lens, label="prefix")
+    picks = data.draw(query_picks(24, 2, 2), label="picks")
+    q = np.asarray(small_corpus.queries)[picks].copy()
+    q[:, keep:] = 0.0
+    mask = np.broadcast_to(np.arange(q.shape[1]) < keep, q.shape[:2])
+    padded = engine.retrieve(idx, jnp.asarray(q), cfg, jnp.asarray(mask))
+    prefix = engine.retrieve(idx, jnp.asarray(q[:, :keep]), cfg)
+    _assert_bitexact(padded, prefix)
+
+
+@settings(**ENGINE_SETTINGS)
+@given(st.data())
+def test_prop_timeline_equals_monolithic(small_corpus, prop_timeline, data):
+    """PR 5 contract: under lossless budgets a sharded timeline's merged
+    retrieval equals one monolithic index grown over the union corpus."""
+    (mono_idx, _), tl = prop_timeline
+    cfg = make_cfg(data.draw(engine_variants, label="variant"),
+                   **LOSSLESS_450)
+    picks = data.draw(query_picks(24, 2, 2), label="picks")
+    q = jnp.asarray(np.asarray(small_corpus.queries)[picks])
+    _assert_bitexact(engine.retrieve(mono_idx, q, cfg),
+                     retrieve_timeline(tl, q, cfg))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.data())
+def test_prop_cache_equals_uncached(small_corpus, prop_timeline, data):
+    """PR 6 contract: a caching RetrievalService is bit-exact to the
+    uncached merge path at EVERY point of a random (repeating) query
+    stream — warm hits included."""
+    from repro.serving import RetrievalService
+    _, tl = prop_timeline
+    cfg = make_cfg("ref")
+    svc = RetrievalService(tl, cfg)
+    qs = np.asarray(small_corpus.queries)
+    stream = data.draw(st.lists(query_picks(24, 2, 2),
+                                min_size=2, max_size=4), label="stream")
+    stream.append(stream[0])     # force at least one fully warm revisit
+    for picks in stream:
+        got = svc.query(qs[picks])
+        want = retrieve_timeline(tl, jnp.asarray(qs[picks]), cfg)
+        _assert_bitexact(got, want)
+    assert svc.cache.hits > 0    # the revisit was served from cache
+
+
+@settings(**ENGINE_SETTINGS)
+@given(st.data())
+def test_prop_batched_equals_vmap(small_corpus, small_index, data):
+    """PR 7 contract: the batch-native megakernels equal the vmap dispatch
+    bit for bit for random batch sizes, picks, and mask prefixes."""
+    idx, _ = small_index
+    b = data.draw(st.sampled_from([2, 3]), label="batch")
+    picks = data.draw(query_picks(24, b, b), label="picks")
+    lens = data.draw(st.lists(st.integers(4, 32), min_size=b, max_size=b),
+                     label="prefix_lens")
+    q = np.asarray(small_corpus.queries)[picks].copy()
+    mask = np.zeros(q.shape[:2], bool)
+    for i, n in enumerate(lens):
+        q[i, n:] = 0.0
+        mask[i, :n] = True
+    batched = engine.retrieve(idx, jnp.asarray(q), make_cfg("fused-batched"),
+                              jnp.asarray(mask))
+    vmapped = engine.retrieve(idx, jnp.asarray(q), make_cfg("fused"),
+                              jnp.asarray(mask))
+    _assert_bitexact(batched, vmapped)
+
+
+@settings(**ENGINE_SETTINGS)
+@given(st.data())
+def test_prop_filtered_equals_postfilter(small_corpus, prop_findex, data):
+    """PR 8 contract: filtered retrieval under lossless budgets equals the
+    retrieve-then-post-filter oracle for random filter exprs and picks."""
+    idx, meta = prop_findex
+    variant = data.draw(st.sampled_from(["ref", "fused-batched"]),
+                        label="variant")
+    expr = data.draw(filter_exprs(), label="expr")
+    picks = data.draw(query_picks(24, 2, 2), label="picks")
+    cfg = make_cfg(variant, **LOSSLESS_300)
+    plan = bitvector.compile_filter(expr, meta.pred_names)
+    pass_np = np.asarray(bitvector.apply_filter_plan(plan, idx.pred_words))
+    assert pass_np.sum() >= cfg.k, "oracle needs >= k passing docs"
+    q = jnp.asarray(np.asarray(small_corpus.queries)[picks])
+    full = engine.retrieve(idx, q, dataclasses.replace(cfg, k=300))
+    want_s, want_i = [], []
+    for bi in range(len(picks)):
+        ids = np.asarray(full.doc_ids[bi])
+        sc = np.asarray(full.scores[bi])
+        keepm = pass_np[ids]
+        want_i.append(ids[keepm][:cfg.k])
+        want_s.append(sc[keepm][:cfg.k])
+    got = engine.retrieve(idx, q, cfg, doc_filter=plan)
+    np.testing.assert_array_equal(np.asarray(got.doc_ids), np.stack(want_i))
+    np.testing.assert_array_equal(np.asarray(got.scores), np.stack(want_s))
+
+
+def test_pooled_passthrough_index_is_bit_identical(small_index,
+                                                   pooled_passthrough):
+    """PR 9 tentpole identity: doc_budget >= max doc len stores the SAME
+    bytes as an unpooled build — content fingerprints equal."""
+    from repro.core.store import index_fingerprint
+    uidx, _ = small_index
+    pidx, pmeta = pooled_passthrough
+    assert pmeta.doc_budget == int(np.asarray(uidx.doc_lens).max())
+    assert pmeta.n_raw_tokens == int(np.asarray(uidx.doc_lens).sum())
+    assert index_fingerprint(pidx) == index_fingerprint(uidx)
+
+
+@settings(**ENGINE_SETTINGS)
+@given(st.data())
+def test_prop_pooled_passthrough_retrieves_identically(
+        small_corpus, small_index, pooled_passthrough, data):
+    """PR 9 contract: a pass-through-pooled index retrieves bit-exactly as
+    the unpooled build across random variants and query picks."""
+    uidx, _ = small_index
+    pidx, _ = pooled_passthrough
+    cfg = make_cfg(data.draw(engine_variants, label="variant"))
+    picks = data.draw(query_picks(24, 2, 2), label="picks")
+    q = jnp.asarray(np.asarray(small_corpus.queries)[picks])
+    _assert_bitexact(engine.retrieve(pidx, q, cfg),
+                     engine.retrieve(uidx, q, cfg))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.data())
+def test_prop_pooled_index_honors_query_masking(small_corpus, pooled_tight,
+                                                data):
+    """Engine contracts survive pooling: on a genuinely pooled index
+    (budget 8), padded==prefix still holds bit for bit."""
+    idx, meta = pooled_tight
+    assert meta.doc_budget == 8 and meta.cap == 8
+    cfg = make_cfg(data.draw(st.sampled_from(["ref", "fused-batched"]),
+                             label="variant"))
+    picks = data.draw(query_picks(24, 2, 2), label="picks")
+    keep = 20
+    q = np.asarray(small_corpus.queries)[picks].copy()
+    q[:, keep:] = 0.0
+    mask = np.broadcast_to(np.arange(q.shape[1]) < keep, q.shape[:2])
+    padded = engine.retrieve(idx, jnp.asarray(q), cfg, jnp.asarray(mask))
+    prefix = engine.retrieve(idx, jnp.asarray(q[:, :keep]), cfg)
+    _assert_bitexact(padded, prefix)
+
+
+# ---------------------------------------------------------------------------
 # Batch-composition invariance of the batched megakernels (PR 7 tentpole)
 # ---------------------------------------------------------------------------
 
@@ -295,13 +580,8 @@ def test_batched_retrieve_is_batch_composition_invariant(small_corpus,
     batch-native megakernels equals its single-query retrieve — which rides
     the vmap fallback at B=1 — bit for bit, for random batch sizes, query
     picks, and mask prefix lengths."""
-    import dataclasses
-
-    from repro.core import EngineConfig, engine
     idx, _ = small_index
-    cfg = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48,
-                       k=10, use_kernels=True, fused_prefilter=True,
-                       fused_late_interaction=True)
+    cfg = make_cfg("fused-batched")
     assert cfg.batched_kernels
     qs = np.asarray(small_corpus.queries)
     b = data.draw(st.integers(2, 4), label="batch")
@@ -334,7 +614,6 @@ def test_batched_retrieve_is_batch_composition_invariant(small_corpus,
 def test_moe_grouped_matches_gather_at_ample_capacity(seed, e, k, groups):
     """With capacity >= tokens-per-group, no tokens drop in either mode and
     the two dispatch strategies compute the SAME function."""
-    import dataclasses
     from repro.models import moe
     from repro.models.layers import ModelConfig
     rng = np.random.default_rng(seed)
