@@ -15,13 +15,17 @@ The demo:
      ``new_generation`` — and watches the cache invalidate by fingerprint
      (old generations keep hitting; changed ones recompute);
   5. prints the metrics snapshot: hit rate, warm share, p50/p99 latency,
-     cache bytes, timeline footprint.
+     cache bytes, timeline footprint;
+  6. turns on observability (docs/OBSERVABILITY.md): scoped span tracing
+     over a served batch, the per-phase ``explain_timeline`` funnel for
+     one query, and a Prometheus exposition excerpt.
 """
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import (EngineConfig, ShardedTimeline, build_index,
                         new_generation, retrieve_timeline)
 from repro.data.synthetic import make_corpus
@@ -104,6 +108,31 @@ def main(n_docs: int = 2048, n_centroids: int = 512,
           f"timeline={s['timeline']['total_bytes'] / 2**20:.1f}MiB "
           f"({s['timeline']['bytes_per_embedding_actual']:.1f} B/emb actual "
           f"vs {s['timeline']['bytes_per_embedding']:.1f} paper constant)")
+
+    print("6) observability: spans, explain funnel, exposition ...")
+    with obs.tracing() as tracer:          # scoped: no-op outside the with
+        service.query(queries)
+    names = sorted({sp["name"] for sp in tracer.finished()})
+    print(f"   {len(tracer.finished())} spans from one served batch: "
+          + ", ".join(names))
+
+    funnel = obs.explain.explain_timeline(
+        service.timeline, queries[0], cfg)
+    g0 = funnel.generations[0]
+    print(f"   explain: {funnel.n_generations} generations, contributions "
+          f"{[g.contribution for g in funnel.generations]} (sum = k = "
+          f"{funnel.k}); gen0 funnel: {g0.funnel.candidates} candidates -> "
+          f"{g0.funnel.n_filter_survivors} prefiltered -> "
+          f"{g0.funnel.phase4_docs_scored} scored "
+          f"(term fraction {g0.funnel.scored_term_fraction:.2f})")
+
+    text = service.exposition()
+    lines = [ln for ln in text.splitlines()
+             if ln.startswith(("emvb_queries_total", "emvb_cache_hits",
+                               "emvb_batch_latency_seconds{"))]
+    print("   exposition excerpt (full text is service.exposition()):")
+    for ln in lines:
+        print(f"     {ln}")
 
 
 if __name__ == "__main__":

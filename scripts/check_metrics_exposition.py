@@ -1,0 +1,244 @@
+"""Prometheus text-exposition lint: validate the format of a LIVE
+``RetrievalService.exposition()`` dump.
+
+Run from the repo root (CI lint job; also wrapped by tests/test_obs.py):
+
+    PYTHONPATH=src python scripts/check_metrics_exposition.py
+
+The validator (``validate_exposition``) is a self-contained checker for
+the Prometheus text exposition format (version 0.0.4) subset the
+``repro.obs.registry`` emits:
+
+  * structure — every sample belongs to a metric introduced by
+    ``# HELP``/``# TYPE`` lines (in that order, each at most once);
+  * naming — metric/label names match the Prometheus grammar, counters
+    end in ``_total``;
+  * samples — ``name{label="value",...} value`` with properly escaped
+    label values and a parseable float (``+Inf``/``-Inf``/``NaN``
+    allowed), no duplicate (name, labelset) pairs;
+  * histograms — cumulative ``_bucket`` series with ``le`` labels ending
+    in ``le="+Inf"``, whose count equals ``_count``;
+  * summaries — ``quantile``-labeled series plus ``_sum``/``_count``;
+  * the dump ends with a newline (scrape parsers require it).
+
+Exit code 1 lists every violation. The live service is built tiny (the
+same sizes the serving tests use), so the check runs in seconds on CPU.
+"""
+from __future__ import annotations
+
+import math
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+# one label pair: name="value" with \\, \" and \n escapes inside the value
+_PAIR = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\\\|\\"|\\n)*"'
+SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>(?:' + _PAIR + r')(?:,(?:' + _PAIR + r'))*)?\})?'
+    r' (?P<value>\S+)$')
+PAIR_RE = re.compile(r'(' + _PAIR + r')')
+KINDS = ("counter", "gauge", "histogram", "summary", "untyped")
+
+
+def _parse_value(tok: str) -> float | None:
+    """Prometheus sample value -> float, or None when unparseable."""
+    if tok in ("+Inf", "Inf"):
+        return math.inf
+    if tok == "-Inf":
+        return -math.inf
+    if tok == "NaN":
+        return math.nan
+    try:
+        return float(tok)
+    except ValueError:
+        return None
+
+
+def _base_name(sample: str, kind: str) -> str:
+    """Sample name -> the metric family it must belong to."""
+    if kind == "histogram":
+        for suf in ("_bucket", "_sum", "_count"):
+            if sample.endswith(suf):
+                return sample[:-len(suf)]
+    if kind == "summary":
+        for suf in ("_sum", "_count"):
+            if sample.endswith(suf):
+                return sample[:-len(suf)]
+    return sample
+
+
+def validate_exposition(text: str) -> list[str]:
+    """-> list of format violations (empty = valid)."""
+    errors: list[str] = []
+    if not text:
+        return ["exposition is empty"]
+    if not text.endswith("\n"):
+        errors.append("exposition does not end with a newline")
+
+    kinds: dict[str, str] = {}       # metric family -> TYPE
+    helped: set[str] = set()
+    seen: set[tuple] = set()         # (sample name, labelset)
+    buckets: dict[str, list[tuple[float, float]]] = {}  # family -> (le, v)
+    counts: dict[str, float] = {}    # family -> _count value
+    current: str | None = None       # family the HELP/TYPE header opened
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        loc = f"line {lineno}"
+        if not line:
+            errors.append(f"{loc}: blank line")
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not NAME_RE.match(parts[2]):
+                errors.append(f"{loc}: malformed HELP: {line!r}")
+                continue
+            if parts[2] in helped:
+                errors.append(f"{loc}: duplicate HELP for {parts[2]}")
+            helped.add(parts[2])
+            current = parts[2]
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or not NAME_RE.match(parts[2]):
+                errors.append(f"{loc}: malformed TYPE: {line!r}")
+                continue
+            name, kind = parts[2], parts[3]
+            if kind not in KINDS:
+                errors.append(f"{loc}: unknown TYPE {kind!r} for {name}")
+            if name in kinds:
+                errors.append(f"{loc}: duplicate TYPE for {name}")
+            if name not in helped:
+                errors.append(f"{loc}: TYPE for {name} precedes its HELP")
+            if kind == "counter" and not name.endswith("_total"):
+                errors.append(f"{loc}: counter {name} must end in _total")
+            kinds[name] = kind
+            current = name
+            continue
+        if line.startswith("#"):
+            errors.append(f"{loc}: stray comment: {line!r}")
+            continue
+
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"{loc}: unparseable sample: {line!r}")
+            continue
+        name, labels, vtok = m.group("name", "labels", "value")
+        value = _parse_value(vtok)
+        if value is None:
+            errors.append(f"{loc}: bad value {vtok!r} for {name}")
+        pairs = tuple(PAIR_RE.findall(labels)) if labels else ()
+        for p in pairs:
+            if not LABEL_RE.match(p.split("=", 1)[0]):
+                errors.append(f"{loc}: bad label name in {p!r}")
+        key = (name, pairs)
+        if key in seen:
+            errors.append(f"{loc}: duplicate sample {name}{{{pairs}}}")
+        seen.add(key)
+
+        # resolve the family: exact name, else a histogram/summary
+        # suffix (_bucket/_sum/_count) of a declared family
+        if name in kinds:
+            family = name
+        else:
+            family = None
+            for f, k in kinds.items():
+                if k in ("histogram", "summary") and \
+                        _base_name(name, k) == f and name != f:
+                    family = f
+                    break
+            if family is None:
+                errors.append(f"{loc}: sample {name} has no TYPE header")
+                continue
+        if family != current:
+            errors.append(
+                f"{loc}: sample {name} outside its {family} HELP/TYPE "
+                "block (metrics must be contiguous)")
+        kind = kinds[family]
+
+        label_names = [p.split("=", 1)[0] for p in pairs]
+        if kind == "histogram" and name.endswith("_bucket"):
+            if "le" not in label_names:
+                errors.append(f"{loc}: histogram bucket without le label")
+            elif value is not None:
+                le = next(p for p in pairs if p.startswith('le="'))
+                bound = _parse_value(le[4:-1])
+                if bound is None:
+                    errors.append(f"{loc}: bad le bound in {le!r}")
+                else:
+                    buckets.setdefault(family, []).append((bound, value))
+        if kind == "summary" and name == family and \
+                "quantile" not in label_names:
+            errors.append(f"{loc}: summary {name} sample without quantile")
+        if name.endswith("_count") and kind in ("histogram", "summary") \
+                and value is not None:
+            counts[family] = value
+        if kind == "counter" and value is not None and value < 0:
+            errors.append(f"{loc}: counter {name} is negative")
+
+    for family, bs in buckets.items():
+        bounds = [b for b, _ in bs]
+        vals = [v for _, v in bs]
+        if not bounds or not math.isinf(bounds[-1]):
+            errors.append(f"{family}: histogram buckets missing +Inf")
+        if any(a > b for a, b in zip(vals, vals[1:])):
+            errors.append(f"{family}: histogram buckets not cumulative")
+        if family in counts and bounds and math.isinf(bounds[-1]) \
+                and vals[-1] != counts[family]:
+            errors.append(
+                f"{family}: +Inf bucket {vals[-1]} != _count "
+                f"{counts[family]}")
+    return errors
+
+
+def _live_exposition() -> str:
+    """Stand up a tiny RetrievalService, serve a few queries (one of them
+    filtered), run one maintenance pass, and return its exposition."""
+    import jax
+    import numpy as np
+
+    from repro.core import (EngineConfig, ShardedTimeline, build_index,
+                            new_generation)
+    from repro.core.bitvector import Pred
+    from repro.data.synthetic import make_corpus
+    from repro.serving import RetrievalService
+
+    corpus = make_corpus(0, n_docs=256, cap=32, n_queries=8)
+    rng = np.random.default_rng(0)
+    preds = {"lang_en": rng.random(256) < 0.7}
+    per = 128
+    cfg = EngineConfig(k=5, n_filter=64, n_docs=32, th=0.2, th_r=0.3)
+    gen0, meta0 = build_index(
+        jax.random.PRNGKey(0), corpus.doc_embs[:per], corpus.doc_lens[:per],
+        n_centroids=32, m=16, nbits=4, kmeans_iters=2,
+        predicates={n: v[:per] for n, v in preds.items()})
+    timeline = ShardedTimeline.of((gen0, meta0)).append(*new_generation(
+        gen0, meta0, corpus.doc_embs[per:], corpus.doc_lens[per:],
+        predicates={n: v[per:] for n, v in preds.items()}))
+    svc = RetrievalService(timeline, cfg)
+    q = np.asarray(corpus.queries[:4])
+    svc.query(q)
+    svc.query(q)                          # warm pass: cache hits
+    svc.query(q, doc_filter=Pred("lang_en"))
+    return svc.exposition()
+
+
+def main() -> int:
+    """Lint the live exposition; print violations; return the exit code."""
+    text = _live_exposition()
+    errors = validate_exposition(text)
+    if errors:
+        print(f"{len(errors)} exposition violation(s):")
+        print("\n".join(f"  {e}" for e in errors))
+        return 1
+    n_metrics = sum(1 for ln in text.splitlines()
+                    if ln.startswith("# TYPE "))
+    n_samples = sum(1 for ln in text.splitlines()
+                    if ln and not ln.startswith("#"))
+    print(f"exposition OK ({n_metrics} metrics, {n_samples} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from . import bitvector, interaction
 from .index import PackedIndex
 from .pq import build_lut
+from repro.obs import trace
 
 if TYPE_CHECKING:  # avoid a runtime engine <-> store import cycle
     from .store import ShardedTimeline
@@ -599,8 +600,12 @@ def retrieve(index: PackedIndex, queries, cfg: EngineConfig,
     are bit-identical — ids AND score bits, including tie order.
     """
     qb = _as_query_batch(queries, q_masks)
-    return _retrieve_jit(index, qb.q, _with_filter(cfg, doc_filter),
-                         qb.q_mask)
+    # spans time DISPATCH, not device compute: jax returns futures, so
+    # unless the caller blocks inside the span this measures enqueue cost
+    with trace.span("engine.retrieve.dispatch", batch=qb.q.shape[0],
+                    filtered=(doc_filter or cfg.doc_filter) is not None):
+        return _retrieve_jit(index, qb.q, _with_filter(cfg, doc_filter),
+                             qb.q_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -1032,9 +1037,15 @@ def retrieve_timeline(timeline: "ShardedTimeline", queries: jax.Array,
         doc_filter = bitvector.compile_filter(doc_filter,
                                               timeline.metas[0].pred_names)
     cfg = _with_filter(cfg, doc_filter)
-    parts = [retrieve_generation_topk(gen, meta, off, queries, cfg, q_masks)
-             for gen, meta, off in timeline]
-    return merge_partial_topk(parts, cfg.k)
+    # dispatch-only span (see retrieve): per-generation launches + merge
+    # enqueue here; device compute overlaps with whatever the caller does
+    # next until it blocks on the result
+    with trace.span("engine.retrieve_timeline.dispatch",
+                    generations=len(timeline.generations)):
+        parts = [retrieve_generation_topk(gen, meta, off, queries, cfg,
+                                          q_masks)
+                 for gen, meta, off in timeline]
+        return merge_partial_topk(parts, cfg.k)
 
 
 # ---------------------------------------------------------------------------

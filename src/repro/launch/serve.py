@@ -25,6 +25,7 @@ from repro.core.engine import (EngineConfig, RetrievalResult,
                                _as_query_batch, _retrieve_batch,
                                _with_filter)
 from repro.core.index import PackedIndex
+from repro.obs import trace
 
 # jax >= 0.6 exposes shard_map at top level (replication check kw:
 # check_vma); 0.4.x has it under experimental (kw: check_rep).
@@ -199,11 +200,16 @@ def make_timeline_partial_plans(mesh: Mesh, cfg: EngineConfig, timeline, *,
             shard_cache[ckey] = stacked   # (re)insert at LRU tail
 
         def plan(queries, q_masks=None, doc_filter=None, *, _stacked=stacked,
-                 _retriever=retrievers[gcfg], _off=off):
+                 _retriever=retrievers[gcfg], _off=off, _g=g):
             """queries: (B, n_q, d) array or QueryBatch; ``doc_filter`` an
             optional compiled FilterPlan applied on every shard."""
-            r = _retriever(_stacked, queries, q_masks, doc_filter=doc_filter)
-            return RetrievalResult(r.scores, r.doc_ids + jnp.int32(_off))
+            # dispatch-only span (jax is async); generation attr is the
+            # plan's position in the timeline it was built from
+            with trace.span("launch.shard_plan", generation=_g,
+                            shards=n_shards):
+                r = _retriever(_stacked, queries, q_masks,
+                               doc_filter=doc_filter)
+                return RetrievalResult(r.scores, r.doc_ids + jnp.int32(_off))
 
         plans.append(plan)
     if shard_cache is not None:

@@ -1,0 +1,328 @@
+"""Retrieval explain — the per-phase candidate funnel for one query.
+
+EMVB retrieval is a four-stage funnel (PAPER.md): centroid probes select
+IVF candidates (§4.1), the Eq. 4 bit-vector pre-filter cuts them to
+``n_filter`` survivors (§4.2), the centroid-interaction proxy S̄ keeps the
+top ``n_docs`` (§4.3), and PQ late interaction (Eq. 5, or Eq. 6 under the
+``th_r`` term filter) ranks the final top-k (§4.4). When a query returns
+something odd — or slowly — the question is always *where the funnel cut
+what*; PLAID's own analysis (PAPERS.md) is exactly this per-stage
+candidate accounting. :func:`explain` answers it for one query by
+recomputing the funnel through the PUBLIC phase entry points
+(``repro.core.engine.phase1_candidates`` … ``phase4_late_interaction``)
+and counting at every stage. ``retrieve`` itself is untouched: the
+bit-exactness contracts (fused == unfused, kernels == reference, composed
+phases == retrieve — tests/test_engine_phases.py) are what guarantee the
+explained top-k IS the served top-k, ids and score bits, in every
+dispatch mode (tests/test_obs.py asserts it per config).
+
+:func:`explain_timeline` extends the funnel across a multi-generation
+timeline (``ShardedTimeline`` / ``EpochedTimeline``): the final top-k
+comes from the real :func:`repro.core.engine.retrieve_timeline`, each
+generation reports how many of the final k it contributed (global doc-id
+ranges partition the corpus, so contributions sum to k by construction)
+plus its own per-phase funnel under the same clamped config the serving
+path uses (``adapt_config_to_corpus``).
+
+Phase wall-times (``phase_ms``) are host-measured around each blocking
+entry-point call; the FIRST explain for a given (shape, config) includes
+jit compilation — warm numbers need a warm-up call, like every jax
+timing. This is a debug path: per-query, eager, allocation-happy — wire
+the :mod:`repro.obs.trace` spans for production telemetry instead
+(docs/OBSERVABILITY.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitvector, interaction
+from repro.core.engine import (EngineConfig, adapt_config_to_corpus,
+                               phase1_candidates, phase2_prefilter,
+                               phase3_centroid_interaction,
+                               phase4_late_interaction, retrieve_timeline)
+from repro.core.store import EpochedTimeline
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryExplain:
+    """One query's per-phase funnel over ONE index (local doc ids).
+
+    Counts narrate the funnel top to bottom: ``live_terms`` query terms
+    probe ``centroids_probed`` distinct centroids (of a
+    ``live_terms * nprobe`` probe budget), whose IVF lists union into
+    ``candidates`` bitmap docs (already ANDed with the predicate filter
+    when one is set — ``docs_passing_filter`` / ``filter_selectivity``
+    report the filter alone); the Eq. 4 pre-filter keeps
+    ``n_filter_survivors`` REAL candidates of its ``n_filter_budget``-wide
+    selection (the selection is always budget-wide — short candidate sets
+    pad with filler ids whose scores are ``-inf``-masked downstream);
+    phase 3 scores all ``phase3_docs_scored`` selected docs and keeps
+    ``phase4_docs_scored`` for late interaction, where the Eq. 6 ``th_r``
+    filter evaluates ``scored_term_fraction`` of the (term, token)
+    residual pairs (1.0 when ``th_r`` is None — full Eq. 5).
+    ``topk_scores`` / ``topk_ids`` are bit-exact to ``retrieve`` under the
+    same config. ``phase_ms`` maps phase name -> blocking wall ms.
+    """
+
+    n_q: int
+    live_terms: int
+    n_centroids: int
+    centroids_probed: int
+    probe_budget: int
+    n_docs_corpus: int
+    docs_passing_filter: Optional[int]
+    filter_selectivity: Optional[float]
+    candidates: int
+    candidate_mode: str
+    candidate_cap: Optional[int]
+    n_filter_budget: int
+    n_filter_survivors: int
+    phase3_docs_scored: int
+    phase4_docs_scored: int
+    scored_term_fraction: float
+    k: int
+    topk_scores: np.ndarray
+    topk_ids: np.ndarray
+    phase_ms: dict
+
+    def to_dict(self) -> dict:
+        """JSON-able dict (arrays -> lists, numpy scalars -> Python)."""
+        d = dataclasses.asdict(self)
+        d["topk_scores"] = [float(s) for s in self.topk_scores]
+        d["topk_ids"] = [int(i) for i in self.topk_ids]
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationExplain:
+    """One generation's share of a timeline explain: where it sits
+    (epoch / generation index, content ``fingerprint``, global id range
+    ``[offset, offset + n_docs)``), how many of the final k it contributed
+    (``contribution`` — the count of final ids in its range), and its own
+    :class:`QueryExplain` ``funnel`` under the clamped per-generation
+    config (local ids; add ``offset`` for global)."""
+
+    epoch: int
+    generation: int
+    fingerprint: str
+    offset: int
+    n_docs: int
+    contribution: int
+    funnel: QueryExplain
+
+    def to_dict(self) -> dict:
+        """JSON-able dict."""
+        d = dataclasses.asdict(self)
+        d["funnel"] = self.funnel.to_dict()
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineExplain:
+    """One query explained across a timeline: the REAL merged top-k
+    (``retrieve_timeline`` — global ids, rank-merged across codebook
+    epochs when there are several) plus per-generation attribution.
+    ``sum(g.contribution for g in generations) == k`` by construction
+    (generations' global id ranges partition the corpus)."""
+
+    k: int
+    n_generations: int
+    n_epochs: int
+    topk_scores: np.ndarray
+    topk_ids: np.ndarray
+    generations: tuple
+    merge_ms: float
+
+    def to_dict(self) -> dict:
+        """JSON-able dict."""
+        return {
+            "k": self.k,
+            "n_generations": self.n_generations,
+            "n_epochs": self.n_epochs,
+            "topk_scores": [float(s) for s in self.topk_scores],
+            "topk_ids": [int(i) for i in self.topk_ids],
+            "generations": [g.to_dict() for g in self.generations],
+            "merge_ms": self.merge_ms,
+        }
+
+
+def _timed(thunk):
+    """Run ``thunk``, block until its jax outputs are ready, and return
+    (result, wall milliseconds)."""
+    t0 = time.perf_counter()
+    out = thunk()
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) * 1e3
+
+
+def _one_query(query, q_mask, n_q: int):
+    """Normalize a single query (+ optional mask) to batch-of-one arrays;
+    rejects real batches (explain is per-query by design)."""
+    q = np.asarray(query, dtype=np.float32)
+    if q.ndim == 3:
+        if q.shape[0] != 1:
+            raise ValueError(
+                f"explain is per-query but got a batch of {q.shape[0]}; "
+                "loop over the batch (each query has its own funnel)")
+        q = q[0]
+    if q.ndim != 2 or q.shape[0] != n_q:
+        raise ValueError(
+            f"query has shape {q.shape}: expected ({n_q}, d) — pad/mask "
+            "with repro.serving.batcher.pad_query first")
+    qm = None
+    if q_mask is not None:
+        qm = np.asarray(q_mask, dtype=bool).reshape(-1)
+        if qm.shape[0] != n_q:
+            raise ValueError(
+                f"q_mask has {qm.shape[0]} entries, expected {n_q}")
+        qm = qm[None]
+    return q[None], qm
+
+
+def explain(index, query, cfg: EngineConfig, *, q_mask=None,
+            doc_filter=None) -> QueryExplain:
+    """Explain one query's funnel over one :class:`PackedIndex`.
+
+    index      : the ``repro.core.index.PackedIndex`` to search
+    query      : (n_q, d) padded query (or a batch of exactly one)
+    cfg        : the EXACT config the query would be served with —
+                 budgets are used as-is, like ``retrieve`` (clamp with
+                 ``adapt_config_to_corpus`` first for small corpora;
+                 :func:`explain_timeline` does that per generation)
+    q_mask     : optional (n_q,) bool live-term mask
+    doc_filter : optional COMPILED ``bitvector.FilterPlan`` (an index
+                 alone carries no predicate names to compile an expr
+                 against — pass exprs to :func:`explain_timeline`, or
+                 compile with ``bitvector.compile_filter`` yourself);
+                 overrides ``cfg.doc_filter`` like ``retrieve``'s kwarg
+
+    -> :class:`QueryExplain`; its ``topk_scores`` / ``topk_ids`` are
+    bit-exact to ``retrieve(index, query[None], cfg, ...)`` because the
+    funnel is recomputed through the public phase entry points whose
+    composition IS ``retrieve`` (tests/test_engine_phases.py).
+    """
+    if doc_filter is not None:
+        if not isinstance(doc_filter, bitvector.FilterPlan):
+            raise ValueError(
+                f"doc_filter is a {type(doc_filter).__name__}: explain() "
+                "over a bare index takes a compiled FilterPlan — compile "
+                "with bitvector.compile_filter(expr, meta.pred_names), or "
+                "use explain_timeline() which compiles per epoch")
+        cfg = dataclasses.replace(cfg, doc_filter=doc_filter)
+    qb, qm = _one_query(query, q_mask, cfg.n_q)
+    phase_ms: dict = {}
+
+    (cs, bits, bitmap), phase_ms["phase1"] = _timed(
+        lambda: phase1_candidates(index, qb, cfg, q_mask=qm))
+    sel1, phase_ms["phase2"] = _timed(
+        lambda: phase2_prefilter(index, qb, cfg, bits=bits, bitmap=bitmap))
+    sel2, phase_ms["phase3"] = _timed(
+        lambda: phase3_centroid_interaction(index, qb, cfg, q_mask=qm,
+                                            cs=cs, sel1=sel1))
+    res, phase_ms["phase4"] = _timed(
+        lambda: phase4_late_interaction(index, qb, cfg, q_mask=qm,
+                                        cs=cs, sel2=sel2))
+
+    n_c = int(index.centroids.shape[0])
+    probes = np.asarray(bitvector.masked_topk_centroids(
+        cs[0], cfg.th, cfg.nprobe,
+        None if qm is None else jnp.asarray(qm[0])))
+    centroids_probed = int((np.unique(probes) < n_c).sum())
+    live_terms = int(qm[0].sum()) if qm is not None else cfg.n_q
+
+    n_docs_corpus = int(index.codes.shape[0])
+    docs_passing = selectivity = None
+    if cfg.doc_filter is not None:
+        passing = np.asarray(
+            bitvector.apply_filter_plan(cfg.doc_filter, index.pred_words))
+        docs_passing = int(passing.sum())
+        selectivity = docs_passing / max(n_docs_corpus, 1)
+
+    candidates = int(np.asarray(bitmap[0]).sum())
+    cand_cap = cfg.cand_cap if cfg.candidate_mode == "compact" else None
+    capped = candidates if cand_cap is None else min(candidates, cand_cap)
+    n_filter_budget = int(sel1.shape[-1])
+    phase4_docs = int(sel2.shape[-1])
+
+    if cfg.th_r is None:
+        stf = 1.0
+    else:
+        rows = jnp.asarray(sel2[0])
+        stf = float(interaction.scored_term_fraction(
+            jnp.asarray(cs[0]).T,
+            jnp.take(index.codes, rows, axis=0),
+            jnp.take(index.token_mask(), rows, axis=0),
+            cfg.th_r,
+            None if qm is None else jnp.asarray(qm[0])))
+
+    return QueryExplain(
+        n_q=cfg.n_q, live_terms=live_terms,
+        n_centroids=n_c, centroids_probed=centroids_probed,
+        probe_budget=live_terms * cfg.nprobe,
+        n_docs_corpus=n_docs_corpus,
+        docs_passing_filter=docs_passing, filter_selectivity=selectivity,
+        candidates=candidates, candidate_mode=cfg.candidate_mode,
+        candidate_cap=cand_cap,
+        n_filter_budget=n_filter_budget,
+        n_filter_survivors=min(capped, n_filter_budget),
+        phase3_docs_scored=n_filter_budget, phase4_docs_scored=phase4_docs,
+        scored_term_fraction=stf, k=cfg.k,
+        topk_scores=np.asarray(res.scores[0]),
+        topk_ids=np.asarray(res.doc_ids[0]),
+        phase_ms=phase_ms)
+
+
+def explain_timeline(timeline, query, cfg: EngineConfig, *, q_mask=None,
+                     doc_filter=None) -> TimelineExplain:
+    """Explain one query across a timeline — final top-k attribution plus
+    a per-generation funnel.
+
+    timeline   : a ``ShardedTimeline`` or ``EpochedTimeline``
+    doc_filter : a ``bitvector.FilterExpr`` (compiled here per epoch,
+                 exactly as ``retrieve_timeline`` does) or a compiled
+                 ``FilterPlan``
+
+    The merged ``topk_scores`` / ``topk_ids`` come from the REAL
+    :func:`repro.core.engine.retrieve_timeline` (so they are what serving
+    returns, epochs rank-merged and all); each generation's
+    ``contribution`` counts the final ids inside its global id range, and
+    its ``funnel`` re-runs :func:`explain` under the same
+    ``adapt_config_to_corpus``-clamped config the per-generation serving
+    path uses. Contributions sum to k by construction.
+    """
+    et = EpochedTimeline.of(timeline)
+    qb, qm = _one_query(query, q_mask, cfg.n_q)
+    final, merge_ms = _timed(
+        lambda: retrieve_timeline(timeline, qb, cfg, qm,
+                                  doc_filter=doc_filter))
+    ids = np.asarray(final.doc_ids[0])
+
+    rows = []
+    for e, (tl, eoff) in enumerate(et):
+        df = doc_filter
+        if isinstance(df, bitvector.FilterExpr):
+            df = bitvector.compile_filter(df, tl.metas[0].pred_names)
+        gcfg = cfg if df is None else \
+            dataclasses.replace(cfg, doc_filter=df)
+        for g, (gen, meta, off) in enumerate(tl):
+            lo = eoff + off
+            hi = lo + meta.n_docs
+            rows.append(GenerationExplain(
+                epoch=e, generation=g, fingerprint=tl.fingerprints[g],
+                offset=lo, n_docs=meta.n_docs,
+                contribution=int(((ids >= lo) & (ids < hi)).sum()),
+                funnel=explain(
+                    gen, qb,
+                    adapt_config_to_corpus(gcfg, meta.n_docs, meta.cap),
+                    q_mask=None if qm is None else qm[0])))
+
+    return TimelineExplain(
+        k=cfg.k, n_generations=len(rows), n_epochs=len(et.epochs),
+        topk_scores=np.asarray(final.scores[0]),
+        topk_ids=ids, generations=tuple(rows), merge_ms=merge_ms)

@@ -44,6 +44,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.engine import QueryBatch
+from repro.obs import trace
 
 
 def pad_query(query: np.ndarray, n_q: int,
@@ -138,6 +139,12 @@ class MicroBatcher:
         self._tickets: list[Ticket] = []
         self._submits: list[float] = []     # submit time per pending query
         self._filters: list = []            # compiled FilterPlan (or None)
+        # cumulative count of queries drained LATER than max_delay_s after
+        # their submit — i.e. the cooperative poll loop broke the per-query
+        # deadline promise. A size-triggered drain or an exactly-on-time
+        # poll never counts (the comparison is strict); a slow poll cadence
+        # shows up here before it shows up in p99.
+        self.deadline_misses = 0
 
     def __len__(self) -> int:
         """Number of pending (not yet drained) queries."""
@@ -185,6 +192,12 @@ class MicroBatcher:
         ``max_delay_s``"), so a query left behind keeps aging —
         re-anchoring its deadline to the drain would let it wait up to
         twice the promise.
+
+        Telemetry per drain: the drained queries' queue wait (oldest
+        entry's, the batch's worst case) is recorded as a
+        ``batcher.queue_wait`` span on the current tracer, and every
+        drained query that waited STRICTLY longer than ``max_delay_s``
+        bumps ``deadline_misses``.
         """
         if not self._queries:
             return None
@@ -193,6 +206,11 @@ class MicroBatcher:
         while (n < min(len(self._queries), self.max_batch)
                and self._filters[n] == doc_filter):
             n += 1
+        now = self.clock()
+        self.deadline_misses += sum(
+            1 for t in self._submits[:n] if now - t > self.max_delay_s)
+        trace.record("batcher.queue_wait", now - self._submits[0],
+                     batch=n, pending=len(self._queries) - n)
         qb = QueryBatch(np.stack(self._queries[:n]),
                         np.stack(self._masks[:n]))
         tickets = self._tickets[:n]

@@ -172,6 +172,7 @@ class ResultCache:
             "max_bytes": self.max_bytes,
             "hits": self.hits,
             "misses": self.misses,
+            "lookups": lookups,
             "evictions": self.evictions,
             "hit_rate": self.hits / lookups if lookups else 0.0,
         }

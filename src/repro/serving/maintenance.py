@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.index import build_index, pool_documents
 from repro.core.store import (EpochedTimeline, ShardedTimeline,
                               merge_generations)
+from repro.obs import trace
 
 Timeline = Union[ShardedTimeline, EpochedTimeline]
 
@@ -300,13 +301,18 @@ class MaintenanceRunner:
         applied: list[MaintenanceAction] = []
         while len(applied) < self.max_actions:
             et = EpochedTimeline.of(self.service.latest_timeline)
-            action = self.policy.decide(et)
+            with trace.span("maintenance.decide") as dsp:
+                action = self.policy.decide(et)
+                dsp.set(kind=action.kind if action else None)
             if action is None:
                 break
             if action.kind == "merge":
-                new_tl = merge_generations(et.epochs[-1], action.lo,
-                                           action.hi)
-                self.service.update_timeline(et.with_newest_epoch(new_tl))
+                with trace.span("maintenance.merge", lo=action.lo,
+                                hi=action.hi):
+                    new_tl = merge_generations(et.epochs[-1], action.lo,
+                                               action.hi)
+                    self.service.update_timeline(
+                        et.with_newest_epoch(new_tl))
             else:
                 if self.fetch_embeddings is None:
                     raise RuntimeError(
@@ -318,11 +324,13 @@ class MaintenanceRunner:
                 tl = et.epochs[-1]
                 start = et.epoch_offsets[-1] + tl.offsets[action.lo]
                 stop = start + sum(m.n_docs for m in tl.metas[action.lo:])
-                embs, lens = self.fetch_embeddings(start, stop)
-                self._key, sub = jax.random.split(self._key)
-                self.service.update_timeline(
-                    reepoch_tail(et, action.lo, embs, lens, key=sub,
-                                 **self.build_kwargs))
+                with trace.span("maintenance.reepoch", lo=action.lo,
+                                docs=stop - start):
+                    embs, lens = self.fetch_embeddings(start, stop)
+                    self._key, sub = jax.random.split(self._key)
+                    self.service.update_timeline(
+                        reepoch_tail(et, action.lo, embs, lens, key=sub,
+                                     **self.build_kwargs))
             self.service.metrics.record_maintenance(action.kind)
             applied.append(action)
         return applied

@@ -61,6 +61,7 @@ from repro.core.engine import (EngineConfig, QueryBatch, RetrievalResult,
                                merge_partial_topk, merge_partial_topk_by_rank,
                                retrieve_generation_topk)
 from repro.core.store import EpochedTimeline, ShardedTimeline
+from repro.obs import trace
 
 from .batcher import MicroBatcher, Ticket, pad_query
 from .cache import ResultCache, config_fingerprint, query_fingerprint
@@ -142,8 +143,12 @@ class RetrievalService:
         self._filter_cfg_fps: dict = {}
         self._batcher = MicroBatcher(self.cfg.n_q, max_batch, max_delay_s,
                                      clock=clock)
+        # queue depth + deadline misses render from the live batcher at
+        # snapshot/exposition time (no hot-path mirroring)
+        self.metrics.bind_batcher(self._batcher)
         self._plan_factory = plan_factory
         self._staged: Optional[tuple] = None
+        self._staged_at: Optional[float] = None   # for the deferred-wait span
         self.update_timeline(timeline)
 
     # -- timeline lifecycle -------------------------------------------------
@@ -189,11 +194,13 @@ class RetrievalService:
         changed ones (grown / merged / re-epoched -> new fingerprint)
         recompute — invalidation by construction.
         """
-        staged = self._prepare(timeline)
+        with trace.span("service.swap.prepare"):
+            staged = self._prepare(timeline)
         if len(self._batcher) == 0:
             self._install(staged)
         else:
             self._staged = staged
+            self._staged_at = self.clock()
 
     def _prepare(self, timeline: Timeline) -> tuple:
         """Build everything a swap needs, off the serving path."""
@@ -230,19 +237,25 @@ class RetrievalService:
         """Atomically switch the serving snapshot to a prepared one."""
         swap = hasattr(self, "_epoched")        # constructor install is free
         deferred = self._staged is not None
+        if deferred and self._staged_at is not None:
+            # how long the prepared snapshot sat behind pending queries
+            trace.record("service.swap.deferred_wait",
+                         self.clock() - self._staged_at)
         self._staged = None
-        (self._epoched, self._plans, self._gen_fps, self._epoch_offsets,
-         budget_sig) = staged
-        if budget_sig != self._doc_budget or not swap:
-            # the budget joins every cache key: pooled and unpooled
-            # partials must never collide even when their generation
-            # fingerprints coincide (all docs under budget)
-            self._doc_budget = budget_sig
-            self._cfg_fp = config_fingerprint(self.cfg,
-                                              doc_budget=budget_sig)
-            self._filter_cfg_fps = {}
-        # only the open generation (last of the live epoch) is mutable
-        self._n_cacheable = sum(len(p) for p in self._plans) - 1
+        self._staged_at = None
+        with trace.span("service.swap.install", deferred=deferred):
+            (self._epoched, self._plans, self._gen_fps, self._epoch_offsets,
+             budget_sig) = staged
+            if budget_sig != self._doc_budget or not swap:
+                # the budget joins every cache key: pooled and unpooled
+                # partials must never collide even when their generation
+                # fingerprints coincide (all docs under budget)
+                self._doc_budget = budget_sig
+                self._cfg_fp = config_fingerprint(self.cfg,
+                                                  doc_budget=budget_sig)
+                self._filter_cfg_fps = {}
+            # only the open generation (last of the live epoch) is mutable
+            self._n_cacheable = sum(len(p) for p in self._plans) - 1
         if swap:
             self.metrics.record_swap(deferred=deferred)
 
@@ -379,11 +392,12 @@ class RetrievalService:
                 self._maybe_install()
                 return
             qb, tickets, doc_filter = drained
-            res = self._execute(qb.q, qb.q_mask, doc_filter=doc_filter)
-            scores = np.asarray(res.scores)
-            ids = np.asarray(res.doc_ids)
-            for j, t in enumerate(tickets):
-                t._fill(scores[j], ids[j])
+            with trace.span("service.flush", batch=len(tickets)):
+                res = self._execute(qb.q, qb.q_mask, doc_filter=doc_filter)
+                scores = np.asarray(res.scores)
+                ids = np.asarray(res.doc_ids)
+                for j, t in enumerate(tickets):
+                    t._fill(scores[j], ids[j])
 
     def poll(self) -> None:
         """Flush iff a pending batch is due (full or past its deadline) —
@@ -398,6 +412,15 @@ class RetrievalService:
         cache bytes + timeline footprint (one dict; see
         ``repro.serving.metrics``)."""
         return self.metrics.snapshot(
+            cache=self.cache,
+            timeline_footprint=store.timeline_footprint(self.timeline))
+
+    def exposition(self) -> str:
+        """The same telemetry as ``stats()`` rendered as Prometheus text
+        exposition (cache counters and timeline byte gauges folded in;
+        docs/OBSERVABILITY.md documents the metric names,
+        scripts/check_metrics_exposition.py lints the format)."""
+        return self.metrics.exposition(
             cache=self.cache,
             timeline_footprint=store.timeline_footprint(self.timeline))
 
@@ -422,55 +445,78 @@ class RetrievalService:
         warm = np.full(n, self._n_cacheable > 0)
         n_epochs = len(self._plans)
         epoch_parts = []
-        for e, (plans, fps, eoff) in enumerate(
-                zip(self._plans, self._gen_fps, self._epoch_offsets)):
-            parts = []
-            for g, plan in enumerate(plans):
-                # only the live epoch's newest generation is still mutable
-                cacheable = e < n_epochs - 1 or g < len(plans) - 1
-                gen_fp = fps[g]
-                rows: list = [None] * n
-                miss = []
-                for i in range(n):
-                    hit = self.cache.get((qfps[i], gen_fp, cfg_fp)) \
-                        if cacheable else None
-                    if hit is None:
-                        miss.append(i)
-                    else:
-                        rows[i] = hit
-                if miss:
-                    if cacheable:
-                        warm[miss] = False
-                    mq, mm = q[miss], masks[miss]
-                    if self.pad_miss_lane and len(miss) < n:
-                        pad = n - len(miss)   # repeat row 0: 1 shape per cfg
-                        mq = np.concatenate(
-                            [mq, np.repeat(mq[:1], pad, axis=0)])
-                        mm = np.concatenate(
-                            [mm, np.repeat(mm[:1], pad, axis=0)])
-                    if doc_filter is None:
-                        res = plan(jnp.asarray(mq), jnp.asarray(mm))
-                    else:
-                        res = plan(jnp.asarray(mq), jnp.asarray(mm),
-                                   doc_filter)
-                    ms = np.asarray(res.scores)[:len(miss)]
-                    # epoch-local -> global ids BEFORE caching, so cached
-                    # and fresh partials merge identically (epoch offsets
-                    # are stable: compaction and re-epoching both preserve
-                    # every surviving doc's global id)
-                    mi = np.asarray(res.doc_ids)[:len(miss)] + np.int32(eoff)
-                    for j, i in enumerate(miss):
-                        rows[i] = (ms[j], mi[j])
+        with trace.span("service.execute", batch=n, epochs=n_epochs,
+                        filtered=doc_filter is not None):
+            for e, (plans, fps, eoff) in enumerate(
+                    zip(self._plans, self._gen_fps, self._epoch_offsets)):
+                parts = []
+                for g, plan in enumerate(plans):
+                    # only the live epoch's newest gen is still mutable
+                    cacheable = e < n_epochs - 1 or g < len(plans) - 1
+                    gen_fp = fps[g]
+                    with trace.span("service.generation", epoch=e,
+                                    generation=g) as gsp:
+                        rows: list = [None] * n
+                        miss = []
+                        with trace.span("service.cache_lookup",
+                                        cacheable=cacheable):
+                            for i in range(n):
+                                hit = self.cache.get(
+                                    (qfps[i], gen_fp, cfg_fp)) \
+                                    if cacheable else None
+                                if hit is None:
+                                    miss.append(i)
+                                else:
+                                    rows[i] = hit
+                        gsp.set(hits=n - len(miss), misses=len(miss))
                         if cacheable:
-                            self.cache.put((qfps[i], gen_fp, cfg_fp),
-                                           ms[j], mi[j])
-                parts.append(RetrievalResult(
-                    jnp.asarray(np.stack([r[0] for r in rows])),
-                    jnp.asarray(np.stack([r[1] for r in rows]))))
-            epoch_parts.append(merge_partial_topk(parts, self.cfg.k))
-        merged = epoch_parts[0] if n_epochs == 1 else \
-            merge_partial_topk_by_rank(epoch_parts, self.cfg.k)
-        jax.block_until_ready(merged)
+                            self.metrics.record_generation_lookups(
+                                gen_fp, n - len(miss), len(miss))
+                        if miss:
+                            if cacheable:
+                                warm[miss] = False
+                            mq, mm = q[miss], masks[miss]
+                            padded = self.pad_miss_lane and len(miss) < n
+                            if padded:
+                                # repeat row 0: 1 compiled shape per cfg
+                                pad = n - len(miss)
+                                mq = np.concatenate(
+                                    [mq, np.repeat(mq[:1], pad, axis=0)])
+                                mm = np.concatenate(
+                                    [mm, np.repeat(mm[:1], pad, axis=0)])
+                            with trace.span("service.miss_execute",
+                                            misses=len(miss),
+                                            padded=padded):
+                                if doc_filter is None:
+                                    res = plan(jnp.asarray(mq),
+                                               jnp.asarray(mm))
+                                else:
+                                    res = plan(jnp.asarray(mq),
+                                               jnp.asarray(mm), doc_filter)
+                                ms = np.asarray(res.scores)[:len(miss)]
+                                # epoch-local -> global ids BEFORE caching,
+                                # so cached and fresh partials merge
+                                # identically (epoch offsets are stable:
+                                # compaction and re-epoching both preserve
+                                # every surviving doc's global id)
+                                mi = np.asarray(res.doc_ids)[:len(miss)] \
+                                    + np.int32(eoff)
+                            for j, i in enumerate(miss):
+                                rows[i] = (ms[j], mi[j])
+                                if cacheable:
+                                    self.cache.put(
+                                        (qfps[i], gen_fp, cfg_fp),
+                                        ms[j], mi[j])
+                    parts.append(RetrievalResult(
+                        jnp.asarray(np.stack([r[0] for r in rows])),
+                        jnp.asarray(np.stack([r[1] for r in rows]))))
+                with trace.span("service.merge", epoch=e,
+                                generations=len(parts)):
+                    epoch_parts.append(merge_partial_topk(parts, self.cfg.k))
+            with trace.span("service.merge", epochs=n_epochs, final=True):
+                merged = epoch_parts[0] if n_epochs == 1 else \
+                    merge_partial_topk_by_rank(epoch_parts, self.cfg.k)
+                jax.block_until_ready(merged)
         self.metrics.record_batch(n, int(warm.sum()), self.clock() - t0,
                                   n_filtered=0 if doc_filter is None else n)
         return merged

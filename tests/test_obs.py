@@ -1,0 +1,481 @@
+"""Observability contract (repro.obs — docs/OBSERVABILITY.md):
+
+* tracing disabled is a TRUE no-op: ``trace.span(...)`` returns the shared
+  ``NOOP_SPAN`` singleton (identity pinned — no allocation on the hot
+  path) and serving results are bit-exact with instrumentation compiled
+  in;
+* tracing enabled: still bit-exact (spans observe, never mutate), the
+  expected span vocabulary shows up, hierarchy/ring/drop semantics hold;
+* ``explain``'s reported top-k IS ``retrieve``'s (ids AND score bits)
+  across both candidate modes and both megakernels, masked and filtered,
+  and its funnel counts are consistent with the retrieval outputs;
+* ``explain_timeline``: per-generation contributions sum to k and the
+  merged top-k equals ``retrieve_timeline``;
+* the registry renders valid Prometheus text exposition — including from
+  a live RetrievalService — per scripts/check_metrics_exposition.py.
+"""
+import dataclasses
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import (EngineConfig, ShardedTimeline, build_index, engine,
+                        new_generation, retrieve_timeline)
+from repro.core.bitvector import Pred, compile_filter
+from repro.data.synthetic import make_corpus
+from repro.obs import trace
+from repro.obs.registry import MetricsRegistry
+from repro.serving import RetrievalService
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "scripts"))
+try:
+    from check_metrics_exposition import validate_exposition
+finally:
+    sys.path.pop(0)
+
+CFG = EngineConfig(nprobe=8, th=0.2, th_r=0.4, n_filter=128, n_docs=48, k=10)
+
+RETRIEVAL_CFGS = {
+    "ref-score_all": CFG,
+    "ref-compact": dataclasses.replace(CFG, candidate_mode="compact",
+                                       cand_cap=600),
+    "prefilter-megakernel": dataclasses.replace(
+        CFG, use_kernels=True, fused_late_interaction=False),
+    "pqinter-megakernel": dataclasses.replace(
+        CFG, use_kernels=True, fused_prefilter=False),
+    "fused-score_all": dataclasses.replace(CFG, use_kernels=True),
+    "fused-compact": dataclasses.replace(CFG, use_kernels=True,
+                                         candidate_mode="compact",
+                                         cand_cap=600),
+}
+
+
+@pytest.fixture(scope="module")
+def obs_corpus():
+    return make_corpus(5, n_docs=400, cap=24, min_len=8, n_queries=16,
+                       n_topics=32)
+
+
+@pytest.fixture(scope="module")
+def obs_preds(obs_corpus):
+    rng = np.random.default_rng(7)
+    n = obs_corpus.doc_embs.shape[0]
+    return {"lang_en": rng.random(n) < 0.7, "recent": rng.random(n) < 0.4}
+
+
+@pytest.fixture(scope="module")
+def obs_index(obs_corpus, obs_preds):
+    c = obs_corpus
+    return build_index(jax.random.PRNGKey(0), c.doc_embs, c.doc_lens,
+                       n_centroids=128, m=8, nbits=4, kmeans_iters=3,
+                       predicates=obs_preds)
+
+
+@pytest.fixture(scope="module")
+def obs_timeline(obs_corpus, obs_preds):
+    c = obs_corpus
+    idx0, m0 = build_index(
+        jax.random.PRNGKey(0), c.doc_embs[:200], c.doc_lens[:200],
+        n_centroids=128, m=8, nbits=4, kmeans_iters=3,
+        predicates={k: v[:200] for k, v in obs_preds.items()})
+    tl = ShardedTimeline.of((idx0, m0))
+    return tl.append(*new_generation(
+        idx0, m0, c.doc_embs[200:], c.doc_lens[200:],
+        predicates={k: v[200:] for k, v in obs_preds.items()}))
+
+
+# ---------------------------------------------------------------------------
+# Tracer: no-op contract, hierarchy, ring, export
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_is_noop_singleton():
+    """The overhead contract: with tracing disabled (the default), every
+    instrumented call site gets the SAME shared no-op span — no
+    allocation, no clock read. Identity, not just equality."""
+    assert trace.get_tracer() is trace.NOOP_TRACER
+    assert trace.span("anything", attr=1) is trace.NOOP_SPAN
+    assert trace.span("else") is trace.NOOP_SPAN
+    # the no-op span is inert through the full protocol
+    with trace.span("x") as sp:
+        assert sp is trace.NOOP_SPAN
+        assert sp.set(foo=1) is trace.NOOP_SPAN
+    assert trace.record("x", 0.1) is None
+
+
+def test_noop_span_propagates_exceptions():
+    with pytest.raises(RuntimeError, match="boom"):
+        with trace.span("x"):
+            raise RuntimeError("boom")
+
+
+def test_tracing_scope_installs_and_restores():
+    assert trace.get_tracer() is trace.NOOP_TRACER
+    with obs.tracing() as t:
+        assert trace.get_tracer() is t
+        assert t.enabled
+        with trace.span("inside"):
+            pass
+    assert trace.get_tracer() is trace.NOOP_TRACER
+    assert [s["name"] for s in t.finished()] == ["inside"]
+
+
+def test_span_hierarchy_ids():
+    with obs.tracing() as t:
+        with trace.span("root", a=1):
+            with trace.span("child"):
+                with trace.span("grandchild"):
+                    pass
+            trace.record("sibling", 0.005, b=2)
+        with trace.span("root2"):
+            pass
+    by_name = {s["name"]: s for s in t.finished()}
+    root, child, gc = (by_name[n] for n in ("root", "child", "grandchild"))
+    assert root["parent_id"] is None
+    assert root["trace_id"] == root["span_id"]
+    assert child["parent_id"] == root["span_id"]
+    assert gc["parent_id"] == child["span_id"]
+    assert gc["trace_id"] == root["trace_id"]
+    # record() parents under the innermost OPEN span at call time
+    sib = by_name["sibling"]
+    assert sib["parent_id"] == root["span_id"]
+    assert sib["attrs"] == {"b": 2} and sib["duration_s"] == 0.005
+    # a second root starts a new trace
+    assert by_name["root2"]["trace_id"] != root["trace_id"]
+    # children finish (emit) before parents
+    names = [s["name"] for s in t.finished()]
+    assert names.index("grandchild") < names.index("child") \
+        < names.index("root")
+    assert root["attrs"] == {"a": 1}
+
+
+def test_span_set_and_error_flag():
+    with obs.tracing() as t:
+        with trace.span("work", planned=3) as sp:
+            sp.set(done=2)
+        try:
+            with trace.span("fails"):
+                raise ValueError("x")
+        except ValueError:
+            pass
+    by_name = {s["name"]: s for s in t.finished()}
+    assert by_name["work"]["attrs"] == {"planned": 3, "done": 2}
+    assert by_name["fails"]["error"] is True
+    assert "error" not in by_name["work"]
+
+
+def test_span_durations_from_injected_clock():
+    now = [0.0]
+
+    def clk():
+        return now[0]
+
+    with obs.tracing(clock=clk) as t:
+        with trace.span("outer"):
+            now[0] += 0.5
+            with trace.span("inner"):
+                now[0] += 0.25
+    by_name = {s["name"]: s for s in t.finished()}
+    assert by_name["inner"]["duration_s"] == pytest.approx(0.25)
+    assert by_name["outer"]["duration_s"] == pytest.approx(0.75)
+    assert by_name["inner"]["start"] == pytest.approx(0.5)
+
+
+def test_ring_capacity_drops_oldest():
+    with obs.tracing(capacity=3) as t:
+        for i in range(5):
+            with trace.span(f"s{i}"):
+                pass
+    assert [s["name"] for s in t.finished()] == ["s2", "s3", "s4"]
+    assert t.dropped == 2
+
+
+def test_drain_and_export_jsonl(tmp_path):
+    with obs.tracing() as t:
+        with trace.span("a", arr=np.int32(3)):   # non-JSON attr -> str()
+            pass
+        with trace.span("b"):
+            pass
+    path = tmp_path / "spans.jsonl"
+    assert t.export_jsonl(path) == 2
+    lines = path.read_text().splitlines()
+    assert [json.loads(ln)["name"] for ln in lines] == ["a", "b"]
+    # export leaves the ring intact; drain empties it
+    assert len(t.finished()) == 2
+    assert [s["name"] for s in t.drain()] == ["a", "b"]
+    assert t.finished() == []
+
+
+def test_tracer_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        trace.Tracer(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Serving under tracing: bit-exact, expected span vocabulary
+# ---------------------------------------------------------------------------
+
+def test_service_traced_is_bit_exact_with_expected_spans(obs_corpus,
+                                                         obs_timeline):
+    """Tracing on changes no result bit, and the serving hot path emits
+    the documented span vocabulary (queue wait, flush, per-generation
+    lookup/miss, merge, swap)."""
+    c = obs_corpus
+    q = np.asarray(c.queries[:4])
+    ref_svc = RetrievalService(obs_timeline, CFG)
+    ref_cold = ref_svc.query(q)
+    ref_warm = ref_svc.query(q)
+
+    svc = RetrievalService(obs_timeline, CFG)
+    with obs.tracing() as t:
+        cold = svc.query(q)
+        warm = svc.query(q)
+        # drive the batcher path too, so queue_wait/flush spans appear
+        ticket = svc.submit(c.queries[4])
+        svc.flush()
+        # and a timeline swap (prepare + install spans)
+        svc.update_timeline(obs_timeline)
+    for got, want in ((cold, ref_cold), (warm, ref_warm)):
+        np.testing.assert_array_equal(np.asarray(got.doc_ids),
+                                      np.asarray(want.doc_ids))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(want.scores))
+    assert ticket.done
+    names = {s["name"] for s in t.finished()}
+    for expect in ("service.execute", "service.generation",
+                   "service.cache_lookup", "service.miss_execute",
+                   "service.merge", "batcher.queue_wait", "service.flush",
+                   "service.swap.prepare", "service.swap.install",
+                   "engine.retrieve.dispatch"):
+        assert expect in names, (expect, sorted(names))
+    # generation spans carry the hit/miss split as attrs
+    gen_spans = [s for s in t.finished() if s["name"] == "service.generation"]
+    assert all({"hits", "misses"} <= s["attrs"].keys() for s in gen_spans)
+    # warm pass: the immutable generation's lookups all hit
+    warm_gen = [s for s in gen_spans
+                if s["attrs"].get("generation") == 0][-2]
+    assert warm_gen["attrs"]["hits"] + warm_gen["attrs"]["misses"] == 4
+
+
+# ---------------------------------------------------------------------------
+# explain: funnel vs retrieve, all dispatch modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(RETRIEVAL_CFGS))
+def test_explain_matches_retrieve_and_funnel_consistent(obs_corpus,
+                                                        obs_index, name):
+    """The explained top-k IS retrieve's (ids AND score bits) in every
+    dispatch mode, and the funnel counts narrate a consistent pipeline."""
+    idx, meta = obs_index
+    # budgets are used as-is (like retrieve) — clamp to the corpus first,
+    # exactly as the per-generation serving path does
+    cfg = engine.adapt_config_to_corpus(RETRIEVAL_CFGS[name],
+                                        meta.n_docs, meta.cap)
+    q = obs_corpus.queries[0]
+    rpt = obs.explain.explain(idx, q, cfg)
+    ref = engine.retrieve(idx, jnp.asarray(q)[None], cfg)
+    np.testing.assert_array_equal(rpt.topk_ids, np.asarray(ref.doc_ids)[0])
+    np.testing.assert_array_equal(rpt.topk_scores,
+                                  np.asarray(ref.scores)[0])
+    # funnel consistency, top to bottom
+    n_docs = idx.codes.shape[0]
+    assert rpt.live_terms == cfg.n_q
+    assert 0 < rpt.centroids_probed <= min(rpt.probe_budget,
+                                           rpt.n_centroids)
+    assert 0 < rpt.candidates <= n_docs
+    assert rpt.n_filter_budget == cfg.n_filter
+    assert 0 < rpt.n_filter_survivors <= rpt.n_filter_budget
+    assert rpt.n_filter_survivors <= rpt.candidates
+    assert rpt.phase3_docs_scored == cfg.n_filter
+    assert rpt.phase4_docs_scored == cfg.n_docs
+    assert 0.0 <= rpt.scored_term_fraction <= 1.0
+    assert rpt.candidate_mode == cfg.candidate_mode
+    if cfg.candidate_mode == "compact":
+        assert rpt.candidate_cap == cfg.cand_cap
+    else:
+        assert rpt.candidate_cap is None
+    assert rpt.k == cfg.k and len(rpt.topk_ids) == cfg.k
+    assert set(rpt.phase_ms) == {"phase1", "phase2", "phase3", "phase4"}
+    assert all(v >= 0 for v in rpt.phase_ms.values())
+    # JSON-ready
+    json.dumps(rpt.to_dict())
+
+
+def test_explain_masked_query_matches_padded_retrieve(obs_corpus, obs_index):
+    """A masked (pruned/padded) query explains bit-identically to its
+    retrieval, and masking shrinks the probe budget."""
+    idx, _ = obs_index
+    q = obs_corpus.queries[1].copy()
+    mask = np.ones(CFG.n_q, bool)
+    mask[20:] = False
+    q[20:] = 0.0
+    rpt = obs.explain.explain(idx, q, CFG, q_mask=mask)
+    ref = engine.retrieve(idx, jnp.asarray(q)[None], CFG,
+                          jnp.asarray(mask)[None])
+    np.testing.assert_array_equal(rpt.topk_ids, np.asarray(ref.doc_ids)[0])
+    np.testing.assert_array_equal(rpt.topk_scores,
+                                  np.asarray(ref.scores)[0])
+    assert rpt.live_terms == 20
+    assert rpt.probe_budget == 20 * CFG.nprobe
+    assert rpt.centroids_probed <= rpt.probe_budget
+
+
+def test_explain_filtered_query(obs_corpus, obs_index, obs_preds):
+    """Filtered explain: selectivity equals the predicate plane's count,
+    candidates come only from passing docs, and the top-k equals filtered
+    retrieve bit for bit."""
+    idx, meta = obs_index
+    q = obs_corpus.queries[2]
+    plan = compile_filter(Pred("lang_en") & ~Pred("recent"),
+                          meta.pred_names)
+    rpt = obs.explain.explain(idx, q, CFG, doc_filter=plan)
+    ref = engine.retrieve(idx, jnp.asarray(q)[None], CFG, doc_filter=plan)
+    np.testing.assert_array_equal(rpt.topk_ids, np.asarray(ref.doc_ids)[0])
+    np.testing.assert_array_equal(rpt.topk_scores,
+                                  np.asarray(ref.scores)[0])
+    want_passing = int((obs_preds["lang_en"] & ~obs_preds["recent"]).sum())
+    assert rpt.docs_passing_filter == want_passing
+    assert rpt.filter_selectivity == pytest.approx(
+        want_passing / idx.codes.shape[0])
+    # the candidate bitmap is pre-ANDed with the filter
+    assert rpt.candidates <= want_passing
+    # unfiltered explain reports no selectivity
+    assert obs.explain.explain(idx, q, CFG).docs_passing_filter is None
+
+
+def test_explain_input_validation(obs_corpus, obs_index):
+    idx, _ = obs_index
+    with pytest.raises(ValueError, match="per-query"):
+        obs.explain.explain(idx, obs_corpus.queries[:2], CFG)
+    with pytest.raises(ValueError, match="expected"):
+        obs.explain.explain(idx, obs_corpus.queries[0][:5], CFG)
+    with pytest.raises(ValueError, match="compiled FilterPlan"):
+        obs.explain.explain(idx, obs_corpus.queries[0], CFG,
+                            doc_filter=Pred("lang_en"))
+
+
+def test_explain_timeline_contributions_sum_to_k(obs_corpus, obs_timeline):
+    """Timeline explain: the merged top-k equals retrieve_timeline and
+    per-generation contributions (global-id range attribution) sum to k."""
+    q = obs_corpus.queries[3]
+    rpt = obs.explain.explain_timeline(obs_timeline, q, CFG)
+    ref = retrieve_timeline(obs_timeline, jnp.asarray(q)[None], CFG)
+    np.testing.assert_array_equal(rpt.topk_ids, np.asarray(ref.doc_ids)[0])
+    np.testing.assert_array_equal(rpt.topk_scores,
+                                  np.asarray(ref.scores)[0])
+    assert rpt.n_generations == len(obs_timeline)
+    assert sum(g.contribution for g in rpt.generations) == CFG.k
+    offsets = [g.offset for g in rpt.generations]
+    assert offsets == sorted(offsets)
+    for g in rpt.generations:
+        # every final id attributed to g really lies in its range
+        in_range = ((rpt.topk_ids >= g.offset)
+                    & (rpt.topk_ids < g.offset + g.n_docs)).sum()
+        assert g.contribution == int(in_range)
+        assert g.funnel.k == CFG.k
+    json.dumps(rpt.to_dict())
+
+
+def test_explain_timeline_filtered_expr(obs_corpus, obs_timeline,
+                                        obs_preds):
+    """explain_timeline accepts a raw FilterExpr (compiled per epoch like
+    retrieve_timeline) and stays bit-exact + k-attributed."""
+    q = obs_corpus.queries[4]
+    expr = Pred("lang_en")
+    rpt = obs.explain.explain_timeline(obs_timeline, q, CFG,
+                                       doc_filter=expr)
+    ref = retrieve_timeline(obs_timeline, jnp.asarray(q)[None], CFG,
+                            doc_filter=expr)
+    np.testing.assert_array_equal(rpt.topk_ids, np.asarray(ref.doc_ids)[0])
+    assert sum(g.contribution for g in rpt.generations) == CFG.k
+    # every returned doc passes the filter (ids are global)
+    assert obs_preds["lang_en"][rpt.topk_ids].all()
+    # per-generation funnels carry the per-generation selectivity
+    for g in rpt.generations:
+        lo, hi = g.offset, g.offset + g.n_docs
+        assert g.funnel.docs_passing_filter == \
+            int(obs_preds["lang_en"][lo:hi].sum())
+
+
+# ---------------------------------------------------------------------------
+# Registry: instruments + Prometheus exposition format
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_semantics():
+    r = MetricsRegistry()
+    c = r.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(2.5)
+    assert c.value() == 3.5
+    with pytest.raises(ValueError, match="_total"):
+        r.counter("reqs", "bad name")
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+    # get-or-create: same name -> same instrument; kind clash -> error
+    assert r.counter("reqs_total", "requests") is c
+    with pytest.raises(ValueError):
+        r.gauge("reqs_total", "now a gauge?")
+
+
+def test_registry_gauge_labels_and_escaping():
+    r = MetricsRegistry()
+    g = r.gauge("temp", "temperature", label_names=("site",))
+    g.set(1.5, site='a"b\\c\nd')
+    text = r.exposition()
+    assert validate_exposition(text) == []
+    assert 'site="a\\"b\\\\c\\nd"' in text
+    assert g.value(site='a"b\\c\nd') == 1.5
+    with pytest.raises(ValueError):
+        g.set(1.0)                       # missing the declared label
+
+
+def test_registry_histogram_buckets_cumulative():
+    r = MetricsRegistry()
+    h = r.histogram("sizes", "batch sizes", buckets=(1, 4, 16))
+    for v in (1, 3, 5, 20):
+        h.observe(v)
+    text = r.exposition()
+    assert validate_exposition(text) == []
+    assert 'sizes_bucket{le="1"} 1' in text
+    assert 'sizes_bucket{le="4"} 2' in text
+    assert 'sizes_bucket{le="16"} 3' in text
+    assert 'sizes_bucket{le="+Inf"} 4' in text
+    assert "sizes_count 4" in text
+
+
+def test_registry_summary_from_latency_stats():
+    from repro.serving import LatencyStats
+    r = MetricsRegistry()
+    ls = LatencyStats(window=64)
+    for v in range(1, 11):
+        ls.record(v / 1000)
+    r.summary("lat_seconds", "latency", stats=ls)
+    text = r.exposition()
+    assert validate_exposition(text) == []
+    assert 'lat_seconds{quantile="0.5"}' in text
+    assert "lat_seconds_count 10" in text
+    snap = r.snapshot()
+    assert snap["lat_seconds"]["count"] == 10
+
+
+def test_live_service_exposition_passes_lint(obs_corpus, obs_timeline):
+    """The acceptance gate: a live RetrievalService's exposition passes
+    the same validator CI runs."""
+    svc = RetrievalService(obs_timeline, CFG)
+    q = np.asarray(obs_corpus.queries[:4])
+    svc.query(q)
+    svc.query(q)
+    text = svc.exposition()
+    errors = validate_exposition(text)
+    assert errors == [], "\n".join(errors)
+    assert "emvb_queries_total 8" in text
+    assert "emvb_cache_hits_total" in text
+    assert "emvb_timeline_docs" in text
+    assert 'emvb_generation_cache_hit_ratio{generation=' in text
+    # JSON snapshot and exposition agree on the headline counter
+    assert svc.stats()["queries"] == 8

@@ -409,3 +409,105 @@ def test_stats_snapshot_shape(serve_corpus, base_timeline):
     assert snap["timeline"]["total_bytes"] > 0
     assert snap["latency"]["count"] == 1
     assert snap["queries"] == 4
+
+
+def test_latency_stats_ring_wrap_window():
+    """Once count > window the quantiles and max see exactly the most
+    recent `window` samples; count/mean stay cumulative over all."""
+    ls = LatencyStats(window=8)
+    for v in range(1, 21):                                    # 1..20 ms
+        ls.record(v / 1e3)
+    snap = ls.snapshot()
+    assert snap["count"] == 20
+    # window holds 13..20 ms only — the early cheap samples aged out
+    assert snap["max_ms"] == pytest.approx(20.0)
+    assert snap["p50_ms"] == pytest.approx(16.5)
+    assert snap["p95_ms"] == pytest.approx(np.percentile(
+        np.arange(13, 21), 95))
+    assert ls.max() == pytest.approx(0.020)
+    # mean is all-history: (1+..+20)/20 = 10.5 ms
+    assert snap["mean_ms"] == pytest.approx(10.5)
+    assert set(snap) == {"count", "mean_ms", "p50_ms", "p95_ms", "p99_ms",
+                         "max_ms"}
+
+
+def test_service_metrics_mixed_filtered_accounting():
+    """n_filtered need not be 0 or n_queries: direct callers may report a
+    mixed batch and the filtered/unfiltered split must still add up."""
+    m = ServiceMetrics()
+    m.record_batch(8, 8, 0.001, n_filtered=3)
+    snap = m.snapshot()
+    assert snap["filtered_queries"] == 3
+    assert snap["unfiltered_queries"] == 5
+    assert m.filtered_queries + m.unfiltered_queries == m.queries
+
+
+def test_service_metrics_rejects_unknown_maintenance_kind():
+    m = ServiceMetrics()
+    m.record_maintenance("merge")
+    m.record_maintenance("reepoch")
+    with pytest.raises(ValueError, match="unknown maintenance action kind"):
+        m.record_maintenance("compact")
+    assert m.merges == 1 and m.reepochs == 1
+
+
+def test_service_metrics_warm_reservoir_routing():
+    """Only fully-warm batches land in the warm latency reservoir; any
+    miss makes the batch's latency cold-path by accounting."""
+    m = ServiceMetrics()
+    m.record_batch(4, 4, 0.001)                               # fully warm
+    m.record_batch(4, 3, 0.010)                               # one miss
+    m.record_batch(4, 0, 0.020)                               # fully cold
+    assert m.warm_latency.count == 1
+    assert m.cold_latency.count == 2
+    assert m.batch_latency.count == 3
+    assert m.warm_latency.max() == pytest.approx(0.001)
+    assert m.cold_latency.max() == pytest.approx(0.020)
+
+
+def test_service_metrics_registry_equivalence():
+    """The registry-backed snapshot keeps the historical dict shape: every
+    counter field equals its property read, and the new batcher /
+    generations sections ride along."""
+    m = ServiceMetrics()
+    m.record_batch(8, 8, 0.001)
+    m.record_batch(8, 4, 0.010, n_filtered=8)
+    m.record_swap()
+    m.record_swap(deferred=True)
+    m.record_maintenance("merge")
+    m.record_deadline_misses(2)
+    m.set_queue_depth(3)
+    m.record_generation_lookups("abcdef0123456789", hits=6, misses=2)
+    snap = m.snapshot()
+    assert snap["batches"] == m.batches == 2
+    assert snap["queries"] == m.queries == 16
+    assert snap["warm_queries"] == m.warm_queries == 12
+    assert snap["cold_queries"] == m.cold_queries == 4
+    assert snap["warm_fraction"] == 0.75
+    assert snap["filtered_queries"] == m.filtered_queries == 8
+    assert snap["maintenance"] == {"swaps": 2, "deferred_swaps": 1,
+                                   "merges": 1, "reepochs": 0}
+    assert snap["batcher"] == {"queue_depth": 3, "deadline_misses": 2}
+    assert snap["generations"] == {
+        "abcdef012345": {"hits": 6, "misses": 2, "hit_ratio": 0.75}}
+    assert snap["latency"]["count"] == 2
+    # counters are registry instruments: mutation by assignment is gone
+    with pytest.raises(AttributeError):
+        m.queries = 99
+
+
+def test_snapshot_rejects_partial_footprint(base_timeline):
+    """A timeline_footprint dict missing required byte-accounting keys is
+    a producer bug — KeyError naming the gaps, not silent omission."""
+    m = ServiceMetrics()
+    with pytest.raises(KeyError, match="predicate_bytes"):
+        m.snapshot(timeline_footprint={"n_generations": 1, "n_docs": 10})
+    full = timeline_footprint(base_timeline)
+    snap = m.snapshot(timeline_footprint=full)
+    assert snap["timeline"]["n_docs"] == base_timeline.n_docs
+    # optional keys pass through when the producer supplies them...
+    with_opt = dict(full, n_epochs=2)
+    assert m.snapshot(timeline_footprint=with_opt)["timeline"][
+        "n_epochs"] == 2
+    # ...and are silently absent otherwise
+    assert "n_epochs" not in snap["timeline"] or "n_epochs" in full
